@@ -1,0 +1,52 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import math
+import time
+
+from repro.core.alm import ARCHS
+from repro.core.circuits import kratos_suite, koios_suite, vtr_suite
+from repro.core.packing import pack
+from repro.core.timing import analyze
+
+SEEDS = (0, 1, 2)  # the paper averages three placement seeds
+
+
+def geomean(xs):
+    xs = [max(x, 1e-12) for x in xs]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def suites(algo: str = "wallace"):
+    return {
+        "kratos": kratos_suite(algo=algo),
+        "koios": koios_suite(algo=algo),
+        "vtr": vtr_suite(),
+    }
+
+
+def pack_metrics(net, arch_name: str, seeds=SEEDS) -> dict:
+    """Average analyze() metrics over placement seeds."""
+    arch = ARCHS[arch_name]
+    acc: dict[str, float] = {}
+    for s in seeds:
+        r = analyze(pack(net, arch, seed=s))
+        for k in ("alms", "area_mwta", "critical_path_ps", "adp",
+                  "concurrent_luts", "lbs"):
+            acc[k] = acc.get(k, 0.0) + r[k] / len(seeds)
+    acc["adders"] = net.n_adders
+    acc["luts"] = net.n_luts
+    return acc
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.perf_counter() - self.t0) * 1e6
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.0f},{derived}")

@@ -1,0 +1,53 @@
+"""Fig. 5 — CAD improvement validation.
+
+Baseline-VTR synthesis vs our improved Cascade / Wallace / Dadda (and PW),
+packed on the baseline Stratix-10-like architecture.  Reports geomean
+adders / ALMs / critical path / ADP over the Kratos suite, normalized to the
+stock-VTR synthesis.  Paper: improved flow is worth ~37 % ADP; Wallace is the
+best overall.
+"""
+from __future__ import annotations
+
+from repro.core.circuits import kratos_suite
+
+from .common import Timer, emit, geomean, pack_metrics
+
+ALGOS = ("vtr_baseline", "cascade", "binary", "wallace", "dadda", "pw")
+
+
+def run(scale: float = 1.0, verbose: bool = True):
+    per_algo: dict[str, dict[str, float]] = {}
+    base_metrics: list[dict] | None = None
+    for algo in ALGOS:
+        nets = kratos_suite(algo=algo, scale=scale)
+        ms = [pack_metrics(net, "baseline") for net in nets]
+        if algo == "vtr_baseline":
+            base_metrics = ms
+        norm = {
+            "adders": geomean([m["adders"] / b["adders"]
+                               for m, b in zip(ms, base_metrics)]),
+            "alms": geomean([m["alms"] / b["alms"]
+                             for m, b in zip(ms, base_metrics)]),
+            "cpd": geomean([m["critical_path_ps"] / b["critical_path_ps"]
+                            for m, b in zip(ms, base_metrics)]),
+            "adp": geomean([m["adp"] / b["adp"]
+                            for m, b in zip(ms, base_metrics)]),
+        }
+        per_algo[algo] = norm
+        if verbose:
+            emit(f"fig5/{algo}", 0,
+                 f"adders={norm['adders']:.3f};alms={norm['alms']:.3f};"
+                 f"cpd={norm['cpd']:.3f};adp={norm['adp']:.3f}")
+    return per_algo
+
+
+def main():
+    with Timer() as t:
+        res = run()
+    wall_adp = res["wallace"]["adp"]
+    emit("fig5_cad", t.us, f"wallace_adp_vs_stock_vtr={wall_adp:.3f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Fig. 6 — DD5 vs baseline architecture across the three suites.
+
+Paper: ALM area −21.6 % (Kratos), −9.3 % (Koios), −8.2 % (VTR); critical
+path flat on average; ADP −9.7 % over all circuits.
+"""
+from __future__ import annotations
+
+from .common import Timer, emit, geomean, pack_metrics, suites
+
+
+def run(verbose: bool = True):
+    out: dict[str, dict] = {}
+    all_adp_ratios = []
+    all_area_ratios = []
+    all_cpd_ratios = []
+    for suite_name, nets in suites("wallace").items():
+        area_r, cpd_r, adp_r, conc = [], [], [], []
+        for net in nets:
+            b = pack_metrics(net, "baseline")
+            d = pack_metrics(net, "dd5")
+            area_r.append(d["area_mwta"] / b["area_mwta"])
+            cpd_r.append(d["critical_path_ps"] / b["critical_path_ps"])
+            adp_r.append(d["adp"] / b["adp"])
+            conc.append(d["concurrent_luts"])
+            if verbose:
+                emit(f"fig6/{suite_name}/{net.name}", 0,
+                     f"area={area_r[-1]:.3f};cpd={cpd_r[-1]:.3f};"
+                     f"adp={adp_r[-1]:.3f};conc={conc[-1]:.0f}")
+        out[suite_name] = {
+            "area": geomean(area_r),
+            "cpd": geomean(cpd_r),
+            "adp": geomean(adp_r),
+        }
+        all_adp_ratios.extend(adp_r)
+        all_area_ratios.extend(area_r)
+        all_cpd_ratios.extend(cpd_r)
+    out["overall"] = {
+        "area": geomean(all_area_ratios),
+        "cpd": geomean(all_cpd_ratios),
+        "adp": geomean(all_adp_ratios),
+    }
+    return out
+
+
+def main():
+    with Timer() as t:
+        res = run()
+    d = ";".join(f"{k}_area={v['area']:.3f}" for k, v in res.items())
+    emit("fig6_dd5", t.us, d + f";overall_adp={res['overall']['adp']:.3f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

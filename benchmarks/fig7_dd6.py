@@ -1,0 +1,49 @@
+"""Fig. 7 — DD5 vs DD6.
+
+Paper: DD6 gives minor extra area savings on Kratos only, costs ~8 % Fmax,
+and loses on ADP — the added 6-LUT concurrency is not worth it.
+"""
+from __future__ import annotations
+
+from .common import Timer, emit, geomean, pack_metrics, suites
+
+
+def run(verbose: bool = True):
+    out: dict[str, dict] = {}
+    for suite_name, nets in suites("wallace").items():
+        rows = {"dd5": [], "dd6": []}
+        for net in nets:
+            b = pack_metrics(net, "baseline")
+            for arch in ("dd5", "dd6"):
+                m = pack_metrics(net, arch)
+                rows[arch].append({
+                    "area": m["area_mwta"] / b["area_mwta"],
+                    "cpd": m["critical_path_ps"] / b["critical_path_ps"],
+                    "adp": m["adp"] / b["adp"],
+                })
+        out[suite_name] = {
+            arch: {
+                k: geomean([r[k] for r in rows[arch]])
+                for k in ("area", "cpd", "adp")
+            }
+            for arch in ("dd5", "dd6")
+        }
+        if verbose:
+            for arch in ("dd5", "dd6"):
+                v = out[suite_name][arch]
+                emit(f"fig7/{suite_name}/{arch}", 0,
+                     f"area={v['area']:.3f};cpd={v['cpd']:.3f};adp={v['adp']:.3f}")
+    return out
+
+
+def main():
+    with Timer() as t:
+        res = run()
+    k = res["kratos"]
+    emit("fig7_dd6", t.us,
+         f"kratos_dd5_adp={k['dd5']['adp']:.3f};kratos_dd6_adp={k['dd6']['adp']:.3f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Sections:
+  fig5  — CAD-flow validation (stock VTR vs improved synthesis)
+  fig6  — DD5 vs baseline across suites (headline result)
+  fig7  — DD5 vs DD6
+  fig8  — routing-demand histogram
+  fig9  — packing stress test
+  table4 — end-to-end SHA stress test
+  kernels — Pallas kernel microbenchmarks (interpret mode on CPU)
+  roofline — reads dry-run artifacts if present (see launch/dryrun.py)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import fig5_cad, fig6_dd5, fig7_dd6, fig8_congestion, fig9_stress, table4_e2e
+
+    fig5_cad.main()
+    fig6_dd5.main()
+    fig7_dd6.main()
+    fig8_congestion.main()
+    fig9_stress.main()
+    table4_e2e.main()
+    from . import beyond_paper
+
+    beyond_paper.main()
+    try:
+        from . import kernels as kbench
+
+        kbench.main()
+    except Exception as e:  # kernels need jax; report rather than die
+        print(f"kernels,,skipped({type(e).__name__}: {e})", file=sys.stderr)
+    try:
+        from . import roofline as rbench
+
+        rbench.main()
+    except Exception as e:
+        print(f"roofline,,skipped({type(e).__name__}: {e})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

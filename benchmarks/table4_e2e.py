@@ -1,0 +1,56 @@
+"""Table IV — end-to-end stress test.
+
+Fix the FPGA size needed for a Kratos base circuit (+ margin), then count how
+many extra SHA instances fit.  Paper: +80 % / +66.7 % / +18.2 % instances for
+conv1d / conv2d / gemmt, with slightly *better* critical paths on DD5.
+"""
+from __future__ import annotations
+
+from repro.core.alm import BASELINE, DD5
+from repro.core.circuits import (kratos_conv1d, kratos_conv2d, kratos_gemm,
+                                 sha_like)
+from repro.core.stress import run_e2e_stress
+
+from .common import Timer, emit
+
+BASES = {
+    "conv1d-mini": lambda: kratos_conv1d(in_ch=2, out_ch=4, width=6,
+                                         sparsity=0.5),
+    "conv2d-mini": lambda: kratos_conv2d(in_ch=2, out_ch=2, width=6,
+                                         sparsity=0.5),
+    "gemmt-mini": lambda: kratos_gemm("gemmt-mini", m=8, n=8, width=6,
+                                      sparsity=0.5),
+}
+
+
+def run(verbose: bool = True, max_instances: int = 48):
+    sha = sha_like(rounds=1)
+    out = {}
+    for name, mk in BASES.items():
+        res = run_e2e_stress(mk(), sha, [BASELINE, DD5],
+                             max_instances=max_instances)
+        out[name] = res
+        if verbose:
+            b, d = res["baseline"], res["dd5"]
+            gain = (d["instances"] - b["instances"]) / max(1, b["instances"])
+            emit(f"table4/{name}", 0,
+                 f"base_sha={b['instances']};dd5_sha={d['instances']};"
+                 f"gain={gain*100:.1f}%;conc={d['concurrent']};"
+                 f"cpd_delta={100*(d['cpd_ps']/b['cpd_ps']-1):.1f}%")
+    return out
+
+
+def main():
+    with Timer() as t:
+        res = run()
+    gains = []
+    for name, r in res.items():
+        b, d = r["baseline"]["instances"], r["dd5"]["instances"]
+        gains.append((d - b) / max(1, b) * 100)
+    emit("table4_e2e", t.us,
+         ";".join(f"{n}=+{g:.0f}%" for n, g in zip(res, gains)))
+    return res
+
+
+if __name__ == "__main__":
+    main()

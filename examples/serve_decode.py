@@ -1,0 +1,17 @@
+"""Serve a small model with batched requests: prefill + greedy decode on a
+KV cache, across three architecture families (dense GQA, SSM, hybrid).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch import serve as serve_launch
+
+
+def main():
+    for arch in ("qwen1.5-0.5b", "mamba2-2.7b", "hymba-1.5b"):
+        print(f"=== {arch} (smoke config) ===")
+        serve_launch.main(["--arch", arch, "--smoke", "--batch", "4",
+                           "--prompt-len", "24", "--max-new", "12"])
+
+
+if __name__ == "__main__":
+    main()

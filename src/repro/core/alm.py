@@ -1,0 +1,114 @@
+"""ALM / logic-block architecture models: baseline Stratix-10-like, DD5, DD6.
+
+Area numbers are the paper's Table I (MWTA = minimum-width transistor areas),
+path delays are Table II.  Delays not published (plain LUT logic delay, carry
+hop, routing) are free parameters of the model, chosen to land the baseline
+suites near the paper's Table III Fmax range and held **identical across
+architectures** so relative comparisons are fair.  DD6's extra output-mux
+delay models the ~8 % frequency penalty reported in §V-B.
+
+An ALM is modeled as two *halves*; each half owns one 1-bit full adder and
+two 4-LUTs (combinable into one 5-LUT).  Modes per half:
+
+* ``R`` (related, all archs) — FA operands arrive through the LUT path; the
+  half's LUTs may implement fan-out-1 logic feeding the adder (absorption) or
+  act as pass-through wires.  The half's LUT output pins are unusable.
+* ``C`` (concurrent, DD only) — FA operands arrive through the Z pins
+  (AddMux); the half's LUTs host one *unrelated* <=5-input LUT whose output
+  uses the spare output pin (O2/O4).
+* logic half — no FA in use; hosts one <=5-input LUT (both archs; a plain
+  logic ALM is two such halves, or a single 6-LUT across both halves).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class ArchParams:
+    name: str
+    concurrent: bool              # DD5 / DD6: unrelated LUTs in arith ALMs
+    concurrent_6lut: bool         # DD6 only
+    # per-ALM *tile* area (ALM + its share of crossbars/routing).  Table I
+    # gives ALM-only areas (2167.3 -> 2366.6 MWTA) and calls the increase
+    # +3.72 % "tile area"; solving (2366.6-2167.3+77.91)/x = 3.72 % puts the
+    # baseline tile at ~7452 MWTA/ALM, which we adopt.
+    alm_area_mwta: float
+    # cluster geometry / budgets
+    alms_per_lb: int = 10
+    lb_inputs: int = 60
+    ext_pin_util: float = 0.9
+    direct_link_inputs: int = 40  # LB-to-LB direct wires usable as extra inputs
+    lb_outputs: int = 40
+    # The AddMux crossbar is 17 % populated: each of the 40 Z pins is a mux
+    # with fan-in 10 drawn from the LB's 60 inputs (10/60 crosspoints).  With
+    # spread subsets, bipartite matching succeeds until demand nears the pin
+    # count, so the budget is one distinct signal per Z pin; Z sources also
+    # debit the ordinary LB input budget.
+    z_sources: int = 40
+    z_local_free: bool = True     # direct-link taps carry neighbouring outputs
+    # Table II path delays (ps)
+    t_lbin_to_ah: float = 72.61
+    t_lbin_to_z: float = 77.05
+    t_ah_to_adder: float = 133.4
+    t_z_to_adder: float = 68.77
+    # model free parameters (ps) — identical across archs
+    t_lut4: float = 150.0
+    t_lut5: float = 165.0
+    t_lut6: float = 180.0
+    t_carry: float = 15.0
+    t_sum_out: float = 90.0
+    t_alm_out: float = 60.0
+    t_out_mux_extra: float = 0.0  # DD6 output-mux penalty
+    t_route_global: float = 620.0
+    t_route_local: float = 160.0
+
+    @property
+    def input_budget(self) -> int:
+        return int(self.lb_inputs * self.ext_pin_util) + int(
+            self.direct_link_inputs * self.ext_pin_util
+        )
+
+    @property
+    def output_budget(self) -> int:
+        return self.lb_outputs
+
+    def lut_delay(self, k: int) -> float:
+        if k <= 4:
+            return self.t_lut4
+        if k == 5:
+            return self.t_lut5
+        return self.t_lut6
+
+
+_BASE_TILE = 7452.0
+
+BASELINE = ArchParams(
+    name="baseline",
+    concurrent=False,
+    concurrent_6lut=False,
+    alm_area_mwta=_BASE_TILE,
+)
+
+DD5 = ArchParams(
+    name="dd5",
+    concurrent=True,
+    concurrent_6lut=False,
+    alm_area_mwta=_BASE_TILE * 1.0372,  # +3.72 % tile area (Table I)
+    t_ah_to_adder=202.2,                # +51.6 % vs baseline (Table II)
+)
+
+DD6 = ArchParams(
+    name="dd6",
+    concurrent=True,
+    concurrent_6lut=True,
+    alm_area_mwta=_BASE_TILE * 1.043,   # extra output muxing (estimated)
+    t_ah_to_adder=202.2,
+    t_out_mux_extra=60.0,               # drives the ~8 % Fmax penalty of §V-B
+)
+
+ARCHS = {a.name: a for a in (BASELINE, DD5, DD6)}
+
+
+def get_arch(name: str) -> ArchParams:
+    return ARCHS[name]

@@ -1,0 +1,153 @@
+"""Bit-parallel netlist evaluation in JAX (the simulator's compute layer).
+
+The netlist is levelized once (compile time); evaluation then runs one
+vectorized `lut_eval` kernel call per LUT level and a `lax.scan` ripple per
+chain group, all over uint32 test-vector lanes.  This is the performance
+path for large-circuit functional validation — the Python `eval_netlist`
+oracle in `netlist.py` stays the ground truth in tests.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .netlist import CONST0, CONST1, Netlist
+
+
+@dataclass
+class EvalPlan:
+    n_signals: int
+    # per level: (lut_ids, input_sig array [M, K], tt array [M], out_sigs [M])
+    lut_levels: list[tuple]
+    # per level: list of chain descriptors (a [L], b [L], cin, sums [L], cout)
+    chain_levels: list[list[tuple]]
+
+
+def plan_netlist(net: Netlist) -> EvalPlan:
+    order = net.topo_order()
+    level: dict[tuple, int] = {}
+    sig_level: dict[int, int] = {s: 0 for s in net.pis}
+    sig_level[CONST0] = 0
+    sig_level[CONST1] = 0
+    for nd in order:
+        lv = 0
+        for s in net.node_inputs(nd):
+            lv = max(lv, sig_level.get(s, 0))
+        lv += 1
+        level[nd] = lv
+        for s in net.node_outputs(nd):
+            sig_level[s] = lv
+
+    by_level_luts: dict[int, list[int]] = defaultdict(list)
+    by_level_chains: dict[int, list[int]] = defaultdict(list)
+    for nd, lv in level.items():
+        if nd[0] == "lut":
+            by_level_luts[lv].append(nd[1])
+        else:
+            by_level_chains[lv].append(nd[1])
+
+    lut_levels = []
+    for lv in sorted(by_level_luts):
+        ids = by_level_luts[lv]
+        kmax = max(len(net.lut_inputs[i]) for i in ids)
+        kmax = max(kmax, 1)
+        M = len(ids)
+        ins = np.zeros((M, kmax), dtype=np.int64)
+        tts = np.zeros(M, dtype=np.uint64)
+        outs = np.zeros(M, dtype=np.int64)
+        for r, i in enumerate(ids):
+            sig_ins = net.lut_inputs[i]
+            k = len(sig_ins)
+            ins[r, :k] = sig_ins
+            # pad unused pins with CONST0 and replicate the tt accordingly
+            tt = net.lut_tt[i]
+            reps = 1 << (kmax - k)
+            full = 0
+            for rr in range(reps):
+                full |= tt << (rr * (1 << k))
+            tts[r] = full & ((1 << min(64, 1 << kmax)) - 1)
+            outs[r] = net.lut_out[i]
+        lut_levels.append((ids, ins, tts.astype(np.uint32) if kmax <= 5
+                           else tts, outs))
+    chain_levels = [
+        [(np.array(net.chains[c].a), np.array(net.chains[c].b),
+          net.chains[c].cin, np.array(net.chains[c].sums),
+          net.chains[c].cout) for c in by_level_chains[lv]]
+        for lv in sorted(by_level_chains)
+    ]
+    # interleave by level order
+    merged_l: list[tuple] = []
+    merged_c: list[list[tuple]] = []
+    lvs = sorted(set(by_level_luts) | set(by_level_chains))
+    li = ci = 0
+    plan_l, plan_c = [], []
+    for lv in lvs:
+        if lv in by_level_luts:
+            plan_l.append(lut_levels[li])
+            li += 1
+        else:
+            plan_l.append(None)
+        if lv in by_level_chains:
+            plan_c.append(chain_levels[ci])
+            ci += 1
+        else:
+            plan_c.append(None)
+    return EvalPlan(net.n_signals, plan_l, plan_c)
+
+
+def eval_netlist_jax(net: Netlist, pi_lanes: dict[int, np.ndarray],
+                     n_lane_words: int, use_pallas: bool = True) -> jax.Array:
+    """Evaluate; returns ``vals[n_signals, n_lane_words]`` uint32.
+
+    ``pi_lanes[signal]`` is a uint32 vector of packed test vectors.
+    """
+    from repro.kernels import ops
+
+    plan = plan_netlist(net)
+    vals = jnp.zeros((plan.n_signals, n_lane_words), dtype=jnp.uint32)
+    vals = vals.at[CONST1].set(jnp.uint32(0xFFFFFFFF))
+    for s, v in pi_lanes.items():
+        vals = vals.at[s].set(jnp.asarray(v, dtype=jnp.uint32))
+
+    for lut_lv, chain_lv in zip(plan.lut_levels, plan.chain_levels):
+        if lut_lv is not None:
+            ids, ins, tts, outs = lut_lv
+            gathered = vals[jnp.asarray(ins)]          # [M, K, N]
+            if ins.shape[1] <= 5:
+                out = ops.lut_eval(gathered, jnp.asarray(tts),
+                                   use_pallas=use_pallas)
+            else:
+                # 6-input LUTs: Shannon-decompose on pin 5 into two 5-LUT
+                # evaluations (keeps truth tables in uint32)
+                tt64 = tts.astype(np.uint64)
+                tt_lo = jnp.asarray((tt64 & np.uint64(0xFFFFFFFF))
+                                    .astype(np.uint32))
+                tt_hi = jnp.asarray((tt64 >> np.uint64(32)).astype(np.uint32))
+                g5 = gathered[:, :5, :]
+                sel = gathered[:, 5, :]
+                lo = ops.lut_eval(g5, tt_lo, use_pallas=use_pallas)
+                hi = ops.lut_eval(g5, tt_hi, use_pallas=use_pallas)
+                out = (sel & hi) | (~sel & lo)
+            vals = vals.at[jnp.asarray(outs)].set(out)
+        if chain_lv is not None:
+            for a, b, cin, sums, cout in chain_lv:
+                av = vals[jnp.asarray(a)]
+                bv = vals[jnp.asarray(b)]
+                c0 = vals[cin]
+
+                def step(c, ab):
+                    aa, bb = ab
+                    s = aa ^ bb ^ c
+                    cy = (aa & bb) | (c & (aa ^ bb))
+                    return cy, s
+
+                clast, ss = jax.lax.scan(step, c0, (av, bv))
+                vals = vals.at[jnp.asarray(sums)].set(ss)
+                if cout is not None:
+                    vals = vals.at[cout].set(clast)
+    return vals

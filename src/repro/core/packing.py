@@ -1,0 +1,777 @@
+"""Packing: netlist -> ALMs -> logic blocks, for baseline / DD5 / DD6.
+
+A deliberately VPR-like greedy flow, held identical across architectures so
+the A/B comparison isolates the architectural change (the paper runs VTR's
+timing-driven packer; we model its resource behaviour, not its annealing):
+
+1. **Absorption pre-pass** — fan-out-1, <=4-input LUTs driving a chain
+   operand are absorbed into that FA's input LUTs (all architectures; this is
+   the classical "LUT simplifies logic before addition" usage).
+2. **Chain slotting** — a carry chain of L FA bits occupies ceil(L/2)
+   consecutive ALM halves-pairs; chains may span LBs (carry links cross LABs).
+3. **LUT pairing** — remaining LUTs are paired into ALM candidates
+   (two <=4-LUTs with <=8 distinct inputs, two 5-LUTs sharing >=2 inputs, or a
+   single 6-LUT).
+4. **Greedy connectivity clustering** into LBs under input/output budgets.
+5. **Concurrent co-packing (DD only)** — LUT pairs / singles are placed into
+   free or Z-convertible halves of arithmetic ALMs in the same LB before a
+   new logic ALM is opened; FA operands of a converted half move to the Z
+   pins, debiting the LB's AddMux-crossbar budget (``z_sources`` distinct
+   LB-external signals; in-LB producers ride the direct-link taps for free
+   when ``z_local_free``).
+
+The baseline architecture rejects step 5 structurally — that is the paper's
+entire premise.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+from .alm import ArchParams
+from .netlist import CONST0, CONST1, Netlist
+
+#: diagnostic counters from the most recent :func:`pack` call
+LAST_PACK_DEBUG: dict[str, int] = {}
+
+
+@dataclass
+class Half:
+    """One ALM half: 1 FA bit + two 4-LUTs (one 5-LUT equivalent)."""
+
+    fa: tuple[int, int] | None = None      # (chain_idx, bit_idx) or None
+    fa_feed: str = "none"                  # "lut" (A-H route) | "z" | "none"
+    absorbed: list[int] = field(default_factory=list)  # lut indices feeding FA
+    hosted_lut: int | None = None          # unrelated LUT index (mode C/logic)
+
+
+@dataclass
+class ALM:
+    halves: tuple[Half, Half]
+    lut6: int | None = None                # a hosted 6-LUT spans both halves
+    is_arith: bool = False
+
+    def input_signals(self, net: Netlist) -> tuple[set[int], set[int]]:
+        """Returns (ah_signals, z_signals) consumed by this ALM."""
+        ah: set[int] = set()
+        z: set[int] = set()
+        for h in self.halves:
+            if h.fa is not None:
+                ci, bi = h.fa
+                ch = net.chains[ci]
+                ops = [ch.a[bi], ch.b[bi]]
+                if h.fa_feed == "z":
+                    z.update(s for s in ops if s > CONST1)
+                else:
+                    if h.absorbed:
+                        for li in h.absorbed:
+                            ah.update(s for s in net.lut_inputs[li] if s > CONST1)
+                        absorbed_outs = {net.lut_out[li] for li in h.absorbed}
+                        ah.update(s for s in ops
+                                  if s > CONST1 and s not in absorbed_outs)
+                    else:
+                        ah.update(s for s in ops if s > CONST1)
+            if h.hosted_lut is not None:
+                ah.update(s for s in net.lut_inputs[h.hosted_lut] if s > CONST1)
+        if self.lut6 is not None:
+            ah.update(s for s in net.lut_inputs[self.lut6] if s > CONST1)
+        return ah, z
+
+    def output_signals(self, net: Netlist) -> set[int]:
+        outs: set[int] = set()
+        for h in self.halves:
+            if h.fa is not None:
+                ci, bi = h.fa
+                ch = net.chains[ci]
+                outs.add(ch.sums[bi])
+                if ch.cout is not None and bi == len(ch.sums) - 1:
+                    outs.add(ch.cout)
+            if h.hosted_lut is not None:
+                outs.add(net.lut_out[h.hosted_lut])
+        if self.lut6 is not None:
+            outs.add(net.lut_out[self.lut6])
+        return outs
+
+
+@dataclass
+class LB:
+    alms: list[int] = field(default_factory=list)  # indices into packed.alms
+
+
+@dataclass
+class PackedCircuit:
+    net: Netlist
+    arch: ArchParams
+    alms: list[ALM]
+    lbs: list[LB]
+    lut_site: dict[int, int]       # lut idx -> alm idx (hosted/absorbed)
+    chain_site: dict[tuple[int, int], int]  # (chain, bit) -> alm idx
+    alm_lb: list[int]              # alm idx -> lb idx
+    concurrent_luts: int           # unrelated LUTs co-packed with active FAs
+
+    # -- stats -------------------------------------------------------------
+    @property
+    def n_alms(self) -> int:
+        return len(self.alms)
+
+    @property
+    def n_lbs(self) -> int:
+        return len(self.lbs)
+
+    @property
+    def total_area(self) -> float:
+        return self.n_alms * self.arch.alm_area_mwta
+
+    def produced_in_lb(self, lb_idx: int) -> set[int]:
+        out: set[int] = set()
+        for ai in self.lbs[lb_idx].alms:
+            out.update(self.alms[ai].output_signals(self.net))
+        return out
+
+    def lb_external_ins(self, lb_idx: int) -> set[int]:
+        produced = self.produced_in_lb(lb_idx)
+        need: set[int] = set()
+        for ai in self.lbs[lb_idx].alms:
+            ah, z = self.alms[ai].input_signals(self.net)
+            need.update(ah)
+            need.update(z)
+        return need - produced
+
+    def stats(self) -> dict:
+        return {
+            "arch": self.arch.name,
+            "alms": self.n_alms,
+            "lbs": self.n_lbs,
+            "area_mwta": self.total_area,
+            "adders": self.net.n_adders,
+            "luts": self.net.n_luts,
+            "concurrent_luts": self.concurrent_luts,
+        }
+
+
+# ---------------------------------------------------------------------------
+# packing driver
+# ---------------------------------------------------------------------------
+
+
+def pack(net: Netlist, arch: ArchParams, seed: int = 0,
+         allow_unrelated: bool = True, strict_phases: tuple = (False,),
+         pull_runs: bool = False) -> PackedCircuit:
+    import random
+
+    rng = random.Random(seed)
+
+    LAST_PACK_DEBUG.clear()
+    fanout = _fanout_counts(net)
+
+    # --- 1. absorption pre-pass -------------------------------------------
+    absorbed_of: dict[tuple[int, int], list[int]] = {}
+    lut_absorbed: set[int] = set()
+    for ci, ch in enumerate(net.chains):
+        for bi in range(len(ch.sums)):
+            got: list[int] = []
+            for s in (ch.a[bi], ch.b[bi]):
+                if s <= CONST1:
+                    continue
+                drv = net.driver.get(s)
+                if (drv is not None and drv[0] == "lut"
+                        and fanout[s] == 1
+                        and len(net.lut_inputs[drv[1]]) <= 4
+                        and drv[1] not in lut_absorbed):
+                    got.append(drv[1])
+                    lut_absorbed.add(drv[1])
+            if got:
+                absorbed_of[(ci, bi)] = got
+
+    free_luts = [i for i in range(net.n_luts) if i not in lut_absorbed]
+
+    # --- 2. chain slotting --------------------------------------------------
+    alms: list[ALM] = []
+    chain_site: dict[tuple[int, int], int] = {}
+    lut_site: dict[int, int] = {}
+    chain_alm_runs: list[list[int]] = []  # per chain, its ALM indices
+    for ci, ch in enumerate(net.chains):
+        run: list[int] = []
+        for lo in range(0, len(ch.sums), 2):
+            halves = []
+            for bi in (lo, lo + 1):
+                if bi < len(ch.sums):
+                    ab = absorbed_of.get((ci, bi), [])
+                    halves.append(Half(fa=(ci, bi), fa_feed="lut", absorbed=ab))
+                else:
+                    halves.append(Half())
+            alm = ALM(halves=(halves[0], halves[1]), is_arith=True)
+            ai = len(alms)
+            alms.append(alm)
+            run.append(ai)
+            for bi in (lo, lo + 1):
+                if bi < len(ch.sums):
+                    chain_site[(ci, bi)] = ai
+                    for li in absorbed_of.get((ci, bi), []):
+                        lut_site[li] = ai
+        chain_alm_runs.append(run)
+
+    # --- 3. LUT pairing -----------------------------------------------------
+    pairs, singles6, singles5 = _pair_luts(net, free_luts, rng)
+
+    # --- 4+5. clustering ----------------------------------------------------
+    packed = _cluster(net, arch, alms, chain_alm_runs, pairs, singles6,
+                      singles5, chain_site, lut_site, rng,
+                      allow_unrelated=allow_unrelated,
+                      strict_phases=strict_phases, pull_runs=pull_runs)
+    return packed
+
+
+def _fanout_counts(net: Netlist) -> dict[int, int]:
+    fanout: dict[int, int] = defaultdict(int)
+    for ins in net.lut_inputs:
+        for s in ins:
+            fanout[s] += 1
+    for ch in net.chains:
+        for s in list(ch.a) + list(ch.b):
+            fanout[s] += 1
+        if ch.cin > CONST1:
+            fanout[ch.cin] += 1
+    for bus in net.pos.values():
+        for s in bus:
+            fanout[s] += 1
+    return fanout
+
+
+def _pair_luts(net: Netlist, free_luts: list[int], rng):
+    """Pair LUTs into ALM-sized groups by shared-input affinity."""
+    by_sig: dict[int, list[int]] = defaultdict(list)
+    for li in free_luts:
+        for s in net.lut_inputs[li]:
+            by_sig[s].append(li)
+    unpaired = set(free_luts)
+    pairs: list[tuple[int, int]] = []
+    singles6: list[int] = []
+    singles5: list[int] = []
+
+    def can_pair(a: int, b: int) -> bool:
+        ia, ib = set(net.lut_inputs[a]), set(net.lut_inputs[b])
+        ka, kb = len(ia), len(ib)
+        if ka > 5 or kb > 5:
+            return False
+        union = len(ia | ib)
+        if union > 8:
+            return False
+        if ka == 5 and kb == 5 and len(ia & ib) < 2:
+            return False
+        return True
+
+    order = sorted(free_luts, key=lambda li: -len(net.lut_inputs[li]))
+    for li in order:
+        if li not in unpaired:
+            continue
+        k = len(net.lut_inputs[li])
+        if k >= 6:
+            unpaired.discard(li)
+            singles6.append(li)
+            continue
+        # candidate partners sharing a signal
+        best = None
+        best_score = -1
+        seen = set()
+        for s in net.lut_inputs[li]:
+            for lj in by_sig[s]:
+                if lj == li or lj not in unpaired or lj in seen:
+                    continue
+                seen.add(lj)
+                if can_pair(li, lj):
+                    score = len(set(net.lut_inputs[li]) & set(net.lut_inputs[lj]))
+                    if score > best_score:
+                        best_score, best = score, lj
+        if best is None:
+            # fall back: any unpaired small LUT
+            for lj in unpaired:
+                if lj != li and can_pair(li, lj):
+                    best = lj
+                    break
+        if best is not None:
+            unpaired.discard(li)
+            unpaired.discard(best)
+            pairs.append((li, best))
+        else:
+            unpaired.discard(li)
+            singles5.append(li)
+    return pairs, singles6, singles5
+
+
+# ---------------------------------------------------------------------------
+# clustering
+# ---------------------------------------------------------------------------
+
+
+class _LBState:
+    def __init__(self, arch: ArchParams):
+        self.arch = arch
+        self.alm_ids: list[int] = []
+        self.produced: set[int] = set()
+        self.ext_in: set[int] = set()
+        self.ext_out_capacity = arch.output_budget
+        self.z_ext: set[int] = set()
+
+    def n_alms(self) -> int:
+        return len(self.alm_ids)
+
+    def fits_inputs(self, new_in: set[int], new_z_ext: set[int]) -> bool:
+        tot_in = len((self.ext_in | new_in) - self.produced)
+        if tot_in > self.arch.input_budget:
+            return False
+        if len(self.z_ext | new_z_ext) > self.arch.z_sources:
+            return False
+        return True
+
+    def add(self, new_in: set[int], new_prod: set[int], new_z_ext: set[int]):
+        self.ext_in |= new_in
+        self.produced |= new_prod
+        self.ext_in -= self.produced
+        self.z_ext |= new_z_ext
+
+
+def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
+             chain_site, lut_site, rng, allow_unrelated=True,
+             strict_phases=(True, False), pull_runs=True):
+    # Atom = ("run", chain_idx) | ("pair", a, b) | ("single", li, k)
+    atoms: list[tuple] = []
+    for ci, run in enumerate(chain_alm_runs):
+        if run:
+            atoms.append(("run", ci))
+    for a, b in pairs:
+        atoms.append(("pair", a, b))
+    for li in singles6:
+        atoms.append(("single6", li))
+    for li in singles5:
+        atoms.append(("single5", li))
+
+    def atom_sigs(atom) -> set[int]:
+        kind = atom[0]
+        sigs: set[int] = set()
+        if kind == "run":
+            ci = atom[1]
+            ch = net.chains[ci]
+            for s in list(ch.a) + list(ch.b) + list(ch.sums):
+                if s > CONST1:
+                    sigs.add(s)
+        else:
+            for li in atom[1:]:
+                if isinstance(li, int):
+                    sigs.update(s for s in net.lut_inputs[li] if s > CONST1)
+                    sigs.add(net.lut_out[li])
+        return sigs
+
+    # connectivity index
+    sig2atoms: dict[int, list[int]] = defaultdict(list)
+    for idx, atom in enumerate(atoms):
+        for s in atom_sigs(atom):
+            sig2atoms[s].append(idx)
+
+    # consumer index: signal -> consuming sites (chain bits and luts)
+    sig_consumers: dict[int, list[tuple]] = defaultdict(list)
+    for li in range(net.n_luts):
+        for s in net.lut_inputs[li]:
+            if s > CONST1:
+                sig_consumers[s].append(("lut", li))
+    for ci, ch in enumerate(net.chains):
+        for bi in range(len(ch.sums)):
+            for s in (ch.a[bi], ch.b[bi]):
+                if s > CONST1:
+                    sig_consumers[s].append(("chain", ci, bi))
+
+    placed = [False] * len(atoms)
+    lbs_state: list[_LBState] = []
+    lb_list: list[LB] = []
+    alm_lb: list[int] = [-1] * len(alms)
+    concurrent = 0
+
+    def alm_io(ai: int):
+        ah, z = alms[ai].input_signals(net)
+        prod = alms[ai].output_signals(net)
+        return ah, z, prod
+
+    def open_lb() -> int:
+        lbs_state.append(_LBState(arch))
+        lb_list.append(LB())
+        return len(lbs_state) - 1
+
+    prod_site: dict[int, int] = {}
+    host_capacity_lbs: set[int] = set()
+
+    def _has_free_half(alm: ALM) -> bool:
+        if not alm.is_arith or alm.lut6 is not None:
+            return False
+        for h in alm.halves:
+            if h.hosted_lut is None and (h.fa is None or not h.absorbed):
+                return True
+        return False
+
+    def place_alm(ai: int, lb_idx: int):
+        st = lbs_state[lb_idx]
+        ah, z, prod = alm_io(ai)
+        z_ext = z - st.produced if arch.z_local_free else set(z)
+        st.add(ah | z, prod, z_ext)
+        st.alm_ids.append(ai)
+        lb_list[lb_idx].alms.append(ai)
+        alm_lb[ai] = lb_idx
+        for s in prod:
+            prod_site[s] = ai
+        if arch.concurrent and _has_free_half(alms[ai]):
+            host_capacity_lbs.add(lb_idx)
+
+    def try_fit_alm(ai: int, lb_idx: int) -> bool:
+        st = lbs_state[lb_idx]
+        if st.n_alms() >= arch.alms_per_lb:
+            return False
+        ah, z, prod = alm_io(ai)
+        z_ext = z - st.produced if arch.z_local_free else set(z)
+        return st.fits_inputs((ah | z) - prod, z_ext)
+
+    # --- concurrent hosting helpers (DD only) ------------------------------
+    def host_in_arith(lut_list: list[int], lb_idx: int,
+                      strict_z: bool = False) -> bool:
+        """Try to host LUT(s) in free/convertible halves of arith ALMs.
+
+        A pair is first attempted in one ALM (shared A-H pins), then split
+        across two ALMs of the same LB.  With ``strict_z`` only placements
+        that add no *new* external AddMux-crossbar source are accepted
+        (operands local to the LB or already-routed Z signals).
+        """
+        if len(lut_list) == 2:
+            if _host_in_one_alm(lut_list, lb_idx, strict_z):
+                return True
+            st = lbs_state[lb_idx]
+            # split: both halves must fit or neither (transactional)
+            snapshot = (set(st.ext_in), set(st.produced), set(st.z_ext))
+            if _host_in_one_alm([lut_list[0]], lb_idx, strict_z):
+                if _host_in_one_alm([lut_list[1]], lb_idx, strict_z):
+                    return True
+                _unhost(lut_list[0], lb_idx, snapshot)
+            return False
+        return _host_in_one_alm(lut_list, lb_idx, strict_z)
+
+    def _unhost(li: int, lb_idx: int, snapshot):
+        nonlocal concurrent
+        st = lbs_state[lb_idx]
+        ai = lut_site.pop(li)
+        for h in alms[ai].halves:
+            if h.hosted_lut == li:
+                h.hosted_lut = None
+                if h.fa is not None and h.fa_feed == "z":
+                    h.fa_feed = "lut"
+                    concurrent -= 1
+        st.ext_in, st.produced, st.z_ext = snapshot
+
+    def _host_in_one_alm(lut_list: list[int], lb_idx: int,
+                         strict_z: bool = False) -> bool:
+        nonlocal concurrent
+        if not (arch.concurrent and allow_unrelated):
+            return False
+        dbg = LAST_PACK_DEBUG
+        dbg["host_calls"] = dbg.get("host_calls", 0) + 1
+        st = lbs_state[lb_idx]
+        any_free = False
+        for ai in st.alm_ids:
+            if _has_free_half(alms[ai]):
+                any_free = True
+                break
+        if not any_free:
+            host_capacity_lbs.discard(lb_idx)
+            return False
+        for ai in st.alm_ids:
+            alm = alms[ai]
+            if not alm.is_arith or alm.lut6 is not None:
+                continue
+            free_halves = []
+            for h in alm.halves:
+                if h.hosted_lut is not None:
+                    continue
+                if h.fa is None:
+                    free_halves.append((h, False))   # no Z needed
+                elif not h.absorbed:
+                    free_halves.append((h, True))    # needs Z conversion
+            free_halves.sort(key=lambda fh: fh[1])   # prefer Z-free halves
+            if len(free_halves) < len(lut_list):
+                dbg["rej_nofree"] = dbg.get("rej_nofree", 0) + 1
+                continue
+            # input budget at ALM level: all residents' A-H pins <= 8
+            ah, z = alm.input_signals(net)
+            new_ah = set(ah)
+            for li in lut_list:
+                new_ah.update(s for s in net.lut_inputs[li] if s > CONST1)
+            # halves being converted move their FA operands to Z
+            conv = [fh for fh in free_halves[: len(lut_list)] if fh[1]]
+            moved_z: set[int] = set()
+            for h, _ in conv:
+                ci, bi = h.fa
+                ch = net.chains[ci]
+                for s in (ch.a[bi], ch.b[bi]):
+                    if s > CONST1:
+                        moved_z.add(s)
+                        new_ah.discard(s)
+            if len(new_ah) > 8:
+                dbg["rej_pin8"] = dbg.get("rej_pin8", 0) + 1
+                continue
+            z_ext = (moved_z | z) - st.produced if arch.z_local_free else (moved_z | z)
+            if strict_z and (z_ext - st.z_ext):
+                dbg["rej_strictz"] = dbg.get("rej_strictz", 0) + 1
+                continue
+            if len(st.z_ext | z_ext) > arch.z_sources:
+                dbg["rej_zbud"] = dbg.get("rej_zbud", 0) + 1
+                continue
+            new_in = set(new_ah) | moved_z
+            if not st.fits_inputs(new_in - st.produced, z_ext):
+                dbg["rej_lbin"] = dbg.get("rej_lbin", 0) + 1
+                continue
+            # commit
+            for li, (h, needs_z) in zip(lut_list, free_halves):
+                h.hosted_lut = li
+                lut_site[li] = ai
+                if needs_z:
+                    h.fa_feed = "z"
+                if h.fa is not None:
+                    concurrent += 1
+            new_prod = {net.lut_out[li] for li in lut_list}
+            st.add(new_in, new_prod, z_ext)
+            return True
+        return False
+
+    def host6_in_arith(li: int, lb_idx: int) -> bool:
+        nonlocal concurrent
+        if not (arch.concurrent_6lut and allow_unrelated):
+            return False
+        st = lbs_state[lb_idx]
+        for ai in st.alm_ids:
+            alm = alms[ai]
+            if not alm.is_arith or alm.lut6 is not None:
+                continue
+            if any(h.hosted_lut is not None or h.absorbed for h in alm.halves):
+                continue
+            moved_z: set[int] = set()
+            for h in alm.halves:
+                if h.fa is not None:
+                    ci, bi = h.fa
+                    ch = net.chains[ci]
+                    moved_z.update(s for s in (ch.a[bi], ch.b[bi]) if s > CONST1)
+            new_ah = {s for s in net.lut_inputs[li] if s > CONST1}
+            if len(new_ah) > 8:
+                continue
+            z_ext = moved_z - st.produced if arch.z_local_free else set(moved_z)
+            if len(st.z_ext | z_ext) > arch.z_sources:
+                continue
+            new_in = new_ah | moved_z
+            if not st.fits_inputs(new_in - st.produced, z_ext):
+                continue
+            alm.lut6 = li
+            lut_site[li] = ai
+            for h in alm.halves:
+                if h.fa is not None:
+                    h.fa_feed = "z"
+                    concurrent += 1
+            st.add(new_in, {net.lut_out[li]}, z_ext)
+            return True
+        return False
+
+    def materialize_logic_alm(atom) -> int:
+        kind = atom[0]
+        if kind == "pair":
+            a, b = atom[1], atom[2]
+            alm = ALM(halves=(Half(hosted_lut=a), Half(hosted_lut=b)))
+            ai = len(alms)
+            alms.append(alm)
+            alm_lb.append(-1)
+            lut_site[a] = ai
+            lut_site[b] = ai
+            return ai
+        if kind == "single6":
+            alm = ALM(halves=(Half(), Half()), lut6=atom[1])
+        else:
+            alm = ALM(halves=(Half(hosted_lut=atom[1]), Half()))
+        ai = len(alms)
+        alms.append(alm)
+        alm_lb.append(-1)
+        if kind == "single6":
+            lut_site[atom[1]] = ai
+        else:
+            lut_site[atom[1]] = ai
+        return ai
+
+    # --- main greedy loop ---------------------------------------------------
+    # Chain runs are placed in *connectivity order*: start from the largest
+    # run, then repeatedly take the unplaced run sharing the most signals
+    # with what is already placed.  Consumer chains land next to their
+    # producers, so Z conversions ride the free local/direct-link taps.
+    run_idxs = [i for i, a in enumerate(atoms) if a[0] == "run"]
+    run_order: list[int] = []
+    if run_idxs:
+        remaining = set(run_idxs)
+        overlap: dict[int, int] = {i: 0 for i in run_idxs}
+        run_sig_cache = {i: atom_sigs(atoms[i]) for i in run_idxs}
+        sig2runs: dict[int, list[int]] = defaultdict(list)
+        for i in run_idxs:
+            for s in run_sig_cache[i]:
+                sig2runs[s].append(i)
+        first = max(remaining, key=lambda i: len(chain_alm_runs[atoms[i][1]]))
+        run_order.append(first)
+        remaining.discard(first)
+        for s in run_sig_cache[first]:
+            for j in sig2runs[s]:
+                if j in remaining:
+                    overlap[j] += 1
+        while remaining:
+            nxt = max(remaining,
+                      key=lambda i: (overlap[i],
+                                     len(chain_alm_runs[atoms[i][1]])))
+            run_order.append(nxt)
+            remaining.discard(nxt)
+            for s in run_sig_cache[nxt]:
+                for j in sig2runs[s]:
+                    if j in remaining:
+                        overlap[j] += 1
+    lut_order = [i for i, a in enumerate(atoms) if a[0] != "run"]
+    rng.shuffle(lut_order)
+
+    frontier_scores: dict[int, int] = {}
+
+    def bump_frontier(sigs: set[int]):
+        for s in sigs:
+            for aidx in sig2atoms.get(s, ()):
+                if not placed[aidx]:
+                    frontier_scores[aidx] = frontier_scores.get(aidx, 0) + 1
+
+    def place_atom(aidx: int, lb_idx: int | None) -> int | None:
+        """Place atom; returns the (possibly new) current LB index."""
+        atom = atoms[aidx]
+        kind = atom[0]
+        if kind == "run":
+            ci = atom[1]
+            for ai in chain_alm_runs[ci]:
+                tgt = lb_idx
+                if tgt is None or not try_fit_alm(ai, tgt):
+                    # chains may spill into a fresh LB mid-run
+                    tgt = open_lb()
+                    if not try_fit_alm(ai, tgt):
+                        # pathological (budget smaller than one ALM) — force
+                        pass
+                place_alm(ai, tgt)
+                lb_idx = tgt
+            placed[aidx] = True
+            bump_frontier(atom_sigs(atom))
+            return lb_idx
+        # LUT atoms: try concurrent hosting — connectivity-driven first
+        # (current LB, then LBs producing this atom's inputs, then LBs
+        # consuming its outputs), then VPR-style unrelated clustering over
+        # any LB with spare arithmetic halves.
+        cand_lbs: list[int] = []
+        if lb_idx is not None:
+            cand_lbs.append(lb_idx)
+        for li in atom[1:]:
+            if isinstance(li, int):
+                for s in net.lut_inputs[li]:
+                    psite = prod_site.get(s)
+                    if psite is not None and alm_lb[psite] >= 0:
+                        cand_lbs.append(alm_lb[psite])
+                for cons in sig_consumers.get(net.lut_out[li], ()):
+                    if cons[0] == "chain":
+                        cai = chain_site.get((cons[1], cons[2]))
+                        if cai is not None and alm_lb[cai] >= 0:
+                            cand_lbs.append(alm_lb[cai])
+                    else:
+                        csite = lut_site.get(cons[1])
+                        if csite is not None and alm_lb[csite] >= 0:
+                            cand_lbs.append(alm_lb[csite])
+        if allow_unrelated and arch.concurrent:
+            cand_lbs.extend(list(host_capacity_lbs)[:64])
+        for strict in strict_phases:
+            seen_lb: set[int] = set()
+            for cand in cand_lbs:
+                if cand in seen_lb:
+                    continue
+                seen_lb.add(cand)
+                ok = False
+                if kind == "pair":
+                    ok = host_in_arith([atom[1], atom[2]], cand, strict)
+                elif kind == "single5":
+                    ok = host_in_arith([atom[1]], cand, strict)
+                elif kind == "single6":
+                    ok = host6_in_arith(atom[1], cand)
+                if ok:
+                    placed[aidx] = True
+                    bump_frontier(atom_sigs(atom))
+                    return lb_idx if lb_idx is not None else cand
+        ai = materialize_logic_alm(atom)
+        tgt = lb_idx
+        if tgt is None or not try_fit_alm(ai, tgt):
+            # look for any LB with room before opening a new one
+            tgt = None
+            for cand in range(len(lbs_state) - 1, max(-1, len(lbs_state) - 9), -1):
+                if try_fit_alm(ai, cand):
+                    tgt = cand
+                    break
+            if tgt is None:
+                tgt = open_lb()
+        place_alm(ai, tgt)
+        placed[aidx] = True
+        bump_frontier(atom_sigs(atom))
+        return tgt
+
+    cur_lb: int | None = None
+    for aidx in run_order:
+        if placed[aidx]:
+            continue
+        cur_lb = place_atom(aidx, cur_lb)
+        # pull in connected atoms (chains and LUTs) while there is room —
+        # connectivity-ordered packing keeps chain operands local, which is
+        # what lets Z pins ride the free direct-link taps.
+        while True:
+            cand = None
+            best = 0
+            for k, v in list(frontier_scores.items()):
+                if placed[k]:
+                    frontier_scores.pop(k, None)
+                    continue
+                if not pull_runs and atoms[k][0] == "run":
+                    continue
+                if v > best:
+                    best, cand = v, k
+            if cand is None or cur_lb is None:
+                break
+            before = len(lbs_state)
+            cur_lb = place_atom(cand, cur_lb)
+            frontier_scores.pop(cand, None)
+            if len(lbs_state) != before:
+                break  # spilled into a new LB; go back to chain order
+
+    for aidx in lut_order:
+        if not placed[aidx]:
+            cur_lb = place_atom(aidx, cur_lb)
+
+    # --- Z timing post-pass (DD only) -----------------------------------
+    # Any raw-operand FA still fed through the (now slower) LUT path is
+    # moved to the direct Z path when the AddMux budget allows: Table II
+    # row 3 — Z->adder is 48 % faster than the baseline LUT route.  This is
+    # why the paper's stress tests see *better* critical paths on DD5.
+    if arch.concurrent:
+        for lbi, st in enumerate(lbs_state):
+            for ai in st.alm_ids:
+                alm = alms[ai]
+                if not alm.is_arith:
+                    continue
+                for h in alm.halves:
+                    if (h.fa is None or h.fa_feed != "lut" or h.absorbed
+                            or h.hosted_lut is not None):
+                        continue
+                    ci, bi = h.fa
+                    ch = net.chains[ci]
+                    ops = {s for s in (ch.a[bi], ch.b[bi]) if s > CONST1}
+                    z_ext = ops - st.produced if arch.z_local_free else ops
+                    if len(st.z_ext | z_ext) > arch.z_sources:
+                        continue
+                    h.fa_feed = "z"
+                    st.z_ext |= z_ext
+
+    return PackedCircuit(
+        net=net, arch=arch, alms=alms, lbs=lb_list, lut_site=lut_site,
+        chain_site=chain_site, alm_lb=alm_lb, concurrent_luts=concurrent,
+    )

@@ -1,0 +1,166 @@
+"""Static timing + area analysis over a packed circuit.
+
+Levelized longest-path analysis with the Table II path delays.  Routing is
+placement-free: an edge is *local* (same LB, through the local feedback +
+crossbar) or *global* (fixed inter-LB routing delay).  This is deliberately
+coarser than VPR's timing-driven router, but it is applied identically to
+baseline/DD5/DD6 so the architectural deltas (Z-path vs LUT-path adder feeds,
+DD6 output-mux penalty) dominate the comparison, as in the paper.
+"""
+from __future__ import annotations
+
+from .alm import ArchParams
+from .netlist import CONST0, CONST1, Netlist
+from .packing import PackedCircuit
+
+
+def analyze(packed: PackedCircuit) -> dict:
+    net = packed.net
+    arch = packed.arch
+
+    # production site (alm index) per signal; PIs -> -1
+    site: dict[int, int] = {}
+    for s in net.pis:
+        site[s] = -1
+    for li, out in enumerate(net.lut_out):
+        ai = packed.lut_site.get(li, -2)
+        site[out] = ai
+    for ci, ch in enumerate(net.chains):
+        for bi, s in enumerate(ch.sums):
+            site[s] = packed.chain_site.get((ci, bi), -2)
+        if ch.cout is not None:
+            site[ch.cout] = packed.chain_site.get((ci, len(ch.sums) - 1), -2)
+
+    def lb_of(ai: int) -> int:
+        if ai < 0:
+            return -1
+        return packed.alm_lb[ai]
+
+    arr: dict[int, float] = {CONST0: 0.0, CONST1: 0.0}
+    for s in net.pis:
+        arr[s] = 0.0
+
+    def edge_in(s: int, dst_lb: int, pin: str) -> float:
+        """Arrival of signal s at an ALM input pin in LB dst_lb."""
+        t = arr[s]
+        src_lb = lb_of(site.get(s, -1))
+        if s <= CONST1:
+            return 0.0
+        if src_lb == dst_lb and src_lb >= 0:
+            t += arch.t_route_local
+        else:
+            t += arch.t_route_global
+        t += arch.t_lbin_to_z if pin == "z" else arch.t_lbin_to_ah
+        return t
+
+    # map (chain,bit) -> half for feed info
+    feed: dict[tuple[int, int], tuple[str, list[int]]] = {}
+    absorbed_all: set[int] = set()
+    for alm in packed.alms:
+        for h in alm.halves:
+            if h.fa is not None:
+                feed[h.fa] = (h.fa_feed, h.absorbed)
+                absorbed_all.update(h.absorbed)
+
+    out_extra = arch.t_out_mux_extra
+
+    for nd in net.topo_order():
+        kind, idx = nd
+        if kind == "lut":
+            out = net.lut_out[idx]
+            ai = packed.lut_site.get(idx)
+            if ai is None:
+                # absorbed LUT timing handled at chain; skip (arr set there)
+                continue
+            dst_lb = lb_of(ai)
+            k = len(net.lut_inputs[idx])
+            t_in = max((edge_in(s, dst_lb, "ah") for s in net.lut_inputs[idx]
+                        if s > CONST1), default=0.0)
+            # absorbed LUTs have their delay folded into t_ah_to_adder
+            if idx in absorbed_all:
+                arr[out] = t_in
+            else:
+                arr[out] = t_in + arch.lut_delay(k) + arch.t_alm_out + out_extra
+        else:
+            ch = net.chains[idx]
+            carry = 0.0
+            if ch.cin > CONST1:
+                ai0 = packed.chain_site.get((idx, 0), -2)
+                carry = edge_in(ch.cin, lb_of(ai0), "ah") + arch.t_ah_to_adder
+            for bi in range(len(ch.sums)):
+                ai = packed.chain_site.get((idx, bi), -2)
+                dst_lb = lb_of(ai)
+                fkind, absorbed = feed.get((idx, bi), ("lut", []))
+                ops = [ch.a[bi], ch.b[bi]]
+                t_op = 0.0
+                absorbed_outs = {net.lut_out[li] for li in absorbed}
+                for s in ops:
+                    if s <= CONST1:
+                        continue
+                    if s in absorbed_outs:
+                        # operand computed in the half's own LUTs
+                        li = next(l for l in absorbed if net.lut_out[l] == s)
+                        tin = max((edge_in(q, dst_lb, "ah")
+                                   for q in net.lut_inputs[li] if q > CONST1),
+                                  default=0.0)
+                        t_op = max(t_op, tin + arch.t_ah_to_adder)
+                    elif fkind == "z":
+                        t_op = max(t_op, edge_in(s, dst_lb, "z")
+                                   + arch.t_z_to_adder)
+                    else:
+                        t_op = max(t_op, edge_in(s, dst_lb, "ah")
+                                   + arch.t_ah_to_adder)
+                t_here = max(t_op, carry)
+                arr[ch.sums[bi]] = t_here + arch.t_sum_out + out_extra
+                carry = t_here + arch.t_carry
+            if ch.cout is not None:
+                arr[ch.cout] = carry + arch.t_sum_out + out_extra
+
+    # absorbed luts that never got arr (dangling) -> 0
+    cp = 0.0
+    for bus in net.pos.values():
+        for s in bus:
+            cp = max(cp, arr.get(s, 0.0))
+    cp = max(cp, 1.0)
+
+    area = packed.total_area
+    return {
+        "arch": arch.name,
+        "critical_path_ps": cp,
+        "fmax_mhz": 1e6 / cp,
+        "alms": packed.n_alms,
+        "lbs": packed.n_lbs,
+        "area_mwta": area,
+        "adp": area * cp,
+        "adders": net.n_adders,
+        "luts": net.n_luts,
+        "concurrent_luts": packed.concurrent_luts,
+    }
+
+
+def channel_utilization(packed: PackedCircuit, channel_width: int = 400) -> list[float]:
+    """Per-LB routing-demand proxy for the Fig. 8 congestion histogram.
+
+    Utilization of the channels around an LB is approximated by the number of
+    distinct signals crossing its boundary (external inputs + consumed-
+    elsewhere outputs) against the channel capacity serving one LB span.
+    """
+    net = packed.net
+    util = []
+    # signals consumed per LB + reverse index signal -> consuming LBs
+    lb_consumes: list[set[int]] = [set() for _ in packed.lbs]
+    consumers_of: dict[int, set[int]] = {}
+    for lbi in range(len(packed.lbs)):
+        for ai in packed.lbs[lbi].alms:
+            ah, z = packed.alms[ai].input_signals(net)
+            lb_consumes[lbi] |= ah | z
+        for s in lb_consumes[lbi]:
+            consumers_of.setdefault(s, set()).add(lbi)
+    po_sigs = {s for bus in net.pos.values() for s in bus}
+    for lbi in range(len(packed.lbs)):
+        produced = packed.produced_in_lb(lbi)
+        ext_in = lb_consumes[lbi] - produced
+        ext_out = {s for s in produced
+                   if (consumers_of.get(s, set()) - {lbi}) or s in po_sigs}
+        util.append((len(ext_in) + len(ext_out)) / channel_width)
+    return util

@@ -1,0 +1,81 @@
+"""Pallas kernel: constant-weight matmul via weight bit-planes.
+
+The Double-Duty adaptation for the MXU: a b-bit quantized weight matrix is
+stored as b binary planes; the kernel streams each plane through the MXU
+(dense {0,1} matmul at full systolic throughput) while the VPU concurrently
+performs the shift-add plane accumulation and dequant epilogue — both compute
+units do duty in the same pass, the TPU analogue of the paper's concurrent
+adder-chain + LUT usage (DESIGN.md §3).
+
+Tiling: classic (M, N, K) block grid with a VMEM accumulator carried across
+the K-contraction; planes are unrolled inside the kernel body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _kernel(x_ref, p_ref, s_ref, o_ref, acc_ref, *, n_planes: int,
+            n_k_blocks: int):
+    # x_ref: [BM, BK] f32; p_ref: [B, BK, BN] (0/1); s_ref: [BN] f32
+    # o_ref: [BM, BN] f32; acc_ref: VMEM accumulator [BM, BN] f32
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    acc = acc_ref[...]
+    for b in range(n_planes):  # unrolled plane loop: MXU matmul + VPU shift-add
+        w = p_ref[b, :, :].astype(jnp.float32)
+        part = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        coeff = -(2.0 ** (n_planes - 1)) if b == n_planes - 1 else 2.0 ** b
+        acc = acc + coeff * part
+    acc_ref[...] = acc
+
+    @pl.when(pl.program_id(2) == n_k_blocks - 1)
+    def _done():
+        o_ref[...] = acc_ref[...] * s_ref[...][None, :]
+
+
+def bitplane_matmul(x: jax.Array, planes: jax.Array, scale: jax.Array,
+                    interpret: bool = True) -> jax.Array:
+    """``x[M, K]``, ``planes[B, K, N]`` in {0,1}, ``scale[N]`` -> ``y[M, N]``.
+
+    W = (sum_b 2^b planes[b]  with top plane weighted -2^(B-1)) * scale.
+    """
+    M, K = x.shape
+    Bp, K2, N = planes.shape
+    assert K == K2
+    bm = min(BLOCK_M, M)
+    bn = min(BLOCK_N, N)
+    bk = min(BLOCK_K, K)
+    # zero-pad the contraction to a block multiple: padded K contributes 0,
+    # and the kernel never reads uninitialized block tails.
+    Kp = pl.cdiv(K, bk) * bk
+    if Kp != K:
+        x = jnp.pad(x, ((0, 0), (0, Kp - K)))
+        planes = jnp.pad(planes, ((0, 0), (0, Kp - K), (0, 0)))
+        K = Kp
+    grid = (pl.cdiv(M, bm), pl.cdiv(N, bn), pl.cdiv(K, bk))
+    return pl.pallas_call(
+        functools.partial(_kernel, n_planes=Bp, n_k_blocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((Bp, bk, bn), lambda i, j, k: (0, k, j)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, planes, scale)

@@ -1,0 +1,56 @@
+"""Pallas kernel: bit-parallel k-LUT level evaluation.
+
+The functional simulator (``core/eval_jax.py``) evaluates one topological
+level of LUTs at a time over packed test-vector lanes.  Per LUT the output is
+a sum-of-minterms over its (<=5) input lanes — identical bitwise work for all
+LUTs in a level, so it vectorizes across (LUT, lane) tiles.  The truth tables
+ride along as a scalar-prefetch-style operand (one uint32 per LUT).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 256   # LUTs per tile
+BLOCK_N = 128   # lane words per tile
+
+
+def _kernel(tt_ref, in_ref, o_ref, *, k: int):
+    # tt_ref: [BM] uint32; in_ref: [BM, k, BN] uint32; o_ref: [BM, BN]
+    tts = tt_ref[...]
+    ins = in_ref[...]
+    BM, _, BN = ins.shape
+    out = jnp.zeros((BM, BN), dtype=jnp.uint32)
+    full = jnp.uint32(0xFFFFFFFF)
+    for m in range(1 << k):  # unrolled: 2^k <= 32 minterms
+        bit = (tts >> jnp.uint32(m)) & jnp.uint32(1)
+        term = jnp.full((BM, BN), full, dtype=jnp.uint32)
+        for j in range(k):
+            lane = ins[:, j, :]
+            term = term & (lane if (m >> j) & 1 else ~lane)
+        out = out | (jnp.where(bit == 1, full, jnp.uint32(0))[:, None] & term)
+    o_ref[...] = out
+
+
+def lut_eval(inputs: jax.Array, tts: jax.Array,
+             interpret: bool = True) -> jax.Array:
+    """``inputs[M, K, N]`` uint32 lanes + ``tts[M]`` -> ``out[M, N]``."""
+    M, K, N = inputs.shape
+    assert K <= 5
+    bm = min(BLOCK_M, M)
+    bn = min(BLOCK_N, N)
+    grid = (pl.cdiv(M, bm), pl.cdiv(N, bn))
+    return pl.pallas_call(
+        functools.partial(_kernel, k=K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm, K, bn), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.uint32),
+        interpret=interpret,
+    )(tts.astype(jnp.uint32), inputs.astype(jnp.uint32))

@@ -1,0 +1,67 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute under ``interpret=True`` — the
+kernel body runs as traced jnp ops, which validates BlockSpec indexing and
+kernel logic exactly.  On a TPU backend the same call sites compile to
+Mosaic.  ``use_pallas=False`` falls back to the jnp references (used by the
+dry-run lowering path, where interpret-mode pallas would bloat the HLO).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bitplane_matmul import bitplane_matmul as _bitplane_pallas
+from .flash_attention import flash_attention as _flash_pallas
+from .lut_eval import lut_eval as _lut_pallas
+from .popcount_matmul import popcount_matmul as _popcount_pallas
+from .ssd_scan import ssd_scan as _ssd_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "k_bits", "use_pallas"))
+def popcount_matmul(x_packed, w_packed, mode="and", k_bits=None,
+                    use_pallas=True):
+    if use_pallas:
+        return _popcount_pallas(x_packed, w_packed, mode=mode, k_bits=k_bits,
+                                interpret=not _on_tpu())
+    return ref.popcount_matmul_ref(x_packed, w_packed, mode=mode,
+                                   k_bits=k_bits)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def lut_eval(inputs, tts, use_pallas=True):
+    if use_pallas:
+        return _lut_pallas(inputs, tts, interpret=not _on_tpu())
+    return ref.lut_eval_ref(inputs, tts)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def bitplane_matmul(x, planes, scale, use_pallas=True):
+    if use_pallas:
+        return _bitplane_pallas(x, planes, scale, interpret=not _on_tpu())
+    return ref.bitplane_matmul_ref(x, planes, scale)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "use_pallas"))
+def flash_attention(q, k, v, causal=True, window=None, softcap=None,
+                    scale=None, use_pallas=True):
+    if use_pallas:
+        return _flash_pallas(q, k, v, causal, window, softcap, scale,
+                             not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def ssd_scan(x, dt, A, B, C, use_pallas=True):
+    if use_pallas:
+        return _ssd_pallas(x, dt, A, B, C, interpret=not _on_tpu())
+    return ref.ssd_scan_ref(x, dt, A, B, C)

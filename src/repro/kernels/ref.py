@@ -1,0 +1,215 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the per-kernel shape/dtype sweep tests and
+the fallback implementation on backends without Pallas support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# popcount_matmul — binary GEMM via AND/XNOR + popcount
+# (the compressor tree's job — summing AND-gated partial products — executed
+#  bit-parallel on the TPU VPU; the FPGA adder chain becomes a popcount)
+# ---------------------------------------------------------------------------
+
+
+def popcount_matmul_ref(x_packed: jax.Array, w_packed: jax.Array,
+                        mode: str = "and", k_bits: int | None = None) -> jax.Array:
+    """``x_packed[M, W]`` and ``w_packed[N, W]`` hold K bits packed into W =
+    ceil(K/32) uint32 words.
+
+    mode "and":  y[m, n] = sum_k x[m, k] & w[n, k]          (0/1 weights)
+    mode "xnor": y[m, n] = K - 2 * popcount(x ^ w)          (+/-1 weights,
+                 the classic binary-net dot product)
+    """
+    x = x_packed.astype(jnp.uint32)
+    w = w_packed.astype(jnp.uint32)
+
+    def popc(v):
+        v = v - ((v >> 1) & jnp.uint32(0x55555555))
+        v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+        v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+        return ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+    xw = x[:, None, :]
+    ww = w[None, :, :]
+    if mode == "and":
+        return popc(xw & ww).sum(-1)
+    if mode == "xnor":
+        assert k_bits is not None
+        return k_bits - 2 * popc(xw ^ ww).sum(-1)
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# lut_eval — bit-parallel k-LUT evaluation over packed lanes
+# ---------------------------------------------------------------------------
+
+
+def lut_eval_ref(inputs: jax.Array, tts: jax.Array) -> jax.Array:
+    """``inputs[M, K, N]`` uint32 lanes, ``tts[M]`` uint32 truth tables
+    (K <= 5) -> ``out[M, N]`` uint32: out bit = tt[idx] where idx is the
+    K-bit assignment read from the input lanes."""
+    M, K, N = inputs.shape
+    inputs = inputs.astype(jnp.uint32)
+    tts = tts.astype(jnp.uint32)
+    out = jnp.zeros((M, N), dtype=jnp.uint32)
+    full = jnp.uint32(0xFFFFFFFF)
+    for m in range(1 << K):
+        bit = (tts >> jnp.uint32(m)) & 1  # (M,)
+        term = jnp.full((M, N), full, dtype=jnp.uint32)
+        for j in range(K):
+            lane = inputs[:, j, :]
+            term = term & jnp.where((m >> j) & 1, lane, ~lane)
+        out = out | jnp.where(bit[:, None] == 1, term, jnp.uint32(0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# bitplane_matmul — constant-weight matmul via weight bit-planes
+# (the paper's unrolled multiplication, adapted to MXU+VPU double duty)
+# ---------------------------------------------------------------------------
+
+
+def bitplane_matmul_ref(x: jax.Array, planes: jax.Array,
+                        scale: jax.Array | None = None) -> jax.Array:
+    """``x[M, K] @ W[K, N]`` where ``W = sum_b 2^b * planes[b]`` with the top
+    plane carrying two's-complement weight ``-2^(B-1)``.
+
+    planes: [B, K, N] in {0, 1}.  scale: optional [N] dequant scale.
+    """
+    B = planes.shape[0]
+    w = jnp.zeros(planes.shape[1:], dtype=jnp.float32)
+    for b in range(B):
+        weight = -(2.0 ** (B - 1)) if b == B - 1 else 2.0 ** b
+        w = w + weight * planes[b].astype(jnp.float32)
+    y = jnp.dot(x.astype(jnp.float32), w, precision=jax.lax.Precision.HIGHEST)
+    if scale is not None:
+        y = y * scale[None, :]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# flash_attention — causal/local GQA attention with optional logit softcap
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window: int | None = None,
+                        softcap: float | None = None,
+                        scale: float | None = None) -> jax.Array:
+    """q: [B, Hq, S, D], k/v: [B, Hkv, T, D] with Hq % Hkv == 0."""
+    Bq, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    T = k.shape[2]
+    qpos = jnp.arange(S)[:, None] + (T - S)  # decode: queries at the end
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), dtype=bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, vv.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan — Mamba-2 state-space duality (chunked scan)
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                 C: jax.Array) -> jax.Array:
+    """Sequential reference for SSD.
+
+    x:  [Bb, L, H, P]    inputs (already multiplied by dt outside if desired)
+    dt: [Bb, L, H]       positive step sizes
+    A:  [H]              negative-definite scalar per head (A < 0)
+    B:  [Bb, L, N]       input projection (shared across heads, G=1)
+    C:  [Bb, L, N]       output projection
+    returns y: [Bb, L, H, P]
+    """
+    Bb, L, H, P = x.shape
+    N = B.shape[-1]
+
+    def step(h, inputs):
+        xt, dtt, Bt, Ct = inputs  # [H,P], [H], [N], [N]
+        decay = jnp.exp(A * dtt)  # [H]
+        h = h * decay[:, None, None] + (dtt[:, None] * xt)[:, :, None] \
+            * Bt[None, None, :]
+        y = jnp.einsum("hpn,n->hp", h, Ct)
+        return h, y
+
+    def batch_one(xb, dtb, Bb_, Cb):
+        h0 = jnp.zeros((H, P, N), dtype=jnp.float32)
+        _, ys = jax.lax.scan(step, h0,
+                             (xb.astype(jnp.float32), dtb.astype(jnp.float32),
+                              Bb_.astype(jnp.float32), Cb.astype(jnp.float32)))
+        return ys
+
+    return jax.vmap(batch_one)(x, dt, B, C).astype(x.dtype)
+
+
+def ssd_scan_chunked_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+                         B: jax.Array, C: jax.Array,
+                         chunk: int = 128) -> jax.Array:
+    """Chunked (state-space *dual*) form of :func:`ssd_scan_ref` in pure jnp.
+
+    Same math as the Pallas kernel: L serial steps become L/chunk steps of
+    dense intra-chunk matmuls (arithmetic intensity ~chunk/2 instead of ~1)
+    plus a cheap inter-chunk state hand-off — this is the paper-faithful
+    SSD algorithm (arXiv:2405.21060 §6) and the training fast path.
+    """
+    Bb, L, H, P = x.shape
+    N = B.shape[-1]
+    if L % chunk:
+        return ssd_scan_ref(x, dt, A, B, C)
+    nc = L // chunk
+    xf = x.astype(jnp.float32).reshape(Bb, nc, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bb, nc, chunk, H)
+    Bf = B.astype(jnp.float32).reshape(Bb, nc, chunk, N)
+    Cf = C.astype(jnp.float32).reshape(Bb, nc, chunk, N)
+    Af = A.astype(jnp.float32)
+
+    t_idx = jnp.arange(chunk)
+    causal = t_idx[:, None] >= t_idx[None, :]
+
+    def chunk_step(h_in, sl):
+        xc, dtc, Bc, Cc = sl                      # [Bb,Q,H,P] [Bb,Q,H] [Bb,Q,N]
+        cum = jnp.cumsum(Af[None, None, :] * dtc, axis=1)   # [Bb,Q,H]
+        # carried-state contribution
+        y_state = jnp.einsum("bqn,bhpn->bqhp", Cc, h_in) \
+            * jnp.exp(cum)[..., None]
+        # intra-chunk dual (attention-like) form
+        scores = jnp.einsum("btn,bun->btu", Cc, Bc)          # [Bb,Q,Q]
+        seg = cum[:, :, None, :] - cum[:, None, :, :]        # [Bb,Q,Q,H]
+        w = jnp.where(causal[None, :, :, None],
+                      jnp.exp(seg) * scores[..., None], 0.0) \
+            * dtc[:, None, :, :]
+        y = y_state + jnp.einsum("btuh,buhp->bthp", w, xc)
+        # inter-chunk state update
+        wu = jnp.exp(cum[:, -1:, :] - cum) * dtc             # [Bb,Q,H]
+        h_out = jnp.exp(cum[:, -1])[..., None, None] * h_in \
+            + jnp.einsum("buhp,bun->bhpn", xc * wu[..., None], Bc)
+        return h_out, y
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0,
+                         (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+                          Bf.swapaxes(0, 1), Cf.swapaxes(0, 1)))
+    # ys: [nc, Bb, Q, H, P] -> [Bb, L, H, P]
+    return ys.swapaxes(0, 1).reshape(Bb, L, H, P).astype(x.dtype)

@@ -1,0 +1,95 @@
+"""Pallas kernel: Mamba-2 SSD (state-space duality) chunked scan.
+
+Grid: (batch, heads).  Each program walks the sequence in chunks of Q
+timesteps, holding the (P x N) SSM state in VMEM.  Within a chunk the dual
+quadratic form runs on the MXU (intra-chunk attention-like matmuls); the
+recurrent state hand-off between chunks is a cheap VPU update — the
+"double duty" split again (DESIGN.md §3).
+
+Shapes follow arXiv:2405.21060 §6 with scalar A per head and shared B/C
+(G = 1): x [B, L, H, P], dt [B, L, H], A [H], B/C [B, L, N].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 128
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *,
+            n_chunks: int, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)       # [Q, P]
+    dt = dt_ref[0].astype(jnp.float32)     # [Q]
+    a = a_ref[0].astype(jnp.float32)       # scalar A (per head), a < 0
+    bmat = b_ref[0].astype(jnp.float32)    # [Q, N]
+    cmat = c_ref[0].astype(jnp.float32)    # [Q, N]
+
+    # cumulative log-decay within the chunk: L[t] = sum_{u<=t} a*dt[u]
+    adt = a * dt                                    # [Q]
+    cum = jnp.cumsum(adt)                           # [Q]
+    # 1) contribution of the carried-in state: y_state[t] = C[t] . h_in decayed
+    decay_in = jnp.exp(cum)[:, None]                # [Q, 1]
+    h_in = state_ref[...]                           # [P, N]
+    y_state = (cmat @ h_in.T) * decay_in            # [Q, P]
+    # 2) intra-chunk (dual form): y[t] += sum_{u<=t} exp(cum[t]-cum[u]) *
+    #    dt[u] * (C[t].B[u]) * x[u]
+    scores = cmat @ bmat.T                          # [Q, Q]
+    seg = cum[:, None] - cum[None, :]               # [Q, Q]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    u_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = t_idx >= u_idx
+    w = jnp.where(causal, jnp.exp(seg) * scores, 0.0) * dt[None, :]
+    y = y_state + jnp.dot(w, x, preferred_element_type=jnp.float32)
+    # 3) update carried state: h_out = decay_total * h_in +
+    #    sum_u exp(cum[-1]-cum[u]) * dt[u] * x[u] B[u]^T
+    decay_tot = jnp.exp(cum[-1])
+    wu = jnp.exp(cum[-1] - cum) * dt                # [Q]
+    h_new = decay_tot * h_in + jnp.einsum("qp,qn->pn", x * wu[:, None], bmat)
+    state_ref[...] = h_new
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, interpret: bool = True) -> jax.Array:
+    """See :func:`repro.kernels.ref.ssd_scan_ref`."""
+    Bb, L, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(CHUNK, L)
+    assert L % chunk == 0, "sequence length must be a chunk multiple"
+    n_chunks = L // chunk
+    grid = (Bb, H, n_chunks)
+
+    xt = x.transpose(0, 2, 1, 3).reshape(Bb * H, L, P)
+    dtt = dt.transpose(0, 2, 1).reshape(Bb * H, L)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_chunks=n_chunks, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, h, c: (_flat2(b, h, H), c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, h, c: (_flat2(b, h, H), c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P),
+                               lambda b, h, c: (_flat2(b, h, H), c, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bb * H, L, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, A, B, C)
+    return out.reshape(Bb, H, L, P).transpose(0, 2, 1, 3)
+
+
+def _flat2(b, h, H):
+    return b * H + h

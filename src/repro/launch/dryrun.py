@@ -1,0 +1,308 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces ``experiments/dryrun/<arch>__<shape>__<mesh>.json``
+containing compile success, ``memory_analysis`` / ``cost_analysis`` numbers,
+and a collective-traffic breakdown parsed from the partitioned HLO — the
+inputs to the §Roofline analysis.
+
+The two ``os.environ`` lines below MUST stay the first statements: jax locks
+the device count on first initialization (before ANY repro/jax import).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig, get_config,
+                                list_configs, shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (count_params, decode_specs, input_specs,
+                                params_shape)
+from repro.parallel.api import sharding_rules
+from repro.parallel.sharding import (activation_rules, batch_specs,
+                                     cache_specs, named, opt_specs,
+                                     param_specs)
+from repro.serve.decode import decode_step, prefill
+from repro.train.optimizer import OptConfig
+from repro.train.step import TrainConfig, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device collective traffic by op kind (result-shape bytes)."""
+    stats: dict[str, dict] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "fusion" in line[:40]:
+            continue
+        m = _COLL_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(
+            m.group(0))[0]
+        b = _shape_bytes(lhs)
+        s = stats.setdefault(kind, {"count": 0, "bytes": 0})
+        s["count"] += 1
+        s["bytes"] += b
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def _active_params(cfg: ModelConfig, pshape) -> int:
+    """6*N*D convention: activated parameters only (MoE discount)."""
+    total = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(pshape)
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        n = int(np.prod(leaf.shape))
+        if cfg.is_moe and ("we_i" in key or "we_o" in key):
+            n = int(n * cfg.top_k / cfg.n_experts)
+        total += n
+    return total
+
+
+def _opt_config(cfg: ModelConfig) -> OptConfig:
+    # AdamW states for a 1T-param model cannot fit 512 v5e chips; kimi uses
+    # factored second moments (see EXPERIMENTS.md §Dry-run)
+    if cfg.name.startswith("kimi"):
+        return OptConfig(name="adafactor")
+    return OptConfig(name="adamw")
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               cfg: ModelConfig | None = None, tcfg: TrainConfig | None = None):
+    if cfg is None:
+        cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pshape = params_shape(cfg)
+    pspecs = param_specs(cfg, mesh, pshape)
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=lambda x: isinstance(x, P))
+    n_params = count_params(pshape)
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": mesh.size,
+        "n_params": n_params,
+        "n_active_params": _active_params(cfg, pshape),
+    }
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            if tcfg is None:
+                tcfg = TrainConfig(opt=_opt_config(cfg))
+            step_fn, opt_init = make_train_step(cfg, tcfg)
+            oshape = jax.eval_shape(opt_init, pshape)
+            ospecs = opt_specs(cfg, mesh, pspecs, oshape)
+            batch = input_specs(cfg, shape)
+            bspecs = batch_specs(cfg, mesh, batch)
+            T = shape.global_batch * shape.seq_len
+            g = min(cfg.moe_group_size, T)
+            rules = activation_rules(cfg, mesh, n_moe_groups=T // g)
+            with sharding_rules(rules):
+                jitted = jax.jit(step_fn,
+                                 in_shardings=(ns(pspecs), ns(ospecs),
+                                               ns(bspecs)),
+                                 out_shardings=(ns(pspecs), ns(ospecs), None),
+                                 donate_argnums=(0, 1))
+                lowered = jitted.lower(pshape, oshape, batch)
+            record["model_flops"] = 6 * record["n_active_params"] * T
+        elif shape.kind == "prefill":
+            batch = input_specs(cfg, shape)
+            bspecs = batch_specs(cfg, mesh, batch)
+            from repro.serve.kvcache import init_cache
+
+            extra_len = cfg.n_patches if cfg.family == "vlm" else 0
+            cshape = jax.eval_shape(
+                lambda: init_cache(cfg, shape.global_batch,
+                                   shape.seq_len + extra_len,
+                                   encoder_len=cfg.encoder_seq or None))
+            cspecs = cache_specs(cfg, mesh, cshape)
+            T = shape.global_batch * shape.seq_len
+            g = min(cfg.moe_group_size, T)
+            rules = activation_rules(cfg, mesh, n_moe_groups=T // g)
+
+            def prefill_fn(params, cache, tokens, extras):
+                return prefill(cfg, params, cache, tokens, **extras)
+
+            extras = {}
+            espec = {}
+            if cfg.family == "encdec":
+                extras["encoder_feats"] = batch.pop("encoder_feats")
+                espec["encoder_feats"] = P(("pod", "data") if multi_pod
+                                           else "data", None, None)
+            if cfg.family == "vlm":
+                extras["patch_embeds"] = batch.pop("patch_embeds")
+                espec["patch_embeds"] = P(("pod", "data") if multi_pod
+                                          else "data", None, None)
+            tokens = batch["tokens"]
+            with sharding_rules(rules):
+                jitted = jax.jit(
+                    prefill_fn,
+                    in_shardings=(ns(pspecs), ns(cspecs),
+                                  ns(batch_specs(cfg, mesh,
+                                                 {"t": tokens})["t"]),
+                                  ns(espec)),
+                    donate_argnums=(1,))
+                lowered = jitted.lower(pshape, cshape, tokens, extras)
+            record["model_flops"] = 2 * record["n_active_params"] * T
+        else:  # decode
+            dspec = decode_specs(cfg, shape)
+            cshape = dspec["cache"]
+            cspecs = cache_specs(cfg, mesh, cshape)
+            B = shape.global_batch
+            g = min(cfg.moe_group_size, B)
+            rules = activation_rules(cfg, mesh, n_moe_groups=B // g)
+
+            def decode_fn(params, cache, tokens, pos):
+                return decode_step(cfg, params, cache, tokens, pos)
+
+            tok_spec = batch_specs(cfg, mesh, {"t": dspec["tokens"]})["t"]
+            with sharding_rules(rules):
+                jitted = jax.jit(
+                    decode_fn,
+                    in_shardings=(ns(pspecs), ns(cspecs), ns(tok_spec), None),
+                    donate_argnums=(1,))
+                lowered = jitted.lower(pshape, cshape, dspec["tokens"],
+                                       dspec["pos"])
+            record["model_flops"] = 2 * record["n_active_params"] * B
+    record["lower_s"] = round(time.time() - t0, 2)
+    return record, lowered
+
+
+def compile_cell(record: dict, lowered) -> dict:
+    t0 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t0, 2)
+    try:
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # pragma: no cover
+        record["memory"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        record["cost"] = {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float)) and (
+                              k in ("flops", "transcendentals")
+                              or k.startswith("bytes accessed"))}
+    except Exception as e:  # pragma: no cover
+        record["cost"] = {"error": str(e)}
+    try:
+        record["collectives"] = collective_stats(compiled.as_text())
+    except Exception:
+        record["collectives"] = collective_stats(lowered.as_text())
+    record["status"] = "ok"
+    return record
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             force: bool = False) -> dict:
+    mesh_tag = "multi" if multi_pod else "single"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    try:
+        out = lower_cell(arch, shape_name, multi_pod)
+        if isinstance(out, dict):   # skipped
+            record = out
+        else:
+            record, lowered = out
+            record = compile_cell(record, lowered)
+    except Exception as e:
+        record = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                  "status": "error", "error": f"{type(e).__name__}: {e}"}
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    archs = list_configs() if args.all or not args.arch else [args.arch]
+    archs = [a for a in archs if a != "kratos-dd"]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                r = run_cell(arch, shape, mp, args.out, force=args.force)
+                status = r.get("status")
+                extra = ""
+                if status == "ok":
+                    mem = r.get("memory", {})
+                    per_dev = (mem.get("argument_size_in_bytes", 0)
+                               + mem.get("temp_size_in_bytes", 0))
+                    extra = (f"flops={r.get('cost', {}).get('flops', 0):.3g} "
+                             f"mem/dev={per_dev/2**30:.2f}GiB "
+                             f"coll={r.get('collectives', {}).get('total_bytes', 0)/2**20:.1f}MiB "
+                             f"compile={r.get('compile_s')}s")
+                elif status == "error":
+                    extra = r.get("error", "")[:160]
+                else:
+                    extra = r.get("reason", "")
+                print(f"[{r['arch']:18s} {r['shape']:12s} "
+                      f"{r['mesh']:6s}] {status}: {extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

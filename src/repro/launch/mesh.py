@@ -1,0 +1,19 @@
+"""Production mesh builders (functions, never module-level constants — the
+dry-run must set XLA_FLAGS before anything touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever devices exist right now (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

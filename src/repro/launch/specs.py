@@ -1,0 +1,58 @@
+"""ShapeDtypeStruct stand-ins for every model input — shardable, weak-type
+correct, zero device allocation (the shannon/kernels dry-run pattern)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.layers import dtype_of
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Batch structs for a train/prefill step."""
+    B, S = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": sds((B, S), jnp.int32),
+        "labels": sds((B, S), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        out["patch_embeds"] = sds((B, cfg.n_patches, cfg.d_model),
+                                  dtype_of(cfg.compute_dtype))
+    if cfg.family == "encdec":
+        out["encoder_feats"] = sds((B, cfg.encoder_seq, cfg.d_model),
+                                   dtype_of(cfg.compute_dtype))
+    if shape.kind in ("prefill", "decode"):
+        out.pop("labels")
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Structs for one serve_step: single new token + a filled cache."""
+    from repro.serve.kvcache import init_cache
+
+    B, S = shape.global_batch, shape.seq_len
+    cache_shape = jax.eval_shape(
+        lambda: init_cache(cfg, B, S,
+                           encoder_len=cfg.encoder_seq or None))
+    return {
+        "tokens": sds((B, 1), jnp.int32),
+        "pos": sds((), jnp.int32),
+        "cache": cache_shape,
+    }
+
+
+def params_shape(cfg: ModelConfig):
+    from repro.models.lm import init_params
+
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def count_params(shapes) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))

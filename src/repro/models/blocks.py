@@ -1,0 +1,270 @@
+"""Per-family layer bodies (attention / FFN / MoE / SSD / hybrid).
+
+All blocks operate on one layer's parameter slice (no leading L dim) so the
+LM assembly can ``lax.scan`` over stacked layers.  Caches are pytrees with
+the same convention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .layers import attention, glu_ffn, rms_norm, rope
+
+HUGE_WINDOW = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# attention block (dense/moe/vlm/encdec self-attention)
+# ---------------------------------------------------------------------------
+
+
+def attn_block(cfg: ModelConfig, p, x, positions, window=None, cache=None,
+               cache_index=None, causal=True):
+    """x: [B, S, d].  With ``cache`` (dict k/v [B, T, Hkv, D]) performs
+    cached decode: writes new kv at ``cache_index`` and attends over the
+    prefix.  Returns (out, new_cache)."""
+    B, S, d = x.shape
+    Hq, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, Hq, D)
+    k = k.reshape(B, S, Hkv, D)
+    v = v.reshape(B, S, Hkv, D)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        if "k_scale" in cache:
+            # int8 KV cache: per-(token, head) abs-max quantization; the
+            # cache stores 1 byte/elem + one f32 scale per (token, head)
+            def q8(x):
+                scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1
+                                ) / 127.0
+                scale = jnp.maximum(scale, 1e-8)
+                xq = jnp.round(x.astype(jnp.float32) / scale[..., None]
+                               ).astype(jnp.int8)
+                return xq, scale
+
+            kq, ks = q8(k)
+            vq, vs = q8(v)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], kq, cache_index, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], vq, cache_index, axis=1)
+            cks = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks, cache_index, axis=1)
+            cvs = jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs, cache_index, axis=1)
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+            kd = ck.astype(x.dtype) * cks[..., None].astype(x.dtype)
+            vd = cv.astype(x.dtype) * cvs[..., None].astype(x.dtype)
+        else:
+            kd = ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1)
+            vd = cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1)
+            new_cache = {"k": ck, "v": cv}
+        kv_len = jnp.full((B,), cache_index + S, dtype=jnp.int32)
+        out = attention(cfg, q, kd, vd, causal=causal, window=window,
+                        softcap=cfg.attn_softcap, kv_len=kv_len,
+                        q_positions=positions)
+    else:
+        out = attention(cfg, q, k, v, causal=causal, window=window,
+                        softcap=cfg.attn_softcap)
+    out = out.reshape(B, S, Hq * D) @ p["wo"]
+    if "post_ln" in p:  # gemma2 post-attention norm
+        out = rms_norm(out, p["post_ln"], cfg.rms_eps)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN blocks
+# ---------------------------------------------------------------------------
+
+
+def ffn_block(cfg: ModelConfig, p, x):
+    h = rms_norm(x, p["ln2"], cfg.rms_eps)
+    if cfg.act == "gelu_mlp":
+        out = jax.nn.gelu(h @ p["wi"], approximate=True) @ p["wo_ff"]
+    else:
+        out = glu_ffn(h, p["wi"], p["wo_ff"], cfg.act)
+    if "post_ln2" in p:
+        out = rms_norm(out, p["post_ln2"], cfg.rms_eps)
+    return out
+
+
+def moe_block(cfg: ModelConfig, p, x):
+    """Token-choice top-k routing with per-group capacity (GShard-style
+    einsum dispatch; static shapes).
+
+    The dispatch mask is [groups, g, E, C] with C = g*K*cf/E, so its global
+    footprint is tokens * K * cf * g / g = tokens-linear once sharded over
+    (groups -> data, E -> model); ``constrain`` pins those shardings.
+    """
+    from repro.parallel.api import constrain
+
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    cdt = x.dtype
+    h = rms_norm(x, p["ln2"], cfg.rms_eps)
+    T = B * S
+    g = min(cfg.moe_group_size, T)
+    n_groups = T // g
+    ht = h.reshape(n_groups, g, d)
+    C = max(1, int(g * K / E * cfg.capacity_factor))
+
+    logits = jnp.einsum("ngd,de->nge", ht.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)           # [n, g, K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    # position of each (token, k) within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # [n, g, K, E]
+    pos_in_expert = jnp.cumsum(onehot.reshape(n_groups, g * K, E), axis=1)
+    pos_in_expert = pos_in_expert.reshape(n_groups, g, K, E) * onehot - 1.0
+    slot = (pos_in_expert * onehot).sum(-1)                  # [n, g, K]
+    keep = (slot >= 0) & (slot < C)
+    slot = jnp.clip(slot, 0, C - 1).astype(jnp.int32)
+    slot_oh = jax.nn.one_hot(slot, C, dtype=jnp.float32) * keep[..., None]
+    # dispatch[n, g, E, C] (bf16, sharded data x model)
+    disp = jnp.einsum("ngke,ngkc->ngec", onehot, slot_oh).astype(cdt)
+    disp = constrain(disp, "moe_dispatch")
+    xe = jnp.einsum("ngd,ngec->necd", ht, disp)
+    xe = constrain(xe, "moe_expert_in")
+    # expert FFN: we_i [E, d, 2f], we_o [E, f, d].  With fp8 expert gathers
+    # (§Perf) the weights arrive as f8e4m3 + per-channel scale: the FSDP
+    # all-gather moved 1 byte/elem and we dequantize post-gather, in-layer.
+    we_i, we_o = p["we_i"], p["we_o"]
+    if "we_i_scale" in p:
+        # force the FSDP reshard on the *f8* tensor, then dequantize
+        # locally — otherwise XLA gathers post-dequant at 2 B/elem
+        we_i = constrain(we_i, "moe_expert_w8")
+        we_i = we_i.astype(cdt) * p["we_i_scale"].astype(cdt)
+    if "we_o_scale" in p:
+        we_o = constrain(we_o, "moe_expert_w8")
+        we_o = we_o.astype(cdt) * p["we_o_scale"].astype(cdt)
+    he = jnp.einsum("necd,edf->necf", xe, we_i)
+    gate, up = jnp.split(he, 2, axis=-1)
+    he = (jax.nn.silu(gate.astype(jnp.float32)).astype(cdt) * up)
+    ye = jnp.einsum("necf,efd->necd", he, we_o)
+    ye = constrain(ye, "moe_expert_in")
+    # combine back with gate values
+    comb = jnp.einsum("ngke,ngkc,ngk->ngec", onehot, slot_oh,
+                      gate_vals).astype(cdt)
+    comb = constrain(comb, "moe_dispatch")
+    yt = jnp.einsum("necd,ngec->ngd", ye, comb)
+    out = yt.reshape(B, S, d).astype(x.dtype)
+    # shared experts (always-on)
+    if cfg.n_shared_experts > 0:
+        out = out + glu_ffn(h, p["ws_i"], p["ws_o"], "swiglu")
+    # load-balance aux loss (Switch-style), returned via side channel
+    me = probs.mean(axis=(0, 1))
+    ce = onehot.mean(axis=(0, 1, 2))
+    aux = E * jnp.sum(me * ce)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# SSD (Mamba-2) block
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv along time.  x: [B, S, C]; w: [Kc, C].
+    With ``state`` [B, Kc-1, C] performs streaming conv; returns new state."""
+    Kc = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], Kc - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(Kc))
+    new_state = xp[:, -(Kc - 1):, :] if Kc > 1 else None
+    return out, new_state
+
+
+def ssd_block(cfg: ModelConfig, p, x, cache=None):
+    """Mamba-2 SSD mixer.  cache (decode): {"conv": [B,Kc-1,HP], "ssm":
+    [B,H,P,N]}."""
+    B, S, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    proj = h @ p["in_proj"]     # [B,S, HP + HP + N + N + H]
+    zx, xin, Bm, Cm, dt = jnp.split(
+        proj, [H * P, 2 * H * P, 2 * H * P + N, 2 * H * P + 2 * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                  # [H]
+    new_cache = {}
+    conv_state = cache.get("conv") if cache else None
+    xin, new_conv = _causal_conv(xin, p["conv_w"], conv_state)
+    xin = jax.nn.silu(xin.astype(jnp.float32)).astype(x.dtype)
+    xh = xin.reshape(B, S, H, P)
+    if cache is not None:
+        # recurrent decode: S small (usually 1)
+        hst = cache["ssm"].astype(jnp.float32)   # [B,H,P,N]
+
+        def step(hst, t):
+            decay = jnp.exp(A[None, :] * dt[:, t])          # [B,H]
+            upd = (dt[:, t, :, None] * xh[:, t].astype(jnp.float32)
+                   )[..., None] * Bm[:, t, None, None, :].astype(jnp.float32)
+            hst = hst * decay[..., None, None] + upd
+            y = jnp.einsum("bhpn,bn->bhp", hst, Cm[:, t].astype(jnp.float32))
+            return hst, y
+
+        hst, ys = jax.lax.scan(step, hst, jnp.arange(S))
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, H * P)
+        new_cache = {"conv": new_conv, "ssm": hst}
+    else:
+        if cfg.use_kernels:
+            from repro.kernels import ops
+
+            y = ops.ssd_scan(xh, dt.transpose(0, 1, 2), A, Bm, Cm)
+        elif cfg.ssd_chunk and S % cfg.ssd_chunk == 0 and S > cfg.ssd_chunk:
+            from repro.kernels import ref
+
+            # chunked dual form: L/chunk scan steps of dense matmuls
+            # instead of L serial recurrences (§Perf cell 3)
+            y = ref.ssd_scan_chunked_ref(xh, dt, A, Bm, Cm,
+                                         chunk=cfg.ssd_chunk)
+        else:
+            from repro.kernels import ref
+
+            y = ref.ssd_scan_ref(xh, dt, A, Bm, Cm)
+        y = y.reshape(B, S, H * P)
+        new_cache = None
+    y = y + xh.reshape(B, S, H * P) * p["d_skip"].astype(x.dtype).repeat(P)
+    y = y.astype(x.dtype) * jax.nn.silu(zx.astype(jnp.float32)).astype(x.dtype)
+    out = rms_norm(y, p["out_ln"], cfg.rms_eps) @ p["out_proj"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# hybrid (Hymba): parallel attention + SSD heads
+# ---------------------------------------------------------------------------
+
+
+def hybrid_block(cfg: ModelConfig, p, x, positions, window, cache=None,
+                 cache_index=None):
+    attn_out, new_kv = attn_block(cfg, p, x, positions, window=window,
+                                  cache=cache.get("kv") if cache else None,
+                                  cache_index=cache_index)
+    ssd_out, new_ssm = ssd_block(cfg, p, x,
+                                 cache=cache.get("ssd") if cache else None)
+    # Hymba: per-branch normalization then mean fusion
+    fused = 0.5 * (rms_norm(attn_out, p["fuse_ln_a"], cfg.rms_eps)
+                   + rms_norm(ssd_out, p["fuse_ln_s"], cfg.rms_eps))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"kv": new_kv, "ssd": new_ssm}
+    return fused, new_cache

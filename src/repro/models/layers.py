@@ -1,0 +1,155 @@
+"""Model primitives (pure JAX, pytree params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def rms_norm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """x: [..., S, H, D]; positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs[None, :]
+    cos = jnp.cos(ang)[..., :, None, :]   # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                  scale=None, kv_len=None, q_positions=None):
+    """Masked multi-head attention on [B, S, H, D] layout with GQA.
+
+    ``kv_len``: optional [B] active cache lengths (decode).  ``q_positions``:
+    optional [B, Sq] absolute positions of queries (decode).
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    T = k.shape[1]
+    if scale is None:
+        scale = D ** -0.5
+    qh = q.reshape(B, Sq, Hkv, G, D)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if q_positions is None:
+        qpos = jnp.arange(Sq)[None, :] + (T - Sq)
+        qpos = jnp.broadcast_to(qpos, (B, Sq))
+    else:
+        qpos = q_positions
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((B, Sq, T), dtype=bool)
+    if causal:
+        mask = mask & (kpos[:, None, :] <= qpos[:, :, None])
+    if window is not None:
+        mask = mask & (kpos[:, None, :] > qpos[:, :, None] - window)
+    if kv_len is not None:
+        mask = mask & (kpos[:, None, :] < kv_len[:, None, None])
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def local_chunked_attention(q, k, v, window: int, *, softcap=None,
+                            scale=None):
+    """Exact sliding-window causal attention, computed block-locally.
+
+    Scores are only formed for (query block, same + previous key block):
+    O(S * 2w) instead of O(S^2) — flops and peak memory drop by S/(2w).
+    Requires S % window == 0 (train/prefill path with static window).
+    """
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    w = window
+    nb = S // w
+    if scale is None:
+        scale = D ** -0.5
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    qb = q.reshape(B, nb, w, Hq, D)
+    kb = kk.reshape(B, nb, w, Hq, D)
+    vb = vv.reshape(B, nb, w, Hq, D)
+    # previous block (zeros before block 0)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kb], axis=2)       # [B, nb, 2w, Hq, D]
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    logits = jnp.einsum("bnqhd,bnkhd->bnhqk", qb.astype(jnp.float32),
+                        k2.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(w)[:, None] + w                # within-pair position
+    kpos = jnp.arange(2 * w)[None, :]
+    blk = jnp.arange(nb)
+    valid = (kpos <= qpos) & (kpos > qpos - w)
+    # block 0 has no previous block
+    first = (kpos >= w) & (kpos <= qpos) & (kpos > qpos - w)
+    mask = jnp.where(blk[:, None, None] == 0, first[None], valid[None])
+    logits = jnp.where(mask[None, :, None, :, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bnhqk,bnkhd->bnqhd", p, v2.astype(jnp.float32))
+    return out.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+def attention(cfg: ModelConfig, q, k, v, **kw):
+    window = kw.get("window")
+    if (cfg.chunked_local_attn and isinstance(window, int)
+            and kw.get("kv_len") is None and q.shape[1] == k.shape[1]
+            and window * 2 <= q.shape[1] and q.shape[1] % window == 0
+            and kw.get("causal", True)):
+        return local_chunked_attention(q, k, v, window,
+                                       softcap=kw.get("softcap"),
+                                       scale=kw.get("scale"))
+    if cfg.use_kernels:
+        from repro.kernels import ops
+
+        # kernels use [B, H, S, D] layout
+        out = ops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=kw.get("causal", True),
+            window=kw.get("window"), softcap=kw.get("softcap"),
+            scale=kw.get("scale"))
+        return out.transpose(0, 2, 1, 3)
+    return attention_ref(q, k, v, **kw)
+
+
+def glu_ffn(x, wi, wo, act: str):
+    """wi: [d, 2F] fused gate+up; wo: [F, d]."""
+    h = x @ wi
+    gate, up = jnp.split(h, 2, axis=-1)
+    if act == "swiglu":
+        g = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    elif act == "geglu":
+        g = jax.nn.gelu(gate.astype(jnp.float32), approximate=True
+                        ).astype(x.dtype)
+    else:
+        raise ValueError(act)
+    return (g * up) @ wo
+
+
+def init_dense(key, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    if scale is None:
+        scale = fan_in ** -0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale
+            ).astype(dtype)

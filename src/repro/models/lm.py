@@ -1,0 +1,345 @@
+"""Decoder-LM assembly: init / forward / cached decode for every family.
+
+Layers are stacked along a leading L axis and traversed with ``lax.scan``
+(compact HLO, essential for 512-device CPU dry-run compiles).  MoE models
+split their leading dense layers (deepseek/kimi style) into a separate
+stack.  Remat wraps the scanned body when ``cfg.remat``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.api import constrain
+
+from . import blocks
+from .blocks import HUGE_WINDOW
+from .layers import dtype_of, init_dense, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_windows(cfg: ModelConfig, n: int, offset: int = 0):
+    """Per-layer attention window (HUGE_WINDOW = global).
+
+    Returns a plain numpy array: static for the unrolled path, and scan
+    accepts numpy xs directly for the stacked path."""
+    import numpy as np
+
+    w = np.full(n, HUGE_WINDOW, dtype=np.int32)
+    if cfg.local_window:
+        if cfg.layer_pattern == "lg":       # gemma2: local, global alternating
+            for i in range(n):
+                if (i + offset) % 2 == 0:
+                    w[i] = cfg.local_window
+        else:                                # hymba-style: all local but a few
+            for i in range(n):
+                if (i + offset) not in (0, n // 2, n - 1):
+                    w[i] = cfg.local_window
+    return w
+
+
+def _init_attn(key, cfg: ModelConfig, L: int, dt) -> dict:
+    d, Hq, Hkv, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln1": jnp.zeros((L, d), dt),
+        "wq": init_dense(ks[0], (L, d, Hq * D), dt),
+        "wk": init_dense(ks[1], (L, d, Hkv * D), dt),
+        "wv": init_dense(ks[2], (L, d, Hkv * D), dt),
+        "wo": init_dense(ks[3], (L, Hq * D, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((L, Hq * D), dt)
+        p["bk"] = jnp.zeros((L, Hkv * D), dt)
+        p["bv"] = jnp.zeros((L, Hkv * D), dt)
+    if cfg.name.startswith("gemma2"):
+        p["post_ln"] = jnp.zeros((L, d), dt)
+    return p
+
+
+def _init_ffn(key, cfg: ModelConfig, L: int, dt) -> dict:
+    d, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    p = {"ln2": jnp.zeros((L, d), dt)}
+    if cfg.act == "gelu_mlp":
+        p["wi"] = init_dense(ks[0], (L, d, F), dt)
+    else:
+        p["wi"] = init_dense(ks[0], (L, d, 2 * F), dt)
+    p["wo_ff"] = init_dense(ks[1], (L, F, d), dt)
+    if cfg.name.startswith("gemma2"):
+        p["post_ln2"] = jnp.zeros((L, d), dt)
+    return p
+
+
+def _init_moe_ffn(key, cfg: ModelConfig, L: int, dt) -> dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln2": jnp.zeros((L, d), dt),
+        "router": init_dense(ks[0], (L, d, E), dt),
+        "we_i": init_dense(ks[1], (L, E, d, 2 * f), dt),
+        "we_o": init_dense(ks[2], (L, E, f, d), dt),
+    }
+    if cfg.n_shared_experts > 0:
+        fs = f * cfg.n_shared_experts
+        k1, k2 = jax.random.split(ks[3])
+        p["ws_i"] = init_dense(k1, (L, d, 2 * fs), dt)
+        p["ws_o"] = init_dense(k2, (L, fs, d), dt)
+    return p
+
+
+def _init_ssd(key, cfg: ModelConfig, L: int, dt) -> dict:
+    d, H, P, N = cfg.d_model, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    proj_out = 2 * H * P + 2 * N + H
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros((L, d), dt),
+        "in_proj": init_dense(ks[0], (L, d, proj_out), dt),
+        "conv_w": init_dense(ks[1], (L, cfg.conv_kernel, H * P), dt, scale=0.5),
+        "dt_bias": jnp.zeros((L, H), jnp.float32),
+        "a_log": jnp.zeros((L, H), jnp.float32),
+        "d_skip": jnp.ones((L, H), jnp.float32) * 0.0,
+        "out_ln": jnp.zeros((L, H * P), dt),
+        "out_proj": init_dense(ks[2], (L, H * P, d), dt),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg.param_dtype)
+    d, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": init_dense(keys[0], (V, d), dt, scale=1.0),
+        "ln_f": jnp.zeros((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(keys[1], (d, V), dt)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["blocks"] = {**_init_attn(keys[2], cfg, L, dt),
+                            **_init_ffn(keys[3], cfg, L, dt)}
+    elif fam == "moe":
+        nd = cfg.n_dense_layers
+        nm = L - nd
+        if nd:
+            params["dense_blocks"] = {**_init_attn(keys[2], cfg, nd, dt),
+                                      **_init_ffn(keys[3], cfg, nd, dt)}
+        params["blocks"] = {**_init_attn(keys[4], cfg, nm, dt),
+                            **_init_moe_ffn(keys[5], cfg, nm, dt)}
+    elif fam == "ssm":
+        params["blocks"] = _init_ssd(keys[2], cfg, L, dt)
+    elif fam == "hybrid":
+        p = {**_init_attn(keys[2], cfg, L, dt),
+             **_init_ssd(keys[3], cfg, L, dt),
+             **_init_ffn(keys[4], cfg, L, dt)}
+        p["fuse_ln_a"] = jnp.zeros((L, d), dt)
+        p["fuse_ln_s"] = jnp.zeros((L, d), dt)
+        params["blocks"] = p
+    elif fam == "encdec":
+        Le = cfg.n_encoder_layers
+        params["enc_blocks"] = {**_init_attn(keys[2], cfg, Le, dt),
+                                **_init_ffn(keys[3], cfg, Le, dt)}
+        dec = {**_init_attn(keys[4], cfg, L, dt),
+               **_init_ffn(keys[5], cfg, L, dt)}
+        # cross attention
+        ks = jax.random.split(keys[6], 5)
+        D = cfg.hd
+        dec.update({
+            "x_ln": jnp.zeros((L, d), dt),
+            "x_wq": init_dense(ks[0], (L, d, cfg.n_heads * D), dt),
+            "x_wk": init_dense(ks[1], (L, d, cfg.n_kv_heads * D), dt),
+            "x_wv": init_dense(ks[2], (L, d, cfg.n_kv_heads * D), dt),
+            "x_wo": init_dense(ks[3], (L, cfg.n_heads * D, d), dt),
+        })
+        params["blocks"] = dec
+        params["enc_ln_f"] = jnp.zeros((d,), dt)
+    else:
+        raise ValueError(fam)
+    if fam == "vlm":
+        # stub anyres frontend: a single projection for precomputed patches
+        params["patch_proj"] = init_dense(keys[7], (d, d), dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (teacher-forced; used by train and prefill)
+# ---------------------------------------------------------------------------
+
+
+def _scan_blocks(cfg: ModelConfig, body, x, stacked, extra=None, length=None):
+    """Apply ``body(carry_x, layer_params[, per_layer_extra])`` over layers.
+
+    Default: ``lax.scan`` over stacked params (compact HLO).  With
+    ``cfg.unroll_layers`` the layers run as a python loop so per-layer
+    attributes (the attention window) are *static* — the prerequisite for
+    the chunked sliding-window path (§Perf)."""
+    if cfg.unroll_layers:
+        import numpy as np
+
+        ex = None if extra is None else [int(v) for v in np.asarray(extra)]
+        b = body
+        if cfg.remat:
+            b = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable,
+                static_argnums=(2,) if extra is not None else ())
+        L = jax.tree.leaves(stacked)[0].shape[0]
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(L):
+            sl = jax.tree.map(lambda a: a[i], stacked)
+            args = (sl,) if ex is None else (sl, ex[i])
+            x, a = b(x, *args)
+            aux = aux + a
+        return x, aux[None]
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    xs = (stacked, extra) if extra is not None else (stacked,)
+    out, aux = jax.lax.scan(lambda c, s: body(c, *s), x, xs, length=length)
+    return out, aux
+
+
+def _dense_body(cfg: ModelConfig, positions):
+    def body(x, p, window):
+        a, _ = blocks.attn_block(cfg, p, x, positions, window=window)
+        x = x + a
+        x = x + blocks.ffn_block(cfg, p, x)
+        x = constrain(x, "activation")
+        return x, jnp.zeros((), jnp.float32)
+
+    return body
+
+
+def _moe_body(cfg: ModelConfig, positions):
+    def body(x, p, window):
+        a, _ = blocks.attn_block(cfg, p, x, positions, window=window)
+        x = x + a
+        m, aux = blocks.moe_block(cfg, p, x)
+        x = x + m
+        x = constrain(x, "activation")
+        return x, aux
+
+    return body
+
+
+def _ssm_body(cfg: ModelConfig):
+    def body(x, p):
+        s, _ = blocks.ssd_block(cfg, p, x)
+        x = x + s
+        x = constrain(x, "activation")
+        return x, jnp.zeros((), jnp.float32)
+
+    return body
+
+
+def _hybrid_body(cfg: ModelConfig, positions):
+    def body(x, p, window):
+        f, _ = blocks.hybrid_block(cfg, p, x, positions, window)
+        x = x + f
+        x = x + blocks.ffn_block(cfg, p, x)
+        x = constrain(x, "activation")
+        return x, jnp.zeros((), jnp.float32)
+
+    return body
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens):
+    emb = params["embed"][tokens]
+    if cfg.name.startswith("gemma"):
+        emb = emb * (cfg.d_model ** 0.5)
+    return emb.astype(dtype_of(cfg.compute_dtype))
+
+
+def unembed(cfg: ModelConfig, params, x):
+    x = rms_norm(x, params["ln_f"], cfg.rms_eps)
+    w = params.get("lm_head")
+    if w is None:
+        w = params["embed"].T
+    logits = x @ w.astype(x.dtype)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.logit_softcap).astype(x.dtype)
+    return logits
+
+
+def forward(cfg: ModelConfig, params, tokens, *, patch_embeds=None,
+            encoder_feats=None, return_hidden=False):
+    """Teacher-forced forward pass -> hidden states [B, S, d] (pre-unembed).
+
+    ``patch_embeds`` [B, P, d] (vlm): prepended to the token embeddings.
+    ``encoder_feats`` [B, T, d] (encdec): precomputed frame embeddings fed
+    through the encoder stack; the decoder cross-attends to the result.
+    """
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.family == "vlm" and patch_embeds is not None:
+        pe = patch_embeds.astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = constrain(x, "activation")
+
+    enc_out = None
+    if cfg.family == "encdec":
+        assert encoder_feats is not None
+        enc = encoder_feats.astype(x.dtype)
+        Be, Te, _ = enc.shape
+        enc_pos = jnp.broadcast_to(jnp.arange(Te)[None, :], (Be, Te))
+
+        def enc_body(h, p):
+            a, _ = blocks.attn_block(cfg, p, h, enc_pos, causal=False)
+            h = h + a
+            h = h + blocks.ffn_block(cfg, p, h)
+            return h, jnp.zeros((), jnp.float32)
+
+        enc, _ = _scan_blocks(cfg, enc_body, enc, params["enc_blocks"])
+        enc_out = rms_norm(enc, params["enc_ln_f"], cfg.rms_eps)
+
+        def dec_body(h, p):
+            a, _ = blocks.attn_block(cfg, p, h, positions)
+            h = h + a
+            h = h + _cross_attn(cfg, p, h, enc_out)
+            h = h + blocks.ffn_block(cfg, p, h)
+            return h, jnp.zeros((), jnp.float32)
+
+        x, _ = _scan_blocks(cfg, dec_body, x, params["blocks"])
+        aux = jnp.zeros((), jnp.float32)
+    elif cfg.family == "ssm":
+        x, auxs = _scan_blocks(cfg, _ssm_body(cfg), x, params["blocks"])
+        aux = auxs.sum()
+    else:
+        windows = _layer_windows(
+            cfg, cfg.n_layers - (cfg.n_dense_layers if cfg.family == "moe"
+                                 else 0),
+            offset=cfg.n_dense_layers if cfg.family == "moe" else 0)
+        if cfg.family == "moe" and cfg.n_dense_layers:
+            wd = _layer_windows(cfg, cfg.n_dense_layers)
+            x, _ = _scan_blocks(cfg, _dense_body(cfg, positions), x,
+                                params["dense_blocks"], extra=wd)
+        body = {"dense": _dense_body, "vlm": _dense_body,
+                "moe": _moe_body, "hybrid": _hybrid_body}[cfg.family]
+        x, auxs = _scan_blocks(cfg, body(cfg, positions), x,
+                               params["blocks"], extra=windows)
+        aux = auxs.sum()
+    if return_hidden:
+        return x, aux
+    return unembed(cfg, params, x), aux
+
+
+def _cross_attn(cfg: ModelConfig, p, x, enc):
+    from .layers import attention_ref
+
+    B, S, d = x.shape
+    Hq, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, p["x_ln"], cfg.rms_eps)
+    q = (h @ p["x_wq"]).reshape(B, S, Hq, D)
+    k = (enc @ p["x_wk"]).reshape(B, -1, Hkv, D)
+    v = (enc @ p["x_wv"]).reshape(B, -1, Hkv, D)
+    out = attention_ref(q, k, v, causal=False)
+    return out.reshape(B, S, Hq * D) @ p["x_wo"]

@@ -1,0 +1,82 @@
+"""Pipeline parallelism: GPipe-style microbatch pipeline over a mesh axis.
+
+``pipeline_apply`` runs a layer-stack split into S stages over the ``stage``
+mesh axis: microbatches enter stage 0, activations hop stage→stage via
+``lax.ppermute``, and results drain from the last stage.  The schedule is
+the classic (n_mb + S − 1)-tick wavefront; bubble fraction (S−1)/(n_mb+S−1).
+
+This is the building block for mapping the ``pod`` axis of the production
+mesh to pipeline stages (inter-pod DCI links carry only microbatch
+activations instead of FSDP parameter traffic — the right trade when the
+cross-pod bandwidth is the binding term).  Used by
+``examples``/``tests/parallel`` on a host mesh; forward (inference /
+activation-recompute) schedule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def pipeline_apply(stage_fn: Callable, params_stacked, x_microbatches,
+                   mesh: Mesh, axis: str = "stage"):
+    """Run ``y = stage_{S-1}(...stage_0(x))`` as a GPipe wavefront.
+
+    stage_fn(stage_params, h) -> h            (same shape in/out)
+    params_stacked: pytree with leading dim S, sharded over ``axis``
+    x_microbatches: [n_mb, mb, ...] (replicated)
+    returns: [n_mb, mb, ...] outputs (replicated; produced by last stage)
+    """
+    S = mesh.shape[axis]
+    n_mb = x_microbatches.shape[0]
+    n_ticks = n_mb + S - 1
+    perm = [(i, (i + 1) % S) for i in range(S)]
+
+    def per_stage(params_local, xs_local):
+        # params_local: leading dim 1 (this stage's slice)
+        p = jax.tree.map(lambda a: a[0], params_local)
+        sid = jax.lax.axis_index(axis)
+        h = jnp.zeros_like(xs_local[0])
+        outs = jnp.zeros_like(xs_local)
+
+        def tick(carry, t):
+            h, outs = carry
+            # stage 0 injects microbatch t (if any remain)
+            mb_idx = jnp.clip(t, 0, n_mb - 1)
+            inject = xs_local[mb_idx]
+            h_in = jnp.where(sid == 0, inject, h)
+            h_out = stage_fn(p, h_in)
+            # valid computation at stage s during ticks [s, s + n_mb)
+            valid = (t >= sid) & (t < sid + n_mb)
+            h_out = jnp.where(valid, h_out, h)
+            # last stage drains: store output for microbatch (t - (S-1))
+            out_idx = jnp.clip(t - (S - 1), 0, n_mb - 1)
+            take = (sid == S - 1) & (t >= S - 1)
+            outs = jax.lax.cond(
+                take,
+                lambda o: o.at[out_idx].set(h_out),
+                lambda o: o,
+                outs)
+            # hand activation to the next stage
+            h_next = jax.lax.ppermute(h_out, axis, perm)
+            return (h_next, outs), None
+
+        (h, outs), _ = jax.lax.scan(tick, (h, outs), jnp.arange(n_ticks))
+        # broadcast final outputs from the last stage (all others hold
+        # zeros, so a psum is an exact broadcast)
+        outs = jax.lax.psum(outs, axis)
+        return outs
+
+    spec_p = jax.tree.map(lambda _: P(axis), params_stacked)
+    fn = jax.shard_map(per_stage, mesh=mesh,
+                       in_specs=(spec_p, P()), out_specs=P(),
+                       check_vma=False)
+    return fn(params_stacked, x_microbatches)
+
+
+def bubble_fraction(n_microbatches: int, n_stages: int) -> float:
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)

@@ -1,0 +1,217 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs per (cfg, mesh).
+
+Strategy (MaxText-style 2-D + optional pod axis):
+
+* ``model`` axis — tensor parallelism: attention heads, FFN hidden, expert
+  axis (EP), vocab (when divisible).
+* ``data`` axis (x ``pod`` when present) — batch data parallelism *and*
+  FSDP-style parameter sharding on the d_model dimension: XLA inserts the
+  per-layer all-gathers (scan keeps them one-layer-sized).
+* dims that do not divide the axis size stay replicated — the rule table is
+  computed, not hand-written per arch (hymba's 3257-wide SSD projection,
+  51865-token Whisper vocab, batch-1 long-context decode all fall out).
+
+``decode`` caches shard heads over ``model`` when divisible, else the time
+axis; batch goes to ``data`` when divisible, else time.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _div(dim: int, mesh: Mesh, axes):
+    """axes if dim divides the axis product, else None (replicate)."""
+    return axes if dim % max(1, axis_size(mesh, axes)) == 0 else None
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape) -> Any:
+    """Build a PartitionSpec tree matching ``jax.eval_shape(init_params)``."""
+    DP = dp_axes(mesh)
+    M = "model"
+
+    def spec_for(path: str, shp) -> P:
+        dims = list(shp.shape)
+        nd = len(dims)
+        leaf = path.split("/")[-1]
+        L = (None,) if nd >= 1 else ()
+
+        def last2(a, b):
+            """spec with the last two dims sharded (a, b), L-prefixed."""
+            pre = [None] * (nd - 2)
+            return P(*pre, a, b)
+
+        if leaf == "embed":
+            return P(_div(dims[0], mesh, M), _div(dims[1], mesh, DP))
+        if leaf in ("lm_head", "patch_proj"):
+            return P(_div(dims[0], mesh, DP), _div(dims[1], mesh, M))
+        if nd <= 2:   # norms, scalars, per-layer vectors
+            return P(*([None] * nd))
+        if leaf in ("wq", "wk", "wv", "x_wq", "x_wk", "x_wv", "wi", "ws_i",
+                    "in_proj"):
+            return last2(_div(dims[-2], mesh, DP), _div(dims[-1], mesh, M))
+        if leaf in ("wo", "x_wo", "wo_ff", "ws_o", "out_proj"):
+            return last2(_div(dims[-2], mesh, M), _div(dims[-1], mesh, DP))
+        if leaf == "router":
+            return last2(_div(dims[-2], mesh, DP), _div(dims[-1], mesh, M))
+        if leaf == "we_i":   # [L, E, d, 2f]
+            return P(None, _div(dims[1], mesh, M), _div(dims[2], mesh, DP),
+                     None)
+        if leaf == "we_o":   # [L, E, f, d]
+            return P(None, _div(dims[1], mesh, M), None,
+                     _div(dims[3], mesh, DP))
+        if leaf == "conv_w":  # [L, Kc, HP]
+            return P(None, None, _div(dims[-1], mesh, M))
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        specs.append(spec_for(key, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_specs(cfg: ModelConfig, mesh: Mesh, pspecs, opt_shape) -> Any:
+    """Optimizer-state specs: moments mirror their parameter's spec;
+    factored adafactor stats drop the corresponding dim."""
+    is_spec = lambda x: isinstance(x, P)
+    flat_p, _ = jax.tree_util.tree_flatten_with_path(pspecs, is_leaf=is_spec)
+    by_key = {}
+    for path, spec in flat_p:
+        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        by_key[key] = spec
+
+    def lookup(key: str) -> P | None:
+        return by_key.get(key)
+
+    flat_o, treedef = jax.tree_util.tree_flatten_with_path(opt_shape)
+    out = []
+    for path, leaf in flat_o:
+        keys = [str(getattr(p, "key", p)) for p in path]
+        if keys and keys[0] in ("mu", "nu", "v"):
+            rest = keys[1:]
+            tail = None
+            if rest and rest[-1] in ("vr", "vc", "v"):
+                tail = rest[-1]
+                rest = rest[:-1]
+            pk = "/".join(rest)
+            base = lookup(pk)
+            if base is None:
+                out.append(P(*([None] * leaf.ndim)))
+            elif tail == "vr":      # param dims minus last
+                out.append(P(*list(base)[:-1]))
+            elif tail == "vc":      # param dims minus second-to-last
+                out.append(P(*(list(base)[:-2] + list(base)[-1:])))
+            else:
+                out.append(base)
+        else:
+            out.append(P(*([None] * leaf.ndim)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache / activation specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch_shape) -> Any:
+    DP = dp_axes(mesh)
+
+    def spec_for(leaf):
+        dims = leaf.shape
+        b = _div(dims[0], mesh, DP)
+        return P(b, *([None] * (len(dims) - 1)))
+
+    return jax.tree_util.tree_map(spec_for, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shape) -> Any:
+    DP = dp_axes(mesh)
+    M = "model"
+
+    def spec_for(path, leaf):
+        key = str(getattr(path[-1], "key", path[-1]))
+        dims = list(leaf.shape)
+        if key in ("k", "v", "xk", "xv"):       # [L, B, T, Hkv, D]
+            b = _div(dims[1], mesh, DP)
+            h = _div(dims[3], mesh, M)
+            # the time axis picks up whatever axes remain unused and divide
+            # it (sequence-parallel KV: batch-1 long-context, odd head counts)
+            t_axes: list = []
+            if b is None and dims[2] % axis_size(mesh, DP) == 0:
+                t_axes += list(DP)
+            if h is None and dims[2] % (
+                    axis_size(mesh, tuple(t_axes)) * mesh.shape[M]) == 0:
+                t_axes.append(M)
+            t = tuple(t_axes) if t_axes else None
+            return P(None, b, t, h, None)
+        if key in ("k_scale", "v_scale"):         # [L, B, T, Hkv]
+            b = _div(dims[1], mesh, DP)
+            h = _div(dims[3], mesh, M)
+            t_axes: list = []
+            if b is None and dims[2] % axis_size(mesh, DP) == 0:
+                t_axes += list(DP)
+            if h is None and dims[2] % (
+                    axis_size(mesh, tuple(t_axes)) * mesh.shape[M]) == 0:
+                t_axes.append(M)
+            t = tuple(t_axes) if t_axes else None
+            return P(None, b, t, h)
+        if key == "ssm":                          # [L, B, H, P, N]
+            return P(None, _div(dims[1], mesh, DP),
+                     _div(dims[2], mesh, M), None, None)
+        if key == "conv":                         # [L, B, Kc-1, HP]
+            return P(None, _div(dims[1], mesh, DP), None,
+                     _div(dims[3], mesh, M))
+        return P(*([None] * len(dims)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
+def activation_rules(cfg: ModelConfig, mesh: Mesh, *, n_moe_groups: int = 0):
+    """Rule table for :func:`repro.parallel.api.constrain`."""
+    DP = dp_axes(mesh)
+    M = "model"
+    rules = {
+        "activation": named(mesh, P(DP, None, None)),
+    }
+    if cfg.is_moe:
+        n_ax = DP if (n_moe_groups and
+                      n_moe_groups % axis_size(mesh, DP) == 0) else None
+        rules["moe_dispatch"] = named(mesh, P(n_ax, None, M, None))
+        rules["moe_expert_in"] = named(mesh, P(n_ax, M, None, None))
+        # fp8 expert gather (§Perf): gather the f8 tensor over the data
+        # axis (E stays on model), dequant locally afterwards
+        rules["moe_expert_w8"] = named(mesh, P(M, None, None))
+    return rules

@@ -1,0 +1,65 @@
+"""Double-Duty bitplane quantization: the paper's unrolled constant-weight
+multiplication as a TPU feature.
+
+``quantize_bitplanes`` decomposes a weight matrix into b binary planes +
+per-column scale (two's-complement, top plane weighted -2^(b-1)) — exactly
+the selector-bit decomposition of §IV, with the compressor-tree reduction
+replaced by the MXU+VPU double-duty kernel
+(:mod:`repro.kernels.bitplane_matmul`).
+
+``sparsity()`` reports the fraction of zero selector bits — the quantity the
+paper's row-skip optimization exploits; on TPU it predicts achievable
+skipping when planes are all-zero (plane-level sparsity).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_bitplanes(w: jax.Array, bits: int = 4):
+    """w [K, N] float -> (planes [bits, K, N] in {0,1}, scale [N])."""
+    maxq = 2.0 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.abs(w).max(axis=0), 1e-8) / maxq
+    q = jnp.clip(jnp.round(w / scale[None, :]), -(maxq + 1), maxq)
+    q_uint = (q.astype(jnp.int32) % (1 << bits)).astype(jnp.uint32)
+    planes = jnp.stack([(q_uint >> b) & 1 for b in range(bits)]
+                       ).astype(jnp.float32)
+    return planes, scale.astype(jnp.float32)
+
+
+def dequantize(planes: jax.Array, scale: jax.Array) -> jax.Array:
+    B = planes.shape[0]
+    w = jnp.zeros(planes.shape[1:], jnp.float32)
+    for b in range(B):
+        coeff = -(2.0 ** (B - 1)) if b == B - 1 else 2.0 ** b
+        w = w + coeff * planes[b]
+    return w * scale[None, :]
+
+
+def bitplane_linear(x: jax.Array, planes: jax.Array, scale: jax.Array,
+                    use_pallas: bool = True) -> jax.Array:
+    """y = x @ W_quant via the double-duty kernel."""
+    from repro.kernels import ops
+
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1]).astype(jnp.float32)
+    y = ops.bitplane_matmul(x2, planes, scale, use_pallas=use_pallas)
+    return y.reshape(shp[:-1] + (planes.shape[-1],))
+
+
+def plane_sparsity(planes: jax.Array) -> jax.Array:
+    """Fraction of zero selector bits (the paper's row-skip opportunity)."""
+    return 1.0 - planes.mean()
+
+
+def quantize_tree(params, bits: int = 4, min_size: int = 1 << 16):
+    """Quantize every large 2-D weight in a pytree; returns
+    (quantized pytree of {"planes","scale"}, skeleton with passthroughs)."""
+    def q(p):
+        if p.ndim == 2 and p.size >= min_size:
+            planes, scale = quantize_bitplanes(p.astype(jnp.float32), bits)
+            return {"planes": planes, "scale": scale}
+        return p
+
+    return jax.tree.map(q, params)

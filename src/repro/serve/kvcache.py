@@ -1,0 +1,37 @@
+"""KV / SSM cache containers for cached decode."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dtype_of
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               encoder_len: int | None = None) -> dict:
+    """Allocate the decode cache pytree (leading L axis, scan-friendly)."""
+    dt = dtype_of(cfg.compute_dtype)
+    kv_int8 = cfg.kv_cache_dtype == "int8"
+    kdt = jnp.int8 if kv_int8 else dt
+    L, Hkv, D = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    Kc = cfg.conv_kernel
+    cache: dict = {}
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "encdec", "hybrid"):
+        cache["k"] = jnp.zeros((L, batch, max_len, Hkv, D), kdt)
+        cache["v"] = jnp.zeros((L, batch, max_len, Hkv, D), kdt)
+        if kv_int8:
+            # per (token, head) abs-max scales
+            cache["k_scale"] = jnp.zeros((L, batch, max_len, Hkv),
+                                         jnp.float32)
+            cache["v_scale"] = jnp.zeros((L, batch, max_len, Hkv),
+                                         jnp.float32)
+    if fam in ("ssm", "hybrid"):
+        cache["conv"] = jnp.zeros((L, batch, Kc - 1, H * P), dt)
+        cache["ssm"] = jnp.zeros((L, batch, H, P, N), jnp.float32)
+    if fam == "encdec":
+        Te = encoder_len or cfg.encoder_seq
+        cache["xk"] = jnp.zeros((L, batch, Te, Hkv, D), dt)
+        cache["xv"] = jnp.zeros((L, batch, Te, Hkv, D), dt)
+    return cache

@@ -1,0 +1,37 @@
+"""Losses: sequence-chunked cross entropy (keeps the [B,S,V] logits tensor
+from ever materializing for 150k-256k vocabularies)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import unembed
+
+PAD_ID = 0
+
+
+def chunked_xent(cfg: ModelConfig, params, hidden, labels,
+                 mask=None) -> jax.Array:
+    """hidden [B, S, d] -> mean CE against labels [B, S] in seq chunks."""
+    B, S, _ = hidden.shape
+    chunk = min(cfg.loss_chunk, S)
+    n = S // chunk
+    if mask is None:
+        mask = (labels != PAD_ID).astype(jnp.float32)
+
+    hs = hidden[:, :n * chunk].reshape(B, n, chunk, -1).swapaxes(0, 1)
+    ls = labels[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+    ms = mask[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+
+    def body(carry, sl):
+        h, l, m = sl
+        logits = unembed(cfg, params, h).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        loss = (lse - gold) * m
+        return (carry[0] + loss.sum(), carry[1] + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,144 @@
+"""Optimizers (pure pytree transforms — no external deps).
+
+* ``adamw`` — fp32 moments + decoupled weight decay + global-norm clipping.
+* ``adafactor`` — factored second moments (rank-1 row/col statistics) for
+  trillion-parameter configs where AdamW's optimizer state cannot fit the
+  mesh (kimi-k2 on 512 chips; see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"               # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def lr_schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(cfg: OptConfig, grads, state, params):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state["count"] + 1
+    lr = lr_schedule(cfg, count)
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                      state["nu"], grads)
+    c = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** c
+    bc2 = 1 - b2 ** c
+
+    def upd(p, m, v):
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "count": count}, gnorm
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; beta1=0 variant)
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params):
+    def init_one(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"v": jax.tree.map(init_one, params,
+                              is_leaf=lambda x: isinstance(x, jax.Array)),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptConfig, grads, state, params):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state["count"] + 1
+    lr = lr_schedule(cfg, count)
+    decay = 1.0 - (count.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(p, g, v):
+        g2 = g * g + 1e-30
+        if _factored(p.shape):
+            vr = decay * v["vr"] + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * v["vc"] + (1 - decay) * g2.mean(axis=-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None],
+                                   1e-30))
+            step = g / (jnp.sqrt(denom) + cfg.eps)
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nv = {"v": decay * v["v"] + (1 - decay) * g2}
+            step = g / (jnp.sqrt(nv["v"]) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), nv
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_v = tdef.flatten_up_to(state["v"])
+    outs = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    new_params = tdef.unflatten([o[0] for o in outs])
+    new_v = tdef.unflatten([o[1] for o in outs])
+    return new_params, {"v": new_v, "count": count}, gnorm
+
+
+def make_optimizer(cfg: OptConfig):
+    if cfg.name == "adamw":
+        return adamw_init, functools.partial(adamw_update, cfg)
+    if cfg.name == "adafactor":
+        return adafactor_init, functools.partial(adafactor_update, cfg)
+    raise ValueError(cfg.name)

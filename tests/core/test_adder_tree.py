@@ -1,0 +1,76 @@
+"""Algorithm 1 (strength DP) behaviour tests."""
+import random
+
+from repro.core.adder_tree import (_best_placement, _greedy_placement,
+                                   count_stage_strength, reduce_binary)
+from repro.core.netlist import Netlist
+from repro.core.synth import Row
+
+
+def _rows_shifted_dups(net, width=6, shifts=(0, 2, 4, 6)):
+    x = net.add_pi_bus("x", width)
+    return [Row(s, tuple(x)) for s in shifts]
+
+
+def test_dp_prefers_duplicate_chains():
+    """With 4 shifted copies the DP must pair (0,2),(4,6) — equal deltas —
+    rather than e.g. (0,6),(2,4)."""
+    net = Netlist()
+    rows = _rows_shifted_dups(net)
+    pairs, passthrough = _best_placement(net, rows, width_cap=None)
+    assert not passthrough
+    deltas = sorted(abs(rows[i].shift - rows[j].shift) for i, j in pairs)
+    assert deltas == [2, 2], pairs
+
+
+def test_dp_beats_adjacent_pairing_strength():
+    net = Netlist()
+    x = net.add_pi_bus("x", 6)
+    # shifts chosen so adjacent pairing yields unequal deltas
+    rows = [Row(s, tuple(x)) for s in (0, 1, 3, 4)]
+    dp_pairs, _ = _best_placement(net, rows, None)
+    h_dp = count_stage_strength(net, rows, dp_pairs)
+    h_adj = count_stage_strength(net, rows, [(0, 1), (2, 3)])
+    assert h_dp >= h_adj
+
+
+def test_dp_odd_row_passthrough():
+    net = Netlist()
+    rows = _rows_shifted_dups(net, shifts=(0, 2, 4))
+    pairs, passthrough = _best_placement(net, rows, None)
+    assert len(pairs) == 1 and len(passthrough) == 1
+
+
+def test_greedy_groups_same_bits():
+    net = Netlist()
+    x = net.add_pi_bus("x", 6)
+    y = net.add_pi_bus("y", 6)
+    rows = [Row(s, tuple(x)) for s in (0, 2, 4, 6)] + \
+           [Row(s, tuple(y)) for s in (1, 3)]
+    pairs, passthrough = _greedy_placement(rows)
+    assert not passthrough
+    for i, j in pairs:
+        assert rows[i].bits == rows[j].bits  # never mixes x rows with y rows
+
+
+def test_reduce_binary_single_row():
+    net = Netlist()
+    x = net.add_pi_bus("x", 4)
+    r = reduce_binary(net, [Row(0, tuple(x))])
+    assert r.bits == tuple(x)
+    assert net.n_adders == 0
+
+
+def test_reduce_binary_counts_less_than_naive():
+    random.seed(3)
+    for _ in range(5):
+        shifts = sorted(random.sample(range(10), 6))
+        net_a = Netlist()
+        x = net_a.add_pi_bus("x", 8)
+        reduce_binary(net_a, [Row(s, tuple(x)) for s in shifts],
+                      use_dp=True, share=True)
+        net_b = Netlist()
+        x = net_b.add_pi_bus("x", 8)
+        reduce_binary(net_b, [Row(s, tuple(x)) for s in shifts],
+                      use_dp=False, share=False)
+        assert net_a.n_adders <= net_b.n_adders

@@ -1,0 +1,119 @@
+"""IR-level tests: truth tables, structural hashing, sweep, evaluation."""
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.netlist import (CONST0, CONST1, Netlist, TT_AND2, TT_MAJ3,
+                                TT_XOR2, TT_XOR3, bus_to_ints, eval_netlist,
+                                tt_compose, tt_eval, tt_from_fn, tt_reduce,
+                                tt_var)
+
+
+def test_tt_var_eval():
+    for k in range(1, 5):
+        for j in range(k):
+            tt = tt_var(j, k)
+            for m in range(1 << k):
+                assert tt_eval(tt, m) == (m >> j) & 1
+
+
+@given(st.integers(0, 255), st.integers(0, 7))
+@settings(max_examples=50, deadline=None)
+def test_tt_reduce_drops_duplicate_input(tt, seed):
+    # build a 3-input tt where input 2 duplicates input 0
+    ins, red = tt_reduce((5, 6, 5), tt)
+    assert len(ins) <= 2
+    for m in range(1 << 3):
+        a, b, c = m & 1, (m >> 1) & 1, (m >> 2) & 1
+        if a != c:
+            continue  # unreachable assignment for duplicated input
+        pos = {s: j for j, s in enumerate(ins)}
+        mm = 0
+        if 5 in pos and a:
+            mm |= 1 << pos[5]
+        if 6 in pos and b:
+            mm |= 1 << pos[6]
+        assert tt_eval(tt, m) == tt_eval(red, mm)
+
+
+def test_tt_compose_matches_direct_eval():
+    # outer = XOR3(p, q, r) with q replaced by AND2(u, v)
+    outer_ins = (10, 11, 12)
+    inner_ins = (20, 21)
+    merged, tt = tt_compose(TT_XOR3, outer_ins, 1, TT_AND2, inner_ins)
+    pos = {s: j for j, s in enumerate(merged)}
+    for m in range(1 << len(merged)):
+        val = {s: (m >> pos[s]) & 1 for s in merged}
+        q = val[20] & val[21]
+        exp = val[10] ^ q ^ val[12]
+        assert tt_eval(tt, m) == exp
+
+
+def test_structural_hash_luts():
+    net = Netlist()
+    a, b = net.add_pi_bus("a", 1)[0], net.add_pi_bus("b", 1)[0]
+    o1 = net.add_lut((a, b), TT_AND2)
+    o2 = net.add_lut((a, b), TT_AND2)
+    assert o1 == o2
+    assert net.n_luts == 1
+
+
+def test_structural_hash_chains():
+    net = Netlist()
+    a = net.add_pi_bus("a", 4)
+    b = net.add_pi_bus("b", 4)
+    s1, _ = net.add_chain(list(a), list(b))
+    s2, _ = net.add_chain(list(a), list(b))
+    assert s1 == s2
+    assert len(net.chains) == 1
+
+
+def test_lut_constant_folding():
+    net = Netlist()
+    a = net.add_pi_bus("a", 1)[0]
+    assert net.add_lut((a, CONST0), TT_AND2) == CONST0
+    assert net.add_lut((a, CONST1), TT_AND2) == a
+    assert net.add_lut((a, a), TT_XOR2) == CONST0
+
+
+def test_sweep_removes_dead_logic():
+    net = Netlist()
+    a = net.add_pi_bus("a", 2)
+    live = net.add_lut((a[0], a[1]), TT_AND2)
+    net.add_lut((a[0], a[1]), TT_XOR2)  # dead
+    net.set_po_bus("o", [live])
+    swept = net.sweep()
+    assert swept.n_luts == 1
+
+
+def test_chain_evaluation_full_add():
+    net = Netlist()
+    a = net.add_pi_bus("a", 8)
+    b = net.add_pi_bus("b", 8)
+    sums, cout = net.add_chain(list(a), list(b), want_cout=True)
+    net.set_po_bus("s", sums + [cout])
+    rng = random.Random(0)
+    NV = 32
+    xs = [rng.getrandbits(8) for _ in range(NV)]
+    ys = [rng.getrandbits(8) for _ in range(NV)]
+    vals = {}
+    for j in range(8):
+        vals[a[j]] = sum(((xs[v] >> j) & 1) << v for v in range(NV))
+        vals[b[j]] = sum(((ys[v] >> j) & 1) << v for v in range(NV))
+    res = eval_netlist(net, vals, NV)
+    got = bus_to_ints(res, sums + [cout], NV)
+    for v in range(NV):
+        assert got[v] == xs[v] + ys[v]
+
+
+def test_topo_order_complete():
+    net = Netlist()
+    a = net.add_pi_bus("a", 4)
+    x = net.add_lut((a[0], a[1]), TT_XOR2)
+    y = net.add_lut((x, a[2]), TT_AND2)
+    s, _ = net.add_chain([y, x], [a[3], a[0]])
+    net.set_po_bus("o", s)
+    order = net.topo_order()
+    assert len(order) == 3
+    assert order.index(("lut", 0)) < order.index(("lut", 1))
+    assert order.index(("lut", 1)) < order.index(("chain", 0))

@@ -1,0 +1,60 @@
+"""Stress-test behaviours (Fig. 9 / Table IV)."""
+from repro.core.alm import BASELINE, DD5
+from repro.core.circuits import kratos_gemm, sha_like
+from repro.core.stress import (merge_netlists, packing_stress_circuit,
+                               run_e2e_stress, run_packing_stress)
+from repro.core.netlist import Netlist, bus_to_ints, eval_netlist
+from repro.core.packing import pack
+
+
+def test_stress_dd5_absorbs_luts_flat_area():
+    res5 = run_packing_stress(DD5, n_adders=200, lut_counts=[0, 100, 200])
+    res0 = run_packing_stress(BASELINE, n_adders=200, lut_counts=[0, 100, 200])
+    # baseline area strictly grows; DD5 stays flat while absorbing
+    assert res0[2]["alms"] > res0[0]["alms"]
+    assert res5[1]["alms"] == res5[0]["alms"]
+    assert res5[1]["concurrent"] == 100
+
+
+def test_stress_saturation_in_paper_range():
+    """Fig. 9: concurrency saturates around 60-85 % of the theoretical max."""
+    res = run_packing_stress(DD5, n_adders=500, lut_counts=[500])
+    frac = res[0]["concurrent"] / 500
+    assert 0.5 <= frac <= 0.9, frac
+
+
+def test_e2e_stress_dd5_fits_more():
+    base = kratos_gemm(m=6, n=6, width=6, sparsity=0.5)
+    sha = sha_like(rounds=1)
+    res = run_e2e_stress(base, sha, [BASELINE, DD5], max_instances=24)
+    assert res["dd5"]["instances"] > res["baseline"]["instances"]
+    assert res["dd5"]["concurrent"] > 0
+
+
+def test_merge_netlists_functional():
+    n1 = Netlist("a")
+    x = n1.add_pi_bus("x", 4)
+    y = n1.add_pi_bus("y", 4)
+    s, _ = n1.add_chain(list(x), list(y))
+    n1.set_po_bus("s", s)
+    merged = merge_netlists([n1, n1])
+    assert len(merged.pis) == 16
+    assert merged.n_adders == 8
+    vals = {}
+    for j, sg in enumerate(merged.pi_buses["i0_x"]):
+        vals[sg] = 0b1 if j == 0 else 0   # x0 = 1
+    for j, sg in enumerate(merged.pi_buses["i0_y"]):
+        vals[sg] = 0b1 if j == 1 else 0   # y0 = 2
+    for j, sg in enumerate(merged.pi_buses["i1_x"]):
+        vals[sg] = 0b1 if j == 2 else 0   # x1 = 4
+    for j, sg in enumerate(merged.pi_buses["i1_y"]):
+        vals[sg] = 0b1 if j == 2 else 0   # y1 = 4
+    r = eval_netlist(merged, vals, 1)
+    assert bus_to_ints(r, merged.pos["i0_s"], 1)[0] == 3
+    assert bus_to_ints(r, merged.pos["i1_s"], 1)[0] == 8
+
+
+def test_stress_circuit_shapes():
+    net = packing_stress_circuit(n_adders=100, n_luts=50)
+    assert net.n_adders == 100
+    assert net.n_luts == 50

@@ -1,0 +1,49 @@
+"""The ABC-lite mapper must preserve function and reduce LUT count."""
+import random
+
+from repro.core.netlist import Netlist, bus_to_ints, eval_netlist
+from repro.core.synth import synth_var_mult
+from repro.core.techmap import techmap
+
+NV = 16
+
+
+def test_techmap_preserves_function_and_shrinks():
+    rng = random.Random(11)
+    net = Netlist()
+    x = net.add_pi_bus("x", 6)
+    y = net.add_pi_bus("y", 6)
+    out = synth_var_mult(net, x, y, algo="wallace", signed=False, out_width=12)
+    net.set_po_bus("p", out)
+    mapped = techmap(net.sweep())
+    assert mapped.n_luts < net.n_luts
+    xs = [rng.getrandbits(6) for _ in range(NV)]
+    ys = [rng.getrandbits(6) for _ in range(NV)]
+
+    def drive(n):
+        vals = {}
+        for j, s in enumerate(n.pi_buses.get("x", x)):
+            vals[s] = sum(((xs[v] >> j) & 1) << v for v in range(NV))
+        for j, s in enumerate(n.pi_buses.get("y", y)):
+            vals[s] = sum(((ys[v] >> j) & 1) << v for v in range(NV))
+        return vals
+
+    a = bus_to_ints(eval_netlist(net, drive(net), NV), out, NV)
+    b = bus_to_ints(eval_netlist(mapped, drive(mapped), NV),
+                    mapped.pos["p"], NV)
+    assert a == b
+
+
+def test_techmap_respects_max_k():
+    rng = random.Random(5)
+    net = Netlist()
+    ins = net.add_pi_bus("i", 12)
+    prev = list(ins)
+    for _ in range(40):
+        sel = tuple(rng.sample(prev, 3))
+        prev.append(net.add_lut(sel, rng.getrandbits(8)))
+    net.set_po_bus("o", prev[-4:])
+    mapped = techmap(net.sweep(), max_k=6)
+    assert all(len(i) <= 6 for i in mapped.lut_inputs)
+    mapped5 = techmap(net.sweep(), max_k=5)
+    assert all(len(i) <= 5 for i in mapped5.lut_inputs)

@@ -1,0 +1,112 @@
+"""Multi-device distribution tests (8 host devices via subprocess).
+
+The dry-run proves 256/512-way compile; these tests prove the same code
+path *executes* correctly on a small real mesh: sharded train step runs,
+metrics are finite, and a checkpoint taken on one mesh restores onto a
+different mesh (elastic re-scale)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.data.pipeline import batch_for_step, to_device
+from repro.launch.mesh import make_host_mesh
+from repro.models.lm import init_params
+from repro.parallel.api import sharding_rules
+from repro.parallel.sharding import (activation_rules, batch_specs,
+                                     opt_specs, param_specs)
+from repro.train.step import TrainConfig, make_train_step
+from repro.checkpoint import ckpt
+
+arch = sys.argv[1]
+mp = int(sys.argv[2])
+ckpt_dir = sys.argv[3]
+
+cfg = get_config(arch).smoke()
+mesh = make_host_mesh(model_parallel=mp)
+params = init_params(jax.random.key(0), cfg)
+pshape = jax.eval_shape(lambda: params)
+pspecs = param_specs(cfg, mesh, pshape)
+params = jax.tree.map(lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+                      params, pspecs,
+                      is_leaf=lambda x: isinstance(x, jax.Array))
+tcfg = TrainConfig()
+step_fn, opt_init = make_train_step(cfg, tcfg)
+opt = opt_init(params)
+losses = []
+with mesh, sharding_rules(activation_rules(cfg, mesh)):
+    jstep = jax.jit(step_fn, donate_argnums=(0, 1))
+    for s in range(3):
+        batch = to_device(batch_for_step(cfg, 64, 8, s))
+        params, opt, m = jstep(params, opt, batch)
+        losses.append(float(m["loss"]))
+if ckpt_dir:
+    ckpt.save(ckpt_dir, 3, params)
+print(json.dumps({"losses": losses,
+                  "n_devices": len(jax.devices()),
+                  "mesh": dict(mesh.shape)}))
+"""
+
+RESTORE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import jax
+from jax.sharding import NamedSharding
+from repro.configs.base import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models.lm import init_params
+from repro.parallel.sharding import param_specs
+from repro.checkpoint import ckpt
+
+arch, mp, ckpt_dir = sys.argv[1], int(sys.argv[2]), sys.argv[3]
+cfg = get_config(arch).smoke()
+mesh = make_host_mesh(model_parallel=mp)  # DIFFERENT mesh than save time
+params = init_params(jax.random.key(0), cfg)
+pshape = jax.eval_shape(lambda: params)
+pspecs = param_specs(cfg, mesh, pshape)
+shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                         is_leaf=lambda x: hasattr(x, "_normalized_spec")
+                         or type(x).__name__ == "PartitionSpec")
+restored, step = ckpt.restore(ckpt_dir, params, shardings=shardings)
+leaf = jax.tree.leaves(restored)[0]
+print(json.dumps({"step": step, "ok": bool((leaf == leaf).all())}))
+"""
+
+
+def _run(script, *args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "..",
+                                     "src")
+    out = subprocess.run([sys.executable, "-c", script, *args],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.parametrize("arch,mp", [("qwen1.5-0.5b", 2),
+                                     ("deepseek-moe-16b", 2),
+                                     ("mamba2-2.7b", 4)])
+def test_sharded_train_step_8dev(arch, mp, tmp_path):
+    res = _run(SCRIPT, arch, str(mp), "")
+    assert res["n_devices"] == 8
+    assert all(l > 0 and l == l for l in res["losses"])
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    ckpt_dir = str(tmp_path / "ck")
+    _run(SCRIPT, "qwen1.5-0.5b", "2", ckpt_dir)   # save on (4, 2) mesh
+    res = _run(RESTORE_SCRIPT, "qwen1.5-0.5b", "4", ckpt_dir)  # load (2, 4)
+    assert res["step"] == 3 and res["ok"]
