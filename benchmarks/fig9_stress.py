@@ -1,12 +1,23 @@
-"""Fig. 9 — packing stress test.
+"""Fig. 9 — packing stress test, plus the fused-evaluator perf workload.
 
 500 adders + 0..500 unrelated 5-LUTs.  Paper: DD5 area stays flat until the
 ALMs saturate; concurrently packed 5-LUTs saturate at ~375 (75 %).
+
+The saturated stress circuit (500 adders + 500 LUTs) doubles as the
+standard workload for the netlist-evaluation engine: ``run_eval_benchmark``
+times the fused single-jit evaluator against the seed per-level dispatcher
+on it, proves pack/re-elaborate equivalence with the new ``core.equiv``
+subsystem, and reports the fused engine's roofline terms.
 """
 from __future__ import annotations
 
+import random
+import time
+
+import numpy as np
+
 from repro.core.alm import BASELINE, DD5
-from repro.core.stress import run_packing_stress
+from repro.core.stress import run_packing_stress, packing_stress_circuit
 
 from .common import Timer, emit
 
@@ -26,12 +37,78 @@ def run(verbose: bool = True):
     return out
 
 
+def eval_workload(n_adders: int = 500, n_luts: int = 500, seed: int = 0):
+    """The canonical evaluation workload: the saturated Fig. 9 circuit."""
+    return packing_stress_circuit(n_adders=n_adders, n_luts=n_luts,
+                                  seed=seed)
+
+
+def run_eval_benchmark(n_lane_words: int = 8, use_pallas: bool = True,
+                       reps: int = 3, check_equiv: bool = True,
+                       verbose: bool = True) -> dict:
+    """Time fused vs per-level evaluation of the stress workload.
+
+    Returns a record with best-of-``reps`` wall times (post-warmup, so the
+    fused number excludes its one-time compile), the speedup, the fused
+    engine's analytic roofline terms, and — when ``check_equiv`` — the
+    pack/re-elaborate equivalence verdicts for baseline and DD5.
+    """
+    import jax
+
+    from repro.core.equiv import check_pack_equivalence
+    from repro.core.eval_jax import (eval_netlist_jax,
+                                     eval_netlist_jax_levels, plan_netlist)
+    from .roofline import netlist_eval_terms
+
+    net = eval_workload()
+    rng = random.Random(0)
+    lanes = {s: np.array([rng.getrandbits(32) for _ in range(n_lane_words)],
+                         dtype=np.uint32) for s in net.pis}
+    plan = plan_netlist(net)
+
+    def bench(fn):
+        jax.block_until_ready(fn())  # warmup / compile, fully drained
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_levels = bench(lambda: eval_netlist_jax_levels(
+        net, lanes, n_lane_words, use_pallas=use_pallas))
+    t_fused = bench(lambda: eval_netlist_jax(
+        net, lanes, n_lane_words, use_pallas=use_pallas, plan=plan))
+    rec = {
+        "workload": "fig9_stress(500 adders, 500 luts)",
+        "n_lane_words": n_lane_words,
+        "n_vectors": n_lane_words * 32,
+        "use_pallas": use_pallas,
+        "t_levels_s": t_levels,
+        "t_fused_s": t_fused,
+        "speedup": t_levels / t_fused,
+        "roofline": netlist_eval_terms(net, n_lane_words, plan=plan),
+    }
+    if check_equiv:
+        rec["equiv"] = {
+            arch.name: check_pack_equivalence(net, arch, n_vectors=64)
+            ["equivalent"] for arch in (BASELINE, DD5)
+        }
+    if verbose:
+        emit("fig9_eval/levels", t_levels * 1e6, "seed per-level dispatcher")
+        emit("fig9_eval/fused", t_fused * 1e6,
+             f"speedup={rec['speedup']:.1f}x;"
+             f"equiv={rec.get('equiv', 'skipped')}")
+    return rec
+
+
 def main():
     with Timer() as t:
         res = run()
     sat = res["dd5"][-1]["concurrent"]
     emit("fig9_stress", t.us,
          f"saturation_luts={sat};saturation_frac={sat/500:.2f}")
+    res["eval_benchmark"] = run_eval_benchmark()
     return res
 
 

@@ -137,6 +137,48 @@ def analytic_terms(arch: str, shape_name: str, mesh_tag: str,
     }
 
 
+def netlist_eval_terms(net, n_lane_words: int, plan=None) -> dict:
+    """Roofline terms for one fused-evaluator pass over a netlist.
+
+    The fused engine (``repro.core.eval_jax``) is a bitwise workload: count
+    uint32 *word ops* instead of FLOPs.  Per LUT row the kernel unrolls 32
+    minterms over 5 pins plus the pin-5 select (~``32*7 + 4`` word ops per
+    lane word); per chain bit the ripple costs ~7 word ops.  Memory traffic
+    is the level gathers/scatters against the value buffer (4 B words).
+    The arithmetic intensity (ops/byte) says which side of the machine the
+    evaluator saturates — on every real circuit it is compute-bound, which
+    is why fusing away the per-level dispatch dominated the wall clock.
+    """
+    from repro.core.eval_jax import plan_netlist
+
+    if plan is None:
+        plan = plan_netlist(net)
+    N = n_lane_words
+    L = plan.n_levels
+    M = plan.lut_out.shape[1] if plan.has_luts else 0
+    C = plan.ch_cout.shape[1] if plan.has_chains else 0
+    B = plan.ch_a.shape[2] if plan.has_chains else 0
+    lut_ops = L * M * N * (32 * 7 + 4)
+    chain_ops = L * C * B * N * 7
+    lut_bytes = L * (M * 6 * N * 4 + M * N * 4 + M * (4 * 2 + 24))
+    chain_bytes = L * C * ((2 * B + 2) * N * 4 + (B + 1) * N * 4 + 4 * B * 2)
+    word_ops = lut_ops + chain_ops
+    hbm = lut_bytes + chain_bytes
+    return {
+        "word_ops": word_ops,
+        "hbm_bytes": hbm,
+        "intensity_ops_per_byte": word_ops / max(hbm, 1),
+        "t_memory": hbm / HBM_BW,
+        "levels": L,
+        "padded_lut_rows": L * M,
+        "padded_chain_bits": L * C * B,
+        "real_luts": net.n_luts,
+        "real_chain_bits": net.n_adders,
+        "padding_waste": 1.0 - (net.n_luts + net.n_adders)
+        / max(L * M + L * C * B, 1),
+    }
+
+
 def load_cells(dryrun_dir: str = DRYRUN_DIR) -> list[dict]:
     cells = []
     for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):

@@ -1,13 +1,34 @@
 """Bit-parallel netlist evaluation in JAX (the simulator's compute layer).
 
-The netlist is levelized once (compile time); evaluation then runs one
-vectorized `lut_eval` kernel call per LUT level and a `lax.scan` ripple per
-chain group, all over uint32 test-vector lanes.  This is the performance
-path for large-circuit functional validation — the Python `eval_netlist`
-oracle in `netlist.py` stays the ground truth in tests.
+Fused single-jit engine
+-----------------------
+The netlist is levelized once (compile time) into a :class:`FusedPlan`:
+every LUT level is padded to a uniform ``[L, M_max, 6]`` tensor (tables
+split into two uint32 words, pin 5 Shannon-selects), every chain level to
+``[L, C_max, B_max]``.  One ``lax.scan`` over levels then evaluates the
+whole circuit inside a single jit:
+
+* level ``t`` gathers its LUT input lanes from the signal-value buffer,
+  runs one fused ``lut_eval6`` kernel call, and scatters the outputs;
+* the level's carry chains ripple inside the same scan step (a nested
+  bit-scan over the stacked ``[C_max, B_max]`` layout — one scan for *all*
+  chains of the level, not one dispatch per chain);
+* padded rows read constant-0 lanes and write a reserved sink row, so the
+  scan body is shape-uniform with zero per-level Python dispatch.
+
+The value buffer is donated to the jit (``donate_argnums``), so evaluation
+reuses it in place, and :func:`eval_netlists_batched_jax` stacks several
+circuits' plans into one ``vmap``-ed call — the layout that lets functional
+validation of baseline/DD5/DD6 re-elaborations run concurrently.
+
+The seed per-level dispatcher (one kernel launch per level from a Python
+loop) survives as :func:`eval_netlist_jax_levels` — it is the baseline the
+perf trajectory measures the fused engine against — and the Python
+``eval_netlist`` oracle in ``netlist.py`` stays the ground truth in tests.
 """
 from __future__ import annotations
 
+import functools
 from collections import defaultdict
 from dataclasses import dataclass
 
@@ -19,135 +40,344 @@ import jax.numpy as jnp
 from .netlist import CONST0, CONST1, Netlist
 
 
-@dataclass
-class EvalPlan:
-    n_signals: int
-    # per level: (lut_ids, input_sig array [M, K], tt array [M], out_sigs [M])
-    lut_levels: list[tuple]
-    # per level: list of chain descriptors (a [L], b [L], cin, sums [L], cout)
-    chain_levels: list[list[tuple]]
+# ---------------------------------------------------------------------------
+# levelization
+# ---------------------------------------------------------------------------
 
 
-def plan_netlist(net: Netlist) -> EvalPlan:
+def _levelize(net: Netlist):
+    """Group nodes by topological level (inputs strictly below)."""
     order = net.topo_order()
-    level: dict[tuple, int] = {}
     sig_level: dict[int, int] = {s: 0 for s in net.pis}
     sig_level[CONST0] = 0
     sig_level[CONST1] = 0
+    by_level_luts: dict[int, list[int]] = defaultdict(list)
+    by_level_chains: dict[int, list[int]] = defaultdict(list)
     for nd in order:
         lv = 0
         for s in net.node_inputs(nd):
             lv = max(lv, sig_level.get(s, 0))
         lv += 1
-        level[nd] = lv
         for s in net.node_outputs(nd):
             sig_level[s] = lv
-
-    by_level_luts: dict[int, list[int]] = defaultdict(list)
-    by_level_chains: dict[int, list[int]] = defaultdict(list)
-    for nd, lv in level.items():
         if nd[0] == "lut":
             by_level_luts[lv].append(nd[1])
         else:
             by_level_chains[lv].append(nd[1])
+    return by_level_luts, by_level_chains
 
-    lut_levels = []
-    for lv in sorted(by_level_luts):
-        ids = by_level_luts[lv]
-        kmax = max(len(net.lut_inputs[i]) for i in ids)
-        kmax = max(kmax, 1)
-        M = len(ids)
-        ins = np.zeros((M, kmax), dtype=np.int64)
-        tts = np.zeros(M, dtype=np.uint64)
-        outs = np.zeros(M, dtype=np.int64)
-        for r, i in enumerate(ids):
+
+def _tt_words(tt: int, k: int) -> tuple[int, int]:
+    """Replicate a k-input table into a 64-entry mask, split lo/hi uint32."""
+    full = 0
+    for r in range(1 << (6 - k)):
+        full |= tt << (r * (1 << k))
+    full &= (1 << 64) - 1
+    return full & 0xFFFFFFFF, full >> 32
+
+
+@dataclass
+class FusedPlan:
+    """Shape-uniform level tensors; ``sink = n_signals`` swallows padding."""
+
+    n_signals: int
+    n_levels: int
+    has_luts: bool
+    has_chains: bool
+    lut_ins: np.ndarray     # [L, M, 6] int32 (padded pins/rows -> CONST0)
+    lut_tt_lo: np.ndarray   # [L, M] uint32
+    lut_tt_hi: np.ndarray   # [L, M] uint32
+    lut_out: np.ndarray     # [L, M] int32 (padded rows -> sink)
+    ch_a: np.ndarray        # [L, C, B] int32
+    ch_b: np.ndarray        # [L, C, B] int32
+    ch_cin: np.ndarray      # [L, C] int32
+    ch_sums: np.ndarray     # [L, C, B] int32 (padded -> sink)
+    ch_cout: np.ndarray     # [L, C] int32 (chains without cout -> sink)
+    ch_last: np.ndarray     # [L, C] int32 (index of the last real bit)
+    _dev: tuple | None = None   # cached device-resident copies
+
+    @property
+    def sink(self) -> int:
+        return self.n_signals
+
+    def arrays(self):
+        return (self.lut_ins, self.lut_tt_lo, self.lut_tt_hi, self.lut_out,
+                self.ch_a, self.ch_b, self.ch_cin, self.ch_sums,
+                self.ch_cout, self.ch_last)
+
+    def device_arrays(self):
+        """Plan tensors as device arrays, uploaded once per plan — reusing
+        a plan across calls must not re-transfer megabytes of indices."""
+        if self._dev is None:
+            self._dev = tuple(jnp.asarray(a) for a in self.arrays())
+        return self._dev
+
+
+def plan_netlist(net: Netlist) -> FusedPlan:
+    """Compile a netlist into the fused evaluator's padded level tensors."""
+    by_luts, by_chains = _levelize(net)
+    levels = sorted(set(by_luts) | set(by_chains))
+    L = max(len(levels), 1)
+    M = max((len(by_luts[lv]) for lv in by_luts), default=0)
+    C = max((len(by_chains[lv]) for lv in by_chains), default=0)
+    B = max((len(net.chains[c].sums) for lv in by_chains
+             for c in by_chains[lv]), default=0)
+    sink = net.n_signals
+
+    lut_ins = np.full((L, max(M, 1), 6), CONST0, dtype=np.int32)
+    lut_tt_lo = np.zeros((L, max(M, 1)), dtype=np.uint32)
+    lut_tt_hi = np.zeros((L, max(M, 1)), dtype=np.uint32)
+    lut_out = np.full((L, max(M, 1)), sink, dtype=np.int32)
+    ch_a = np.full((L, max(C, 1), max(B, 1)), CONST0, dtype=np.int32)
+    ch_b = np.full((L, max(C, 1), max(B, 1)), CONST0, dtype=np.int32)
+    ch_cin = np.full((L, max(C, 1)), CONST0, dtype=np.int32)
+    ch_sums = np.full((L, max(C, 1), max(B, 1)), sink, dtype=np.int32)
+    ch_cout = np.full((L, max(C, 1)), sink, dtype=np.int32)
+    ch_last = np.zeros((L, max(C, 1)), dtype=np.int32)
+
+    for t, lv in enumerate(levels):
+        for r, i in enumerate(by_luts.get(lv, ())):
             sig_ins = net.lut_inputs[i]
             k = len(sig_ins)
-            ins[r, :k] = sig_ins
-            # pad unused pins with CONST0 and replicate the tt accordingly
-            tt = net.lut_tt[i]
-            reps = 1 << (kmax - k)
-            full = 0
-            for rr in range(reps):
-                full |= tt << (rr * (1 << k))
-            tts[r] = full & ((1 << min(64, 1 << kmax)) - 1)
-            outs[r] = net.lut_out[i]
-        lut_levels.append((ids, ins, tts.astype(np.uint32) if kmax <= 5
-                           else tts, outs))
-    chain_levels = [
-        [(np.array(net.chains[c].a), np.array(net.chains[c].b),
-          net.chains[c].cin, np.array(net.chains[c].sums),
-          net.chains[c].cout) for c in by_level_chains[lv]]
-        for lv in sorted(by_level_chains)
-    ]
-    # interleave by level order
-    merged_l: list[tuple] = []
-    merged_c: list[list[tuple]] = []
-    lvs = sorted(set(by_level_luts) | set(by_level_chains))
-    li = ci = 0
-    plan_l, plan_c = [], []
-    for lv in lvs:
-        if lv in by_level_luts:
-            plan_l.append(lut_levels[li])
-            li += 1
-        else:
-            plan_l.append(None)
-        if lv in by_level_chains:
-            plan_c.append(chain_levels[ci])
-            ci += 1
-        else:
-            plan_c.append(None)
-    return EvalPlan(net.n_signals, plan_l, plan_c)
+            lut_ins[t, r, :k] = sig_ins
+            lo, hi = _tt_words(net.lut_tt[i], k)
+            lut_tt_lo[t, r] = lo
+            lut_tt_hi[t, r] = hi
+            lut_out[t, r] = net.lut_out[i]
+        for r, c in enumerate(by_chains.get(lv, ())):
+            ch = net.chains[c]
+            n = len(ch.sums)
+            ch_a[t, r, :n] = ch.a
+            ch_b[t, r, :n] = ch.b
+            ch_cin[t, r] = ch.cin
+            ch_sums[t, r, :n] = ch.sums
+            ch_last[t, r] = n - 1
+            if ch.cout is not None:
+                ch_cout[t, r] = ch.cout
+
+    return FusedPlan(
+        n_signals=net.n_signals, n_levels=L,
+        has_luts=M > 0, has_chains=C > 0,
+        lut_ins=lut_ins, lut_tt_lo=lut_tt_lo, lut_tt_hi=lut_tt_hi,
+        lut_out=lut_out, ch_a=ch_a, ch_b=ch_b, ch_cin=ch_cin,
+        ch_sums=ch_sums, ch_cout=ch_cout, ch_last=ch_last,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused single-jit evaluation
+# ---------------------------------------------------------------------------
+
+
+def _fused_body(vals, xs, *, has_luts: bool, has_chains: bool,
+                use_pallas: bool):
+    """One level: fused LUT kernel + stacked chain ripple.  ``vals`` is the
+    ``[n_signals + 1, N]`` value buffer (last row = padding sink)."""
+    from repro.kernels import ops
+
+    (ins, tt_lo, tt_hi, out_idx, a_idx, b_idx, cin_idx, sums_idx, cout_idx,
+     last_idx) = xs
+    if has_luts:
+        gathered = vals[ins]                         # [M, 6, N]
+        out = ops.lut_eval6(gathered, tt_lo, tt_hi, use_pallas=use_pallas)
+        vals = vals.at[out_idx].set(out)
+    if has_chains:
+        av = vals[a_idx]                             # [C, B, N]
+        bv = vals[b_idx]
+        c0 = vals[cin_idx]                           # [C, N]
+
+        def ripple(c, ab):
+            aa, bb = ab
+            s = aa ^ bb ^ c
+            cy = (aa & bb) | (c & (aa ^ bb))
+            return cy, (s, cy)
+
+        _, (ss, cys) = jax.lax.scan(
+            ripple, c0, (av.swapaxes(0, 1), bv.swapaxes(0, 1)))
+        vals = vals.at[sums_idx].set(ss.swapaxes(0, 1))
+        # cout is the carry *after the chain's last real bit* — padded tail
+        # bits add 0+0 and would zero the carry, so index, don't take last
+        cout_v = jnp.take_along_axis(
+            cys.swapaxes(0, 1), last_idx[:, None, None], axis=1)[:, 0]
+        vals = vals.at[cout_idx].set(cout_v)
+    return vals, None
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("has_luts", "has_chains", "use_pallas"))
+def _run_fused(vals, plan_arrays, *, has_luts, has_chains, use_pallas):
+    body = functools.partial(_fused_body, has_luts=has_luts,
+                             has_chains=has_chains, use_pallas=use_pallas)
+    vals, _ = jax.lax.scan(body, vals, plan_arrays)
+    return vals
+
+
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("has_luts", "has_chains", "use_pallas"))
+def _run_fused_batch(vals, plan_arrays, *, has_luts, has_chains, use_pallas):
+    body = functools.partial(_fused_body, has_luts=has_luts,
+                             has_chains=has_chains, use_pallas=use_pallas)
+
+    def one(v, arrs):
+        out, _ = jax.lax.scan(body, v, arrs)
+        return out
+
+    return jax.vmap(one)(vals, plan_arrays)
+
+
+def _init_vals(plan: FusedPlan, pi_lanes: dict[int, np.ndarray],
+               n_lane_words: int) -> jax.Array:
+    vals = np.zeros((plan.n_signals + 1, n_lane_words), dtype=np.uint32)
+    vals[CONST1] = 0xFFFFFFFF
+    for s, v in pi_lanes.items():
+        vals[s] = np.asarray(v, dtype=np.uint32)
+    return jnp.asarray(vals)
 
 
 def eval_netlist_jax(net: Netlist, pi_lanes: dict[int, np.ndarray],
-                     n_lane_words: int, use_pallas: bool = True) -> jax.Array:
-    """Evaluate; returns ``vals[n_signals, n_lane_words]`` uint32.
+                     n_lane_words: int, use_pallas: bool = True,
+                     plan: FusedPlan | None = None) -> jax.Array:
+    """Fused evaluation; returns ``vals[n_signals, n_lane_words]`` uint32.
 
-    ``pi_lanes[signal]`` is a uint32 vector of packed test vectors.
+    ``pi_lanes[signal]`` is a uint32 vector of packed test vectors.  Pass a
+    precompiled ``plan`` to amortize levelization across calls (the jit
+    cache already amortizes compilation by shape).
+    """
+    if plan is None:
+        plan = plan_netlist(net)
+    vals = _init_vals(plan, pi_lanes, n_lane_words)
+    out = _run_fused(vals, plan.device_arrays(),
+                     has_luts=plan.has_luts, has_chains=plan.has_chains,
+                     use_pallas=use_pallas)
+    return out[:plan.n_signals]
+
+
+def _pad_to(a: np.ndarray, shape, fill) -> np.ndarray:
+    out = np.full(shape, fill, dtype=a.dtype)
+    out[tuple(slice(0, d) for d in a.shape)] = a
+    return out
+
+
+def eval_netlists_batched_jax(nets: list[Netlist],
+                              pi_lanes_list: list[dict[int, np.ndarray]],
+                              n_lane_words: int,
+                              use_pallas: bool = True) -> list[np.ndarray]:
+    """Evaluate several circuits concurrently in one vmapped jit.
+
+    Plans are padded to a common ``[L, M, 6]`` / ``[C, B]`` envelope and the
+    per-circuit sink rows are re-pointed at the shared envelope's sink.
+    Used to validate baseline/DD5/DD6 re-elaborations of the same source
+    in a single device program.  Returns per-circuit ``vals`` arrays.
+    """
+    plans = [plan_netlist(net) for net in nets]
+    n_sig = max(p.n_signals for p in plans)
+    L = max(p.n_levels for p in plans)
+    M = max(p.lut_out.shape[1] for p in plans)
+    C = max(p.ch_cout.shape[1] for p in plans)
+    B = max(p.ch_a.shape[2] for p in plans)
+
+    stacked = []
+    for p in plans:
+        arrs = []
+        for a, shape, fill in (
+                (p.lut_ins, (L, M, 6), CONST0),
+                (p.lut_tt_lo, (L, M), 0),
+                (p.lut_tt_hi, (L, M), 0),
+                (np.where(p.lut_out == p.sink, n_sig, p.lut_out),
+                 (L, M), n_sig),
+                (p.ch_a, (L, C, B), CONST0),
+                (p.ch_b, (L, C, B), CONST0),
+                (p.ch_cin, (L, C), CONST0),
+                (np.where(p.ch_sums == p.sink, n_sig, p.ch_sums),
+                 (L, C, B), n_sig),
+                (np.where(p.ch_cout == p.sink, n_sig, p.ch_cout),
+                 (L, C), n_sig),
+                (p.ch_last, (L, C), 0)):
+            arrs.append(_pad_to(np.asarray(a), shape, fill))
+        stacked.append(arrs)
+    plan_arrays = tuple(jnp.asarray(np.stack([s[i] for s in stacked]))
+                        for i in range(10))
+
+    vals = np.zeros((len(nets), n_sig + 1, n_lane_words), dtype=np.uint32)
+    vals[:, CONST1] = 0xFFFFFFFF
+    for bi, lanes in enumerate(pi_lanes_list):
+        for s, v in lanes.items():
+            vals[bi, s] = np.asarray(v, dtype=np.uint32)
+    out = _run_fused_batch(jnp.asarray(vals), plan_arrays,
+                           has_luts=any(p.has_luts for p in plans),
+                           has_chains=any(p.has_chains for p in plans),
+                           use_pallas=use_pallas)
+    out = np.asarray(out)
+    return [out[i, :p.n_signals] for i, p in enumerate(plans)]
+
+
+# ---------------------------------------------------------------------------
+# seed per-level dispatcher (perf baseline)
+# ---------------------------------------------------------------------------
+
+
+def eval_netlist_jax_levels(net: Netlist, pi_lanes: dict[int, np.ndarray],
+                            n_lane_words: int,
+                            use_pallas: bool = True) -> jax.Array:
+    """The pre-fusion evaluator: one Python-dispatched kernel call per LUT
+    level and one ``lax.scan`` per chain.  Kept as the measured baseline
+    for the fused engine's speedup (see ``benchmarks/perf_iterations.py``).
     """
     from repro.kernels import ops
 
-    plan = plan_netlist(net)
-    vals = jnp.zeros((plan.n_signals, n_lane_words), dtype=jnp.uint32)
+    by_luts, by_chains = _levelize(net)
+    levels = sorted(set(by_luts) | set(by_chains))
+
+    vals = jnp.zeros((net.n_signals, n_lane_words), dtype=jnp.uint32)
     vals = vals.at[CONST1].set(jnp.uint32(0xFFFFFFFF))
     for s, v in pi_lanes.items():
         vals = vals.at[s].set(jnp.asarray(v, dtype=jnp.uint32))
 
-    for lut_lv, chain_lv in zip(plan.lut_levels, plan.chain_levels):
-        if lut_lv is not None:
-            ids, ins, tts, outs = lut_lv
-            gathered = vals[jnp.asarray(ins)]          # [M, K, N]
-            if ins.shape[1] <= 5:
-                out = ops.lut_eval(gathered, jnp.asarray(tts),
-                                   use_pallas=use_pallas)
+    for lv in levels:
+        ids = by_luts.get(lv)
+        if ids:
+            kmax = max(1, max(len(net.lut_inputs[i]) for i in ids))
+            ins = np.zeros((len(ids), kmax), dtype=np.int64)
+            tts = np.zeros(len(ids), dtype=np.uint64)
+            outs = np.zeros(len(ids), dtype=np.int64)
+            for r, i in enumerate(ids):
+                sig_ins = net.lut_inputs[i]
+                k = len(sig_ins)
+                ins[r, :k] = sig_ins
+                tt = net.lut_tt[i]
+                full = 0
+                for rr in range(1 << (kmax - k)):
+                    full |= tt << (rr * (1 << k))
+                tts[r] = full & ((1 << min(64, 1 << kmax)) - 1)
+                outs[r] = net.lut_out[i]
+            gathered = vals[jnp.asarray(ins)]
+            if kmax <= 5:
+                out = ops.lut_eval(gathered, jnp.asarray(
+                    tts.astype(np.uint32)), use_pallas=use_pallas)
             else:
-                # 6-input LUTs: Shannon-decompose on pin 5 into two 5-LUT
-                # evaluations (keeps truth tables in uint32)
-                tt64 = tts.astype(np.uint64)
-                tt_lo = jnp.asarray((tt64 & np.uint64(0xFFFFFFFF))
+                tt_lo = jnp.asarray((tts & np.uint64(0xFFFFFFFF))
                                     .astype(np.uint32))
-                tt_hi = jnp.asarray((tt64 >> np.uint64(32)).astype(np.uint32))
+                tt_hi = jnp.asarray((tts >> np.uint64(32)).astype(np.uint32))
                 g5 = gathered[:, :5, :]
                 sel = gathered[:, 5, :]
                 lo = ops.lut_eval(g5, tt_lo, use_pallas=use_pallas)
                 hi = ops.lut_eval(g5, tt_hi, use_pallas=use_pallas)
                 out = (sel & hi) | (~sel & lo)
             vals = vals.at[jnp.asarray(outs)].set(out)
-        if chain_lv is not None:
-            for a, b, cin, sums, cout in chain_lv:
-                av = vals[jnp.asarray(a)]
-                bv = vals[jnp.asarray(b)]
-                c0 = vals[cin]
+        for c in by_chains.get(lv, ()):
+            ch = net.chains[c]
+            av = vals[jnp.asarray(np.array(ch.a))]
+            bv = vals[jnp.asarray(np.array(ch.b))]
+            c0 = vals[ch.cin]
 
-                def step(c, ab):
-                    aa, bb = ab
-                    s = aa ^ bb ^ c
-                    cy = (aa & bb) | (c & (aa ^ bb))
-                    return cy, s
+            def step(c_, ab):
+                aa, bb = ab
+                s = aa ^ bb ^ c_
+                cy = (aa & bb) | (c_ & (aa ^ bb))
+                return cy, s
 
-                clast, ss = jax.lax.scan(step, c0, (av, bv))
-                vals = vals.at[jnp.asarray(sums)].set(ss)
-                if cout is not None:
-                    vals = vals.at[cout].set(clast)
+            clast, ss = jax.lax.scan(step, c0, (av, bv))
+            vals = vals.at[jnp.asarray(np.array(ch.sums))].set(ss)
+            if ch.cout is not None:
+                vals = vals.at[ch.cout].set(clast)
     return vals

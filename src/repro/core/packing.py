@@ -22,6 +22,12 @@ timing-driven packer; we model its resource behaviour, not its annealing):
 
 The baseline architecture rejects step 5 structurally — that is the paper's
 entire premise.
+
+Every pack is *verifiable*: :mod:`repro.core.equiv` re-elaborates a
+:class:`PackedCircuit` back into the physical netlist its ALMs implement
+(absorbed masks, Z-fed vs A–H-fed operands, hosted LUTs, 6-LUT spans) and
+proves functional equivalence against the source over random vector lanes —
+run ``check_pack_equivalence(net, arch)`` before trusting any area number.
 """
 from __future__ import annotations
 

@@ -17,6 +17,7 @@ from . import ref
 from .bitplane_matmul import bitplane_matmul as _bitplane_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .lut_eval import lut_eval as _lut_pallas
+from .lut_eval import lut_eval6 as _lut6_pallas
 from .popcount_matmul import popcount_matmul as _popcount_pallas
 from .ssd_scan import ssd_scan as _ssd_pallas
 
@@ -40,6 +41,14 @@ def lut_eval(inputs, tts, use_pallas=True):
     if use_pallas:
         return _lut_pallas(inputs, tts, interpret=not _on_tpu())
     return ref.lut_eval_ref(inputs, tts)
+
+
+def lut_eval6(inputs, tt_lo, tt_hi, use_pallas=True):
+    """Fused-layout 6-pin LUT kernel (un-jitted: always called from inside
+    the fused evaluator's own jit)."""
+    if use_pallas:
+        return _lut6_pallas(inputs, tt_lo, tt_hi, interpret=not _on_tpu())
+    return ref.lut_eval6_ref(inputs, tt_lo, tt_hi)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

@@ -68,6 +68,18 @@ def lut_eval_ref(inputs: jax.Array, tts: jax.Array) -> jax.Array:
     return out
 
 
+def lut_eval6_ref(inputs: jax.Array, tt_lo: jax.Array,
+                  tt_hi: jax.Array) -> jax.Array:
+    """Fused-layout 6-input LUT evaluation: ``inputs[M, 6, N]`` with the
+    64-entry table split into pin5=0 (``tt_lo``) / pin5=1 (``tt_hi``)
+    uint32 words."""
+    g5 = inputs[:, :5, :]
+    sel = inputs[:, 5, :].astype(jnp.uint32)
+    lo = lut_eval_ref(g5, tt_lo)
+    hi = lut_eval_ref(g5, tt_hi)
+    return (sel & hi) | (~sel & lo)
+
+
 # ---------------------------------------------------------------------------
 # bitplane_matmul — constant-weight matmul via weight bit-planes
 # (the paper's unrolled multiplication, adapted to MXU+VPU double duty)

@@ -102,6 +102,48 @@ def ffn_block(cfg: ModelConfig, p, x):
     return out
 
 
+def _moe_route(cfg: ModelConfig, p, ht):
+    """Shared router math: softmax over experts, top-k, gate renorm.
+
+    ``ht``'s leading axes are arbitrary (grouped [n, g, d] for the capacity
+    dispatch, flat [T, d] for dropless).  Keeping this single implementation
+    is what guarantees the two MoE paths route identically — the invariant
+    behind prefill/decode matching ``forward()``.
+    """
+    E, K = cfg.n_experts, cfg.top_k
+    logits = ht.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # [..., K, E]
+    return probs, gate_vals, onehot
+
+
+def _moe_expert_weights(p, cdt):
+    """Expert weights, fp8-dequantized when quantized.  The ``constrain``
+    pins force the FSDP reshard on the *f8* tensor, then dequantize
+    locally — otherwise XLA gathers post-dequant at 2 B/elem (§Perf)."""
+    from repro.parallel.api import constrain
+
+    we_i, we_o = p["we_i"], p["we_o"]
+    if "we_i_scale" in p:
+        we_i = constrain(we_i, "moe_expert_w8")
+        we_i = we_i.astype(cdt) * p["we_i_scale"].astype(cdt)
+    if "we_o_scale" in p:
+        we_o = constrain(we_o, "moe_expert_w8")
+        we_o = we_o.astype(cdt) * p["we_o_scale"].astype(cdt)
+    return we_i, we_o
+
+
+def _moe_aux_loss(cfg: ModelConfig, probs, onehot):
+    """Switch-style load-balance loss over all token/k axes."""
+    E = cfg.n_experts
+    me = probs.reshape(-1, E).mean(axis=0)
+    ce = onehot.reshape(-1, E).mean(axis=0)
+    return E * jnp.sum(me * ce)
+
+
 def moe_block(cfg: ModelConfig, p, x):
     """Token-choice top-k routing with per-group capacity (GShard-style
     einsum dispatch; static shapes).
@@ -122,14 +164,8 @@ def moe_block(cfg: ModelConfig, p, x):
     ht = h.reshape(n_groups, g, d)
     C = max(1, int(g * K / E * cfg.capacity_factor))
 
-    logits = jnp.einsum("ngd,de->nge", ht.astype(jnp.float32),
-                        p["router"].astype(jnp.float32))
-    probs = jax.nn.softmax(logits, axis=-1)
-    gate_vals, gate_idx = jax.lax.top_k(probs, K)           # [n, g, K]
-    gate_vals = gate_vals / jnp.maximum(
-        gate_vals.sum(-1, keepdims=True), 1e-9)
+    probs, gate_vals, onehot = _moe_route(cfg, p, ht)        # [n, g, K, E]
     # position of each (token, k) within its expert queue
-    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # [n, g, K, E]
     pos_in_expert = jnp.cumsum(onehot.reshape(n_groups, g * K, E), axis=1)
     pos_in_expert = pos_in_expert.reshape(n_groups, g, K, E) * onehot - 1.0
     slot = (pos_in_expert * onehot).sum(-1)                  # [n, g, K]
@@ -141,18 +177,9 @@ def moe_block(cfg: ModelConfig, p, x):
     disp = constrain(disp, "moe_dispatch")
     xe = jnp.einsum("ngd,ngec->necd", ht, disp)
     xe = constrain(xe, "moe_expert_in")
-    # expert FFN: we_i [E, d, 2f], we_o [E, f, d].  With fp8 expert gathers
-    # (§Perf) the weights arrive as f8e4m3 + per-channel scale: the FSDP
-    # all-gather moved 1 byte/elem and we dequantize post-gather, in-layer.
-    we_i, we_o = p["we_i"], p["we_o"]
-    if "we_i_scale" in p:
-        # force the FSDP reshard on the *f8* tensor, then dequantize
-        # locally — otherwise XLA gathers post-dequant at 2 B/elem
-        we_i = constrain(we_i, "moe_expert_w8")
-        we_i = we_i.astype(cdt) * p["we_i_scale"].astype(cdt)
-    if "we_o_scale" in p:
-        we_o = constrain(we_o, "moe_expert_w8")
-        we_o = we_o.astype(cdt) * p["we_o_scale"].astype(cdt)
+    # expert FFN: we_i [E, d, 2f], we_o [E, f, d]; fp8 expert gathers
+    # dequantize post-gather inside _moe_expert_weights
+    we_i, we_o = _moe_expert_weights(p, cdt)
     he = jnp.einsum("necd,edf->necf", xe, we_i)
     gate, up = jnp.split(he, 2, axis=-1)
     he = (jax.nn.silu(gate.astype(jnp.float32)).astype(cdt) * up)
@@ -167,11 +194,45 @@ def moe_block(cfg: ModelConfig, p, x):
     # shared experts (always-on)
     if cfg.n_shared_experts > 0:
         out = out + glu_ffn(h, p["ws_i"], p["ws_o"], "swiglu")
-    # load-balance aux loss (Switch-style), returned via side channel
-    me = probs.mean(axis=(0, 1))
-    ce = onehot.mean(axis=(0, 1, 2))
-    aux = E * jnp.sum(me * ce)
-    return out, aux
+    return out, _moe_aux_loss(cfg, probs, onehot)
+
+
+def moe_block_dropless(cfg: ModelConfig, p, x):
+    """Per-token dropless top-k routing — the cached-inference MoE path.
+
+    ``moe_block`` sizes its expert capacity from the *current batch group*
+    (``C = g*K*cf/E``), so whether a token is dropped depends on which other
+    tokens share its dispatch group.  That is fine for training, but cached
+    decode runs the same layer on 1-token groups: capacity collapses to 1,
+    colliding tokens get dropped, and decode logits diverge from the
+    teacher-forced ``forward()`` (observed as ~0.65 max-logit error on
+    deepseek-moe-16b smoke).  Here every token always reaches all K chosen
+    experts — mathematically identical to ``moe_block`` whenever no token
+    overflows capacity, and independent of batch composition, so
+    prefill/decode match ``forward`` regardless of grouping.
+
+    Computes all E experts densely and combines with routing weights
+    (fine for the smoke/eval shapes this path serves; a production decode
+    would gather the K expert slices instead).
+    """
+    B, S, d = x.shape
+    cdt = x.dtype
+    h = rms_norm(x, p["ln2"], cfg.rms_eps)
+    ht = h.reshape(B * S, d)
+
+    probs, gate_vals, onehot = _moe_route(cfg, p, ht)        # [T, K, E]
+    weight = (onehot * gate_vals[..., None]).sum(1)          # [T, E]
+
+    we_i, we_o = _moe_expert_weights(p, cdt)
+    he = jnp.einsum("td,edf->tef", ht, we_i)
+    gate, up = jnp.split(he, 2, axis=-1)
+    he = jax.nn.silu(gate.astype(jnp.float32)).astype(cdt) * up
+    ye = jnp.einsum("tef,efd->ted", he, we_o)                # [T, E, d]
+    yt = jnp.einsum("ted,te->td", ye, weight.astype(cdt))
+    out = yt.reshape(B, S, d).astype(x.dtype)
+    if cfg.n_shared_experts > 0:
+        out = out + glu_ffn(h, p["ws_i"], p["ws_o"], "swiglu")
+    return out, _moe_aux_loss(cfg, probs, onehot)
 
 
 # ---------------------------------------------------------------------------

@@ -217,11 +217,17 @@ def _dense_body(cfg: ModelConfig, positions):
     return body
 
 
-def _moe_body(cfg: ModelConfig, positions):
+def _moe_body(cfg: ModelConfig, positions, train: bool = False):
+    # Training uses the capacity-dropped GShard dispatch (static shapes,
+    # shardable einsums); evaluation routes droplessly so a token's expert
+    # treatment never depends on which other tokens share its dispatch
+    # group — the invariant that lets cached decode match forward().
+    moe = blocks.moe_block if train else blocks.moe_block_dropless
+
     def body(x, p, window):
         a, _ = blocks.attn_block(cfg, p, x, positions, window=window)
         x = x + a
-        m, aux = blocks.moe_block(cfg, p, x)
+        m, aux = moe(cfg, p, x)
         x = x + m
         x = constrain(x, "activation")
         return x, aux
@@ -270,12 +276,15 @@ def unembed(cfg: ModelConfig, params, x):
 
 
 def forward(cfg: ModelConfig, params, tokens, *, patch_embeds=None,
-            encoder_feats=None, return_hidden=False):
+            encoder_feats=None, return_hidden=False, train=False):
     """Teacher-forced forward pass -> hidden states [B, S, d] (pre-unembed).
 
     ``patch_embeds`` [B, P, d] (vlm): prepended to the token embeddings.
     ``encoder_feats`` [B, T, d] (encdec): precomputed frame embeddings fed
     through the encoder stack; the decoder cross-attends to the result.
+    ``train`` selects the training-time MoE implementation (capacity-dropped
+    GShard dispatch); the default is exact dropless evaluation, matching the
+    cached serve path.
     """
     x = embed_tokens(cfg, params, tokens)
     if cfg.family == "vlm" and patch_embeds is not None:
@@ -322,10 +331,13 @@ def forward(cfg: ModelConfig, params, tokens, *, patch_embeds=None,
             wd = _layer_windows(cfg, cfg.n_dense_layers)
             x, _ = _scan_blocks(cfg, _dense_body(cfg, positions), x,
                                 params["dense_blocks"], extra=wd)
-        body = {"dense": _dense_body, "vlm": _dense_body,
-                "moe": _moe_body, "hybrid": _hybrid_body}[cfg.family]
-        x, auxs = _scan_blocks(cfg, body(cfg, positions), x,
-                               params["blocks"], extra=windows)
+        if cfg.family == "moe":
+            body_fn = _moe_body(cfg, positions, train=train)
+        else:
+            body_fn = {"dense": _dense_body, "vlm": _dense_body,
+                       "hybrid": _hybrid_body}[cfg.family](cfg, positions)
+        x, auxs = _scan_blocks(cfg, body_fn, x, params["blocks"],
+                               extra=windows)
         aux = auxs.sum()
     if return_hidden:
         return x, aux

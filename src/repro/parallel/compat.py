@@ -1,0 +1,62 @@
+"""JAX version-compat shims for the parallel layer.
+
+The sharding API surface moved between JAX releases and the container pins
+an older wheel, so nothing in ``repro.parallel`` may touch the new names
+unconditionally:
+
+* ``jax.sharding.AxisType`` (explicit/auto axis types) — absent before 0.5;
+  :func:`make_mesh` accepts ``axis_types`` and silently drops it when the
+  installed JAX cannot express it (meshes are fully ``Auto`` there anyway).
+* ``jax.shard_map`` with ``check_vma=`` — older releases spell it
+  ``jax.experimental.shard_map.shard_map(..., check_rep=)``;
+  :func:`shard_map` hides the rename.
+
+Keep every new-API access in this module so version drift breaks exactly
+one file.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["AXIS_TYPE_AUTO", "make_mesh", "shard_map"]
+
+#: ``jax.sharding.AxisType.Auto`` when the installed JAX has axis types,
+#: else ``None`` (meaning: meshes are implicitly fully automatic).
+AXIS_TYPE_AUTO = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+
+
+def make_mesh(axis_shapes, axis_names, axis_types=None, **kwargs):
+    """``jax.make_mesh`` that tolerates JAX versions without ``axis_types``.
+
+    ``axis_types`` may be a tuple of ``AxisType`` values (new JAX), a tuple
+    of ``None`` / :data:`AXIS_TYPE_AUTO` placeholders, or ``None``.  On old
+    JAX every mesh axis is Auto, which is what the placeholders request, so
+    dropping the argument is semantics-preserving.
+    """
+    if axis_types is not None and AXIS_TYPE_AUTO is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=axis_types, **kwargs)
+        except TypeError:
+            pass  # make_mesh exists but predates the axis_types kwarg
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = True):
+    """Version-stable ``shard_map``.
+
+    ``check`` maps to ``check_vma`` (new JAX) / ``check_rep`` (old JAX) —
+    both toggle the replication/varying-manual-axes verifier.
+    """
+    new_sm = getattr(jax, "shard_map", None)
+    if new_sm is not None:
+        try:
+            return new_sm(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=check)
+        except TypeError:
+            return new_sm(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as old_sm
+
+    return old_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check)

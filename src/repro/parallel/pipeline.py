@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .compat import shard_map
+
 
 def pipeline_apply(stage_fn: Callable, params_stacked, x_microbatches,
                    mesh: Mesh, axis: str = "stage"):
@@ -72,9 +74,9 @@ def pipeline_apply(stage_fn: Callable, params_stacked, x_microbatches,
         return outs
 
     spec_p = jax.tree.map(lambda _: P(axis), params_stacked)
-    fn = jax.shard_map(per_stage, mesh=mesh,
-                       in_specs=(spec_p, P()), out_specs=P(),
-                       check_vma=False)
+    fn = shard_map(per_stage, mesh=mesh,
+                   in_specs=(spec_p, P()), out_specs=P(),
+                   check=False)
     return fn(params_stacked, x_microbatches)
 
 

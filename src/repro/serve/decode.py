@@ -36,7 +36,11 @@ def _layer_step(cfg: ModelConfig, x, p, cache_l, window, positions,
         if fam == "encdec":
             x = x + _cross_attn_cached(cfg, p, x, cache_l)
         if fam == "moe" and "router" in p:
-            m, _ = blocks.moe_block(cfg, p, x)
+            # dropless routing: the capacity-dropped moe_block makes keep
+            # decisions group-relative, so a cached decode step (1-token
+            # groups) would drop tokens forward() kept — see
+            # blocks.moe_block_dropless
+            m, _ = blocks.moe_block_dropless(cfg, p, x)
             x = x + m
         else:
             x = x + blocks.ffn_block(cfg, p, x)

@@ -79,7 +79,7 @@ def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig):
         if cfg.family == "encdec":
             kw["encoder_feats"] = batch["encoder_feats"]
         hidden, aux = forward(cfg, params, batch["tokens"],
-                              return_hidden=True, **kw)
+                              return_hidden=True, train=True, **kw)
         labels = batch["labels"]
         if cfg.family == "vlm":
             # patch positions carry no next-token loss

@@ -1,0 +1,98 @@
+"""Minimal stand-in for ``hypothesis`` in offline environments.
+
+The container that runs tier-1 has no ``hypothesis`` wheel; importing it at
+module scope used to abort *collection* of the whole file.  This shim
+re-exports the real library when present (``pip install -r
+requirements-dev.txt``) and otherwise provides the tiny subset the test
+suite uses — ``given``, ``settings`` and the ``integers`` / ``booleans`` /
+``data`` strategies — backed by deterministic seeded random sampling.
+
+The shim does no shrinking and no example database; it is a property-style
+fuzz loop, not a hypothesis replacement.  Tests written against it must
+stick to the subset above.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample_fn):
+            self._sample_fn = sample_fn
+
+        def sample(self, rng: random.Random):
+            return self._sample_fn(rng)
+
+    class _DataObject:
+        """Interactive draws (``st.data()`` style)."""
+
+        def __init__(self, rng: random.Random):
+            self._rng = rng
+
+        def draw(self, strategy: _Strategy, label: str | None = None):
+            return strategy.sample(self._rng)
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def data() -> _Strategy:
+            return _Strategy(_DataObject)
+
+    st = _StrategiesModule()
+
+    def settings(max_examples: int = 100, **_ignored):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*pos_strategies, **kw_strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            # hypothesis right-aligns positional strategies onto parameters
+            n = len(pos_strategies)
+            pos_names = names[len(names) - n:] if n else []
+            supplied = set(pos_names) | set(kw_strategies)
+            max_examples = getattr(fn, "_shim_max_examples", 25)
+            seed0 = zlib.adler32(fn.__qualname__.encode())
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                for example in range(max_examples):
+                    rng = random.Random(seed0 * 100003 + example)
+                    drawn = {nm: s.sample(rng)
+                             for nm, s in zip(pos_names, pos_strategies)}
+                    for nm, s in kw_strategies.items():
+                        drawn[nm] = s.sample(rng)
+                    fn(*args, **kwargs, **drawn)
+
+            # hide the strategy-supplied parameters from pytest's fixture
+            # resolution (hypothesis does the same via its own wrapper)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for nm, p in sig.parameters.items() if nm not in supplied
+            ])
+            try:
+                del wrapper.__wrapped__
+            except AttributeError:
+                pass
+            return wrapper
+
+        return deco

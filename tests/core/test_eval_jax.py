@@ -1,11 +1,13 @@
-"""JAX evaluator (lut_eval kernel + chain scans) vs the Python oracle."""
+"""JAX evaluators (fused single-jit engine + seed per-level dispatcher)
+vs the Python oracle."""
 import random
 
 import numpy as np
 import pytest
 
 from repro.core.circuits import koios_mac_array, kratos_gemm, sha_like
-from repro.core.eval_jax import eval_netlist_jax
+from repro.core.eval_jax import (eval_netlist_jax, eval_netlist_jax_levels,
+                                 eval_netlists_batched_jax, plan_netlist)
 from repro.core.netlist import bus_to_ints, eval_netlist
 
 
@@ -41,3 +43,46 @@ def test_eval_jax_multiword_lanes():
     for bus in net.pos.values():
         for s in bus:
             assert int(got[s, 2]) == ref[s] & 0xFFFFFFFF
+
+
+def test_fused_matches_levels_dispatcher():
+    """The fused single-jit engine and the seed per-level dispatcher are
+    the same function of the same netlist."""
+    net = koios_mac_array(pes=2, width=4, ctrl_nodes=40)
+    rng = random.Random(5)
+    NW = 2
+    lanes = {s: np.array([rng.getrandbits(32) for _ in range(NW)],
+                         dtype=np.uint32) for s in net.pis}
+    fused = np.asarray(eval_netlist_jax(net, lanes, NW))
+    levels = np.asarray(eval_netlist_jax_levels(net, lanes, NW))
+    assert np.array_equal(fused, levels)
+
+
+def test_precompiled_plan_reuse():
+    net = kratos_gemm(m=3, n=3, width=4, sparsity=0.3)
+    plan = plan_netlist(net)
+    rng = random.Random(9)
+    lanes = {s: np.array([rng.getrandbits(32)], dtype=np.uint32)
+             for s in net.pis}
+    a = np.asarray(eval_netlist_jax(net, lanes, 1))
+    b = np.asarray(eval_netlist_jax(net, lanes, 1, plan=plan))
+    assert np.array_equal(a, b)
+
+
+def test_batched_multi_circuit_eval():
+    """Different circuits, one vmapped jit: each must match its own
+    single-circuit evaluation."""
+    nets = [kratos_gemm(m=3, n=3, width=4, sparsity=0.3),
+            sha_like(rounds=1),
+            koios_mac_array(pes=2, width=4, ctrl_nodes=40)]
+    rng = random.Random(3)
+    NW = 2
+    lanes_list = [{s: np.array([rng.getrandbits(32) for _ in range(NW)],
+                               dtype=np.uint32) for s in net.pis}
+                  for net in nets]
+    outs = eval_netlists_batched_jax(nets, lanes_list, NW)
+    for net, lanes, got in zip(nets, lanes_list, outs):
+        single = np.asarray(eval_netlist_jax(net, lanes, NW))
+        for bus in net.pos.values():
+            for s in bus:
+                assert np.array_equal(got[s], single[s]), (net.name, s)

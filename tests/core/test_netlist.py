@@ -1,7 +1,7 @@
 """IR-level tests: truth tables, structural hashing, sweep, evaluation."""
 import random
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.netlist import (CONST0, CONST1, Netlist, TT_AND2, TT_MAJ3,
                                 TT_XOR2, TT_XOR3, bus_to_ints, eval_netlist,

@@ -3,7 +3,7 @@ correct multipliers (netlist evaluation == integer arithmetic)."""
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.netlist import Netlist, bus_to_ints, eval_netlist
 from repro.core.synth import (ALGOS, synth_const_mult, synth_dot_const,

@@ -81,6 +81,34 @@ def test_lut_eval_known_functions():
     assert got[1, 0] == 0b0110
 
 
+@pytest.mark.parametrize("m,nlanes", [(8, 4), (300, 8), (513, 2)])
+def test_lut_eval6_fused_layout(m, nlanes):
+    r = rng(m * 7)
+    ins = r.integers(0, 2**32, size=(m, 6, nlanes), dtype=np.uint32)
+    tt_lo = r.integers(0, 2**32, size=(m,), dtype=np.uint32)
+    tt_hi = r.integers(0, 2**32, size=(m,), dtype=np.uint32)
+    got = ops.lut_eval6(jnp.asarray(ins), jnp.asarray(tt_lo),
+                        jnp.asarray(tt_hi))
+    want = ref.lut_eval6_ref(jnp.asarray(ins), jnp.asarray(tt_lo),
+                             jnp.asarray(tt_hi))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_lut_eval6_shannon_select():
+    # pin5 selects between the lo/hi table words: table = XOR2 in lo,
+    # AND2 in hi, pin5 toggling per lane bit
+    ins = np.zeros((1, 6, 1), dtype=np.uint32)
+    ins[0, 0, 0] = 0b1100
+    ins[0, 1, 0] = 0b1010
+    ins[0, 5, 0] = 0b0011  # vector bits 0-1 read hi, bits 2-3 read lo
+    lo = np.array([0x66666666], dtype=np.uint32)  # XOR2 replicated
+    hi = np.array([0x88888888], dtype=np.uint32)  # AND2 replicated
+    got = np.asarray(ops.lut_eval6(jnp.asarray(ins), jnp.asarray(lo),
+                                   jnp.asarray(hi)))
+    # bits 2,3 (lo): XOR2(1,0)=1, XOR2(1,1)=0; bits 0,1 (hi): AND2=0
+    assert got[0, 0] == 0b0100
+
+
 # ---------------------------------------------------------------------------
 # bitplane_matmul
 # ---------------------------------------------------------------------------

@@ -13,6 +13,8 @@ from repro.train.step import TrainConfig, make_train_step
 
 ARCHS = [a for a in list_configs()]
 
+pytestmark = pytest.mark.slow  # model-substrate tier: minutes of CPU
+
 
 def _extras(cfg, B):
     kw = {}

@@ -6,15 +6,17 @@ import sys
 import json
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess + 8-device host mesh
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp, numpy as np
 from repro.parallel.pipeline import pipeline_apply, bubble_fraction
+from repro.parallel.compat import AXIS_TYPE_AUTO, make_mesh
 
-mesh = jax.make_mesh((4,), ("stage",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("stage",), axis_types=(AXIS_TYPE_AUTO,))
 S, n_mb, mb, d = 4, 8, 2, 16
 r = np.random.default_rng(0)
 W = jnp.asarray(r.standard_normal((S, d, d)).astype(np.float32) * 0.3)

@@ -22,6 +22,8 @@ from repro.train.optimizer import (OptConfig, adamw_init, adamw_update,
                                    global_norm)
 from repro.train.step import TrainConfig
 
+pytestmark = pytest.mark.slow  # model-substrate tier: minutes of CPU
+
 
 def test_adamw_matches_numpy_reference():
     cfg = OptConfig(lr=1e-2, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
