@@ -10,10 +10,8 @@ wider operands → larger compressor clouds per chain (more co-packing fuel).
 """
 from __future__ import annotations
 
-from repro.core.alm import BASELINE, DD5
+from repro.core import flow
 from repro.core.circuits import kratos_gemm
-from repro.core.packing import pack
-from repro.core.timing import analyze
 
 from .common import Timer, emit
 
@@ -22,8 +20,8 @@ def run(verbose: bool = True):
     out = {"sparsity": [], "width": []}
     for sp in (0.0, 0.25, 0.5, 0.75):
         net = kratos_gemm("sweep", m=8, n=8, width=6, sparsity=sp, seed=1)
-        b = analyze(pack(net, BASELINE, seed=0))
-        d = analyze(pack(net, DD5, seed=0))
+        pa = flow.run_circuit(net, ("baseline", "dd5"), seeds=(0,))
+        b, d = pa["baseline"], pa["dd5"]
         rec = {"sparsity": sp, "area_ratio": d["area_mwta"] / b["area_mwta"],
                "conc": d["concurrent_luts"], "alms_base": b["alms"]}
         out["sparsity"].append(rec)
@@ -32,8 +30,8 @@ def run(verbose: bool = True):
                  f"area={rec['area_ratio']:.3f};conc={rec['conc']}")
     for wd in (4, 6, 8):
         net = kratos_gemm("sweep", m=8, n=8, width=wd, sparsity=0.5, seed=1)
-        b = analyze(pack(net, BASELINE, seed=0))
-        d = analyze(pack(net, DD5, seed=0))
+        pa = flow.run_circuit(net, ("baseline", "dd5"), seeds=(0,))
+        b, d = pa["baseline"], pa["dd5"]
         rec = {"width": wd, "area_ratio": d["area_mwta"] / b["area_mwta"],
                "conc": d["concurrent_luts"]}
         out["width"].append(rec)

@@ -1,15 +1,17 @@
-"""Shared helpers for the paper-figure benchmarks."""
+"""Shared helpers for the paper-figure benchmarks.
+
+Metric computation lives in ``repro.core.flow`` (the unified CAD flow
+pipeline); this module keeps only the benchmark-side conveniences: suite
+construction, geomean, CSV emission and timing.
+"""
 from __future__ import annotations
 
 import math
 import time
 
-from repro.core.alm import ARCHS
 from repro.core.circuits import kratos_suite, koios_suite, vtr_suite
-from repro.core.packing import pack
-from repro.core.timing import analyze
-
-SEEDS = (0, 1, 2)  # the paper averages three placement seeds
+from repro.core.flow import DEFAULT_SEEDS as SEEDS
+from repro.core.flow import pack_and_analyze
 
 
 def geomean(xs):
@@ -26,17 +28,8 @@ def suites(algo: str = "wallace"):
 
 
 def pack_metrics(net, arch_name: str, seeds=SEEDS) -> dict:
-    """Average analyze() metrics over placement seeds."""
-    arch = ARCHS[arch_name]
-    acc: dict[str, float] = {}
-    for s in seeds:
-        r = analyze(pack(net, arch, seed=s))
-        for k in ("alms", "area_mwta", "critical_path_ps", "adp",
-                  "concurrent_luts", "lbs"):
-            acc[k] = acc.get(k, 0.0) + r[k] / len(seeds)
-    acc["adders"] = net.n_adders
-    acc["luts"] = net.n_luts
-    return acc
+    """Seed-averaged analyze() metrics (thin alias over the flow pipeline)."""
+    return pack_and_analyze(net, arch_name, seeds=seeds)
 
 
 class Timer:

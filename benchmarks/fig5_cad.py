@@ -8,9 +8,10 @@ best overall.
 """
 from __future__ import annotations
 
+from repro.core import flow
 from repro.core.circuits import kratos_suite
 
-from .common import Timer, emit, geomean, pack_metrics
+from .common import Timer, emit, geomean
 
 ALGOS = ("vtr_baseline", "cascade", "binary", "wallace", "dadda", "pw")
 
@@ -20,7 +21,7 @@ def run(scale: float = 1.0, verbose: bool = True):
     base_metrics: list[dict] | None = None
     for algo in ALGOS:
         nets = kratos_suite(algo=algo, scale=scale)
-        ms = [pack_metrics(net, "baseline") for net in nets]
+        ms = [flow.pack_and_analyze(net, "baseline") for net in nets]
         if algo == "vtr_baseline":
             base_metrics = ms
         norm = {

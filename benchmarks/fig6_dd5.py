@@ -2,43 +2,42 @@
 
 Paper: ALM area −21.6 % (Kratos), −9.3 % (Koios), −8.2 % (VTR); critical
 path flat on average; ADP −9.7 % over all circuits.
+
+Packing, analysis and ratio computation run through the unified
+``repro.core.flow`` pipeline; this driver only aggregates and emits.
 """
 from __future__ import annotations
 
-from .common import Timer, emit, geomean, pack_metrics, suites
+from repro.core import flow
+
+from .common import Timer, emit, geomean, suites
+
+RATIO_KEYS = {"area": "area_mwta", "cpd": "critical_path_ps", "adp": "adp"}
 
 
 def run(verbose: bool = True):
     out: dict[str, dict] = {}
-    all_adp_ratios = []
-    all_area_ratios = []
-    all_cpd_ratios = []
-    for suite_name, nets in suites("wallace").items():
-        area_r, cpd_r, adp_r, conc = [], [], [], []
-        for net in nets:
-            b = pack_metrics(net, "baseline")
-            d = pack_metrics(net, "dd5")
-            area_r.append(d["area_mwta"] / b["area_mwta"])
-            cpd_r.append(d["critical_path_ps"] / b["critical_path_ps"])
-            adp_r.append(d["adp"] / b["adp"])
-            conc.append(d["concurrent_luts"])
-            if verbose:
-                emit(f"fig6/{suite_name}/{net.name}", 0,
-                     f"area={area_r[-1]:.3f};cpd={cpd_r[-1]:.3f};"
-                     f"adp={adp_r[-1]:.3f};conc={conc[-1]:.0f}")
-        out[suite_name] = {
-            "area": geomean(area_r),
-            "cpd": geomean(cpd_r),
-            "adp": geomean(adp_r),
-        }
-        all_adp_ratios.extend(adp_r)
-        all_area_ratios.extend(area_r)
-        all_cpd_ratios.extend(cpd_r)
-    out["overall"] = {
-        "area": geomean(all_area_ratios),
-        "cpd": geomean(all_cpd_ratios),
-        "adp": geomean(all_adp_ratios),
-    }
+    all_ratios: dict[str, list[float]] = {k: [] for k in RATIO_KEYS}
+
+    def progress(suite_name, net, per_arch):
+        if verbose:
+            r = flow.ratios_vs_baseline(per_arch)["dd5"]
+            emit(f"fig6/{suite_name}/{net.name}", 0,
+                 f"area={r['area_mwta']:.3f};cpd={r['critical_path_ps']:.3f};"
+                 f"adp={r['adp']:.3f};"
+                 f"conc={per_arch['dd5']['concurrent_luts']:.0f}")
+
+    results = flow.run_suites(suites("wallace"), ("baseline", "dd5"),
+                              per_circuit=progress)
+    for suite_name, rows in results.items():
+        per_key: dict[str, list[float]] = {k: [] for k in RATIO_KEYS}
+        for row in rows:
+            r = flow.ratios_vs_baseline(row["per_arch"])["dd5"]
+            for k, mk in RATIO_KEYS.items():
+                per_key[k].append(r[mk])
+                all_ratios[k].append(r[mk])
+        out[suite_name] = {k: geomean(v) for k, v in per_key.items()}
+    out["overall"] = {k: geomean(v) for k, v in all_ratios.items()}
     return out
 
 

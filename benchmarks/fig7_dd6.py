@@ -2,31 +2,33 @@
 
 Paper: DD6 gives minor extra area savings on Kratos only, costs ~8 % Fmax,
 and loses on ADP — the added 6-LUT concurrency is not worth it.
+
+Packing, analysis and ratio computation run through the unified
+``repro.core.flow`` pipeline; this driver only aggregates and emits.
 """
 from __future__ import annotations
 
-from .common import Timer, emit, geomean, pack_metrics, suites
+from repro.core import flow
+
+from .common import Timer, emit, geomean, suites
+
+RATIO_KEYS = {"area": "area_mwta", "cpd": "critical_path_ps", "adp": "adp"}
 
 
 def run(verbose: bool = True):
     out: dict[str, dict] = {}
-    for suite_name, nets in suites("wallace").items():
-        rows = {"dd5": [], "dd6": []}
-        for net in nets:
-            b = pack_metrics(net, "baseline")
-            for arch in ("dd5", "dd6"):
-                m = pack_metrics(net, arch)
-                rows[arch].append({
-                    "area": m["area_mwta"] / b["area_mwta"],
-                    "cpd": m["critical_path_ps"] / b["critical_path_ps"],
-                    "adp": m["adp"] / b["adp"],
-                })
+    results = flow.run_suites(suites("wallace"),
+                              ("baseline", "dd5", "dd6"))
+    for suite_name, rows in results.items():
+        per_arch_ratios: dict[str, list[dict]] = {"dd5": [], "dd6": []}
+        for row in rows:
+            for arch, r in flow.ratios_vs_baseline(row["per_arch"]).items():
+                per_arch_ratios[arch].append(
+                    {k: r[mk] for k, mk in RATIO_KEYS.items()})
         out[suite_name] = {
-            arch: {
-                k: geomean([r[k] for r in rows[arch]])
-                for k in ("area", "cpd", "adp")
-            }
-            for arch in ("dd5", "dd6")
+            arch: {k: geomean([r[k] for r in rows_])
+                   for k in RATIO_KEYS}
+            for arch, rows_ in per_arch_ratios.items()
         }
         if verbose:
             for arch in ("dd5", "dd6"):

@@ -3,19 +3,19 @@
 500 adders + 0..500 unrelated 5-LUTs.  Paper: DD5 area stays flat until the
 ALMs saturate; concurrently packed 5-LUTs saturate at ~375 (75 %).
 
-The saturated stress circuit (500 adders + 500 LUTs) doubles as the
+The *layered* saturated stress circuit (500 adders + 500 LUTs feeding two
+3x-smaller layers — a wide-then-narrow level profile) doubles as the
 standard workload for the netlist-evaluation engine: ``run_eval_benchmark``
-times the fused single-jit evaluator against the seed per-level dispatcher
-on it, proves pack/re-elaborate equivalence with the new ``core.equiv``
-subsystem, and reports the fused engine's roofline terms.
+times the width-bucketed fused evaluator against the seed per-level
+dispatcher on it, proves pack/re-elaborate equivalence through the
+``core.flow`` pipeline, and reports the engine's roofline terms — including
+the per-bucket padding waste next to the old single-envelope waste.
 """
 from __future__ import annotations
 
-import random
 import time
 
-import numpy as np
-
+from repro.core import flow
 from repro.core.alm import BASELINE, DD5
 from repro.core.stress import run_packing_stress, packing_stress_circuit
 
@@ -37,10 +37,13 @@ def run(verbose: bool = True):
     return out
 
 
-def eval_workload(n_adders: int = 500, n_luts: int = 500, seed: int = 0):
-    """The canonical evaluation workload: the saturated Fig. 9 circuit."""
+def eval_workload(n_adders: int = 500, n_luts: int = 500, seed: int = 0,
+                  depth: int = 3):
+    """The canonical evaluation workload: the saturated Fig. 9 circuit,
+    stacked ``depth`` layers deep (each 3x smaller) so the level-width
+    profile exercises the evaluator's width buckets."""
     return packing_stress_circuit(n_adders=n_adders, n_luts=n_luts,
-                                  seed=seed)
+                                  seed=seed, depth=depth)
 
 
 def run_eval_benchmark(n_lane_words: int = 8, use_pallas: bool = True,
@@ -50,20 +53,18 @@ def run_eval_benchmark(n_lane_words: int = 8, use_pallas: bool = True,
 
     Returns a record with best-of-``reps`` wall times (post-warmup, so the
     fused number excludes its one-time compile), the speedup, the fused
-    engine's analytic roofline terms, and — when ``check_equiv`` — the
-    pack/re-elaborate equivalence verdicts for baseline and DD5.
+    engine's analytic roofline terms (bucketed and single-envelope padding
+    waste side by side), and — when ``check_equiv`` — the pack/
+    re-elaborate equivalence verdicts for baseline and DD5.
     """
     import jax
 
     from repro.core.equiv import check_pack_equivalence
-    from repro.core.eval_jax import (eval_netlist_jax,
-                                     eval_netlist_jax_levels, plan_netlist)
+    from repro.core.eval_jax import eval_netlist_jax_levels, plan_netlist
     from .roofline import netlist_eval_terms
 
     net = eval_workload()
-    rng = random.Random(0)
-    lanes = {s: np.array([rng.getrandbits(32) for _ in range(n_lane_words)],
-                         dtype=np.uint32) for s in net.pis}
+    lanes = flow.random_lanes(net, n_lane_words, seed=0)
     plan = plan_netlist(net)
 
     def bench(fn):
@@ -77,10 +78,11 @@ def run_eval_benchmark(n_lane_words: int = 8, use_pallas: bool = True,
 
     t_levels = bench(lambda: eval_netlist_jax_levels(
         net, lanes, n_lane_words, use_pallas=use_pallas))
-    t_fused = bench(lambda: eval_netlist_jax(
+    t_fused = bench(lambda: flow.evaluate_netlist(
         net, lanes, n_lane_words, use_pallas=use_pallas, plan=plan))
     rec = {
-        "workload": "fig9_stress(500 adders, 500 luts)",
+        "workload": f"fig9_stress({net.name}: 500+ adders, 500+ luts, "
+                    f"layered)",
         "n_lane_words": n_lane_words,
         "n_vectors": n_lane_words * 32,
         "use_pallas": use_pallas,

@@ -148,34 +148,55 @@ def netlist_eval_terms(net, n_lane_words: int, plan=None) -> dict:
     The arithmetic intensity (ops/byte) says which side of the machine the
     evaluator saturates — on every real circuit it is compute-bound, which
     is why fusing away the per-level dispatch dominated the wall clock.
+
+    Ops/bytes and ``padding_waste`` are summed per width bucket of the
+    multi-scan plan; ``padding_waste_single_envelope`` is what the same
+    circuit would waste under the old one-worst-case-envelope layout, so
+    the bucketing win is visible in the CSV output.
     """
     from repro.core.eval_jax import plan_netlist
 
     if plan is None:
         plan = plan_netlist(net)
     N = n_lane_words
-    L = plan.n_levels
-    M = plan.lut_out.shape[1] if plan.has_luts else 0
-    C = plan.ch_cout.shape[1] if plan.has_chains else 0
-    B = plan.ch_a.shape[2] if plan.has_chains else 0
-    lut_ops = L * M * N * (32 * 7 + 4)
-    chain_ops = L * C * B * N * 7
-    lut_bytes = L * (M * 6 * N * 4 + M * N * 4 + M * (4 * 2 + 24))
-    chain_bytes = L * C * ((2 * B + 2) * N * 4 + (B + 1) * N * 4 + 4 * B * 2)
-    word_ops = lut_ops + chain_ops
-    hbm = lut_bytes + chain_bytes
+    word_ops = 0
+    hbm = 0
+    per_bucket = []
+    for bk in plan.buckets:
+        l, M, C, B = bk.shape
+        M = M if bk.has_luts else 0
+        C = C if bk.has_chains else 0
+        B = B if bk.has_chains else 0
+        lut_ops = l * M * N * (32 * 7 + 4)
+        chain_ops = l * C * B * N * 7
+        lut_bytes = l * (M * 6 * N * 4 + M * N * 4 + M * (4 * 2 + 24))
+        chain_bytes = l * C * ((2 * B + 2) * N * 4 + (B + 1) * N * 4
+                               + 4 * B * 2)
+        word_ops += lut_ops + chain_ops
+        hbm += lut_bytes + chain_bytes
+        per_bucket.append({
+            "levels": l, "M": M, "C": C, "B": B,
+            "padded_lut_rows": l * M,
+            "padded_chain_bits": l * C * B,
+        })
+    padded = plan.padded_lut_rows + plan.padded_chain_bits
+    L, M, C, B = plan.envelope
+    padded_single = L * M + L * C * B
+    real = net.n_luts + net.n_adders
     return {
         "word_ops": word_ops,
         "hbm_bytes": hbm,
         "intensity_ops_per_byte": word_ops / max(hbm, 1),
         "t_memory": hbm / HBM_BW,
-        "levels": L,
-        "padded_lut_rows": L * M,
-        "padded_chain_bits": L * C * B,
+        "levels": plan.n_levels,
+        "n_buckets": len(plan.buckets),
+        "buckets": per_bucket,
+        "padded_lut_rows": plan.padded_lut_rows,
+        "padded_chain_bits": plan.padded_chain_bits,
         "real_luts": net.n_luts,
         "real_chain_bits": net.n_adders,
-        "padding_waste": 1.0 - (net.n_luts + net.n_adders)
-        / max(L * M + L * C * B, 1),
+        "padding_waste": 1.0 - real / max(padded, 1),
+        "padding_waste_single_envelope": 1.0 - real / max(padded_single, 1),
     }
 
 

@@ -3,6 +3,9 @@
 Fix the FPGA size needed for a Kratos base circuit (+ margin), then count how
 many extra SHA instances fit.  Paper: +80 % / +66.7 % / +18.2 % instances for
 conv1d / conv2d / gemmt, with slightly *better* critical paths on DD5.
+
+The capacity sweep (``core.stress.run_e2e_stress``) packs and analyzes
+through the unified ``repro.core.flow`` pipeline.
 """
 from __future__ import annotations
 

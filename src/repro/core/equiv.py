@@ -34,18 +34,29 @@ Flow
    primary output — plus every re-elaborated internal signal, so a
    mismatch localizes to the first corrupted node.
 
-3. :func:`check_pack_equivalence` / :func:`verify_all_archs` are the
+3. :func:`symbolic_equivalence_report` is the **per-ALM symbolic fast
+   path**: every re-elaborated LUT mask is compared truth-table-to-truth-
+   table against the source function (canonicalized over sorted support),
+   and every arithmetic half's operand masks are composed into the half's
+   sum and carry functions with :func:`~repro.core.netlist.tt_compose` and
+   compared directly.  When every cone stays within 6 inputs this proves
+   equivalence without simulating a single vector — and a symbolic
+   mismatch *localizes* the corrupted node.  Cones wider than 6 inputs
+   fall back to lane simulation.
+
+4. :func:`check_pack_equivalence` / :func:`verify_all_archs` are the
    one-call gates used by tests and benchmarks: pack, re-elaborate, prove —
    for baseline, DD5 and DD6, so the A/B area comparison is provably
-   apples-to-apples.
+   apples-to-apples.  The gates run the symbolic fast path first and only
+   simulate the cones it could not close.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
 from .alm import ARCHS, ArchParams
-from .netlist import (CONST0, CONST1, TT_BUF, Netlist, eval_netlist,
-                      tt_compose)
+from .netlist import (CONST0, CONST1, TT_BUF, TT_MAJ3, TT_XOR3, Netlist,
+                      eval_netlist, tt_compose, tt_eval, tt_reduce)
 from .packing import PackedCircuit, pack
 
 
@@ -185,6 +196,187 @@ def reelaborate(packed: PackedCircuit) -> ReElaboration:
 
 
 # ---------------------------------------------------------------------------
+# per-ALM symbolic fast path
+# ---------------------------------------------------------------------------
+
+# sentinel variable id for the free ripple-carry input of a chain bit;
+# signals are >= 0, so negatives never collide
+_CARRY_VAR = -1
+
+
+def _canon(inputs, tt):
+    """Canonical (sorted-support, reduced) form of a small boolean cone."""
+    inputs, tt = tt_reduce(inputs, tt)
+    order = sorted(range(len(inputs)), key=lambda j: inputs[j])
+    new_inputs = tuple(inputs[j] for j in order)
+    new_tt = 0
+    for m in range(1 << len(inputs)):
+        asgn = 0
+        for nj, oj in enumerate(order):
+            if (m >> nj) & 1:
+                asgn |= 1 << oj
+        if tt_eval(tt, asgn):
+            new_tt |= 1 << m
+    return new_inputs, new_tt
+
+
+def _sig_cone(net: Netlist, s: int):
+    """A signal as a one-level cone: its driving LUT's (inputs, tt), a
+    constant, or itself as a free variable (PIs, chain sums/couts)."""
+    if s == CONST0:
+        return (), 0
+    if s == CONST1:
+        return (), 1
+    drv = net.driver.get(s)
+    if drv is not None and drv[0] == "lut":
+        i = drv[1]
+        return net.lut_inputs[i], net.lut_tt[i]
+    return (s,), TT_BUF
+
+
+def _compose_half(net: Netlist, a: int, b: int, cin, outer_tt: int):
+    """Compose the operand cones of one FA bit into ``outer_tt(a, b, c)``.
+
+    ``cin`` is a signal id for bit 0 or ``_CARRY_VAR`` for the free ripple
+    carry.  Raises ValueError when the merged support exceeds 6 inputs —
+    the caller falls back to lane simulation for that cone.
+    """
+    a_ins, a_tt = _sig_cone(net, a)
+    b_ins, b_tt = _sig_cone(net, b)
+    ins, tt = tt_compose(outer_tt, (-2, -3, cin), 0, a_tt, a_ins)
+    pin_b = ins.index(-3)
+    ins, tt = tt_compose(tt, ins, pin_b, b_tt, b_ins)
+    return _canon(ins, tt)
+
+
+def symbolic_equivalence_report(src: Netlist,
+                                re_elab: ReElaboration) -> dict:
+    """Per-ALM symbolic equivalence: truth tables, not test vectors.
+
+    Walks the source in topo order.  LUT nodes compare their canonical
+    cone (inputs mapped into physical ids) against the physical driver's
+    cone — this is where re-composed absorption masks are verified bit-for-
+    bit.  Chain bits compose both sides' operand masks into the sum
+    (``XOR3``) and carry (``MAJ3``) functions with ``tt_compose``; a
+    merged support wider than 6 inputs is recorded in ``fallback`` for
+    lane simulation instead.  ``equivalent`` is True only when every cone
+    was proven and none fell back; a symbolic mismatch names the first
+    corrupted source node in ``mismatches``.
+    """
+    phys, sig_map = re_elab.phys, re_elab.sig_map
+    proven_luts = proven_bits = 0
+    fallback: list[tuple] = []
+    mismatches: list[dict] = []
+
+    def map_support(cone):
+        """Re-express a source-space cone in physical signal ids (None when
+        some input never got mapped — that cone goes to simulation)."""
+        ins, tt = cone
+        mapped = []
+        for s in ins:
+            if s < 0:  # the free carry variable
+                mapped.append(s)
+            elif s in sig_map:
+                mapped.append(sig_map[s])
+            else:
+                return None
+        return _canon(tuple(mapped), tt)
+
+    for nd in src.topo_order():
+        kind, idx = nd
+        if kind == "lut":
+            out = src.lut_out[idx]
+            p_out = sig_map.get(out)
+            want = map_support((src.lut_inputs[idx], src.lut_tt[idx]))
+            if p_out is None or want is None:
+                fallback.append(nd)
+                continue
+            # structural hashing may collapse the re-composed mask onto an
+            # existing signal or constant — a wire/const `want` proves the
+            # node by the mapping itself, no physical LUT to compare
+            if (want == ((p_out,), TT_BUF)
+                    or (want == ((), 0) and p_out == CONST0)
+                    or (want == ((), 1) and p_out == CONST1)
+                    or want == _canon(*_sig_cone(phys, p_out))):
+                proven_luts += 1
+            else:
+                mismatches.append({"node": nd, "signal": out,
+                                   "phys_signal": p_out, "want": want})
+        else:
+            ch = src.chains[idx]
+            p_first = sig_map.get(ch.sums[0])
+            drv = phys.driver.get(p_first) if p_first is not None else None
+            if drv is None or drv[0] != "chain":
+                fallback.append(nd)
+                continue
+            pch = phys.chains[drv[1]]
+            if (len(pch.sums) != len(ch.sums)
+                    or any(sig_map.get(s) != ps
+                           for s, ps in zip(ch.sums, pch.sums))
+                    or (ch.cout is not None
+                        and sig_map.get(ch.cout) != pch.cout)):
+                fallback.append(nd)
+                continue
+            for bi in range(len(ch.sums)):
+                if bi == 0:
+                    cin = sig_map.get(ch.cin, ch.cin)
+                    if cin != pch.cin:
+                        fallback.append((kind, idx, bi))
+                        continue
+                else:
+                    cin = _CARRY_VAR
+                # the half's operands reference the same physical signals on
+                # both sides by construction; proving that (the shallow
+                # skeleton) plus the per-LUT mask proofs above closes the
+                # bit by induction along the carry
+                shallow = (sig_map.get(ch.a[bi]) == pch.a[bi]
+                           and sig_map.get(ch.b[bi]) == pch.b[bi])
+                try:
+                    deep = True
+                    for outer in (TT_XOR3, TT_MAJ3):
+                        want = map_support(_compose_half(
+                            src, ch.a[bi], ch.b[bi], ch.cin
+                            if bi == 0 else _CARRY_VAR, outer))
+                        got = _compose_half(
+                            phys, pch.a[bi], pch.b[bi], cin, outer)
+                        if want is None:
+                            raise ValueError("unmapped cone input")
+                        if want != got:
+                            deep = False
+                            break
+                    if deep or shallow:
+                        # a deep!=shallow disagreement is a cone-depth
+                        # artifact (wire-collapsed operand), not corruption
+                        proven_bits += 1
+                    else:
+                        mismatches.append({
+                            "node": (kind, idx, bi),
+                            "signal": ch.sums[bi],
+                            "phys_signal": pch.sums[bi]})
+                except ValueError:  # merged cone support > 6 inputs
+                    if shallow:
+                        proven_bits += 1
+                    else:
+                        fallback.append((kind, idx, bi))
+
+    po_ok = all(
+        [sig_map.get(s) for s in bus] == phys.pos.get(name)
+        for name, bus in src.pos.items())
+    return {
+        "name": src.name,
+        "method": "symbolic",
+        "proven_luts": proven_luts,
+        "proven_chain_bits": proven_bits,
+        "fallback": fallback,
+        "pos_checked": sum(len(b) for b in src.pos.values()),
+        "signals_checked": len(sig_map),
+        "mismatches": mismatches,
+        "complete": not fallback and po_ok,
+        "equivalent": po_ok and not fallback and not mismatches,
+    }
+
+
+# ---------------------------------------------------------------------------
 # equivalence checking
 # ---------------------------------------------------------------------------
 
@@ -286,12 +478,34 @@ def assert_equivalent(src: Netlist, re_elab: ReElaboration,
 
 def check_pack_equivalence(net: Netlist, arch: ArchParams, seed: int = 0,
                            n_vectors: int = 256, use_jax: bool = False,
-                           **pack_kwargs) -> dict:
-    """Pack ``net`` under ``arch``, re-elaborate, and prove equivalence."""
+                           method: str = "auto", **pack_kwargs) -> dict:
+    """Pack ``net`` under ``arch``, re-elaborate, and prove equivalence.
+
+    ``method``: ``"auto"`` runs the per-ALM symbolic fast path first and
+    falls back to lane simulation only when some cone could not be closed
+    symbolically; ``"simulate"`` forces the random-lane proof;
+    ``"symbolic"`` returns the symbolic report as-is (``equivalent`` is
+    False when incomplete).
+    """
+    if method not in ("auto", "symbolic", "simulate"):
+        raise ValueError(f"unknown equivalence method {method!r}")
     packed = pack(net, arch, seed=seed, **pack_kwargs)
     re_elab = reelaborate(packed)
-    rep = equivalence_report(net, re_elab, n_vectors=n_vectors, seed=seed,
-                             use_jax=use_jax)
+    if method in ("auto", "symbolic"):
+        rep = symbolic_equivalence_report(net, re_elab)
+        if method == "auto" and not rep["equivalent"]:
+            # incomplete or suspected corruption: the random-lane proof is
+            # the authority; keep the symbolic localization alongside
+            srep = rep
+            rep = equivalence_report(net, re_elab, n_vectors=n_vectors,
+                                     seed=seed, use_jax=use_jax)
+            rep["method"] = "simulate"
+            if srep["mismatches"]:
+                rep["symbolic_mismatches"] = srep["mismatches"]
+    else:
+        rep = equivalence_report(net, re_elab, n_vectors=n_vectors,
+                                 seed=seed, use_jax=use_jax)
+        rep["method"] = "simulate"
     rep["arch"] = arch.name
     rep["alms"] = packed.n_alms
     rep["concurrent_luts"] = packed.concurrent_luts
@@ -302,8 +516,10 @@ def check_pack_equivalence(net: Netlist, arch: ArchParams, seed: int = 0,
 
 
 def verify_all_archs(net: Netlist, seed: int = 0, n_vectors: int = 256,
-                     use_jax: bool = False) -> dict[str, dict]:
+                     use_jax: bool = False,
+                     method: str = "auto") -> dict[str, dict]:
     """The apples-to-apples gate: prove pack equivalence under every arch."""
     return {name: check_pack_equivalence(net, arch, seed=seed,
-                                         n_vectors=n_vectors, use_jax=use_jax)
+                                         n_vectors=n_vectors, use_jax=use_jax,
+                                         method=method)
             for name, arch in ARCHS.items()}

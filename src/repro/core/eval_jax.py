@@ -1,36 +1,54 @@
 """Bit-parallel netlist evaluation in JAX (the simulator's compute layer).
 
-Fused single-jit engine
------------------------
-The netlist is levelized once (compile time) into a :class:`FusedPlan`:
-every LUT level is padded to a uniform ``[L, M_max, 6]`` tensor (tables
-split into two uint32 words, pin 5 Shannon-selects), every chain level to
-``[L, C_max, B_max]``.  One ``lax.scan`` over levels then evaluates the
-whole circuit inside a single jit:
+Width-bucketed multi-scan engine
+--------------------------------
+The netlist is levelized once (compile time) into a :class:`FusedPlan`.
+Instead of padding every level to one worst-case ``[L, M_max, 6]`` envelope
+(a circuit with one wide level then wastes rows on every other level), the
+level sequence is partitioned into at most ``max_buckets`` *contiguous*
+segments — width buckets — by a small dynamic program that minimizes the
+total padded volume.  Each bucket is padded only to its own envelope
+``[l_b, M_b, 6]`` / ``[l_b, C_b, B_b]`` and evaluated by its own
+``lax.scan``; the scans run back-to-back inside a **single jit**, so the
+one-program property of the fused engine is preserved while the padding
+waste drops to the per-bucket optimum:
 
-* level ``t`` gathers its LUT input lanes from the signal-value buffer,
-  runs one fused ``lut_eval6`` kernel call, and scatters the outputs;
+* a scan step gathers the level's LUT input lanes from the signal-value
+  buffer, runs one fused ``lut_eval6`` kernel call, and scatters the
+  outputs;
 * the level's carry chains ripple inside the same scan step (a nested
-  bit-scan over the stacked ``[C_max, B_max]`` layout — one scan for *all*
-  chains of the level, not one dispatch per chain);
-* padded rows read constant-0 lanes and write a reserved sink row, so the
+  bit-scan over the stacked ``[C_b, B_b]`` layout — one scan for *all*
+  chains of the level);
+* padded rows read constant-0 lanes and write a reserved sink row, so each
   scan body is shape-uniform with zero per-level Python dispatch.
 
-The value buffer is donated to the jit (``donate_argnums``), so evaluation
-reuses it in place, and :func:`eval_netlists_batched_jax` stacks several
-circuits' plans into one ``vmap``-ed call — the layout that lets functional
-validation of baseline/DD5/DD6 re-elaborations run concurrently.
+Suite-scale batched evaluation
+------------------------------
+:func:`eval_netlists_batched_jax` evaluates many circuits per device
+program.  Plans are clustered by *compatible envelopes* (agglomerative
+merging on the padded-volume increase, capped at ``max_groups`` groups), so
+a whole benchmark suite compiles into a handful of vmapped jit programs
+instead of either one-per-circuit or one worst-case envelope covering
+everything.  Within a group the bucket boundaries are recomputed on the
+group's combined per-level width profile, members are padded to the group
+envelope, and one ``vmap``-ed multi-scan evaluates the group.
 
-The seed per-level dispatcher (one kernel launch per level from a Python
-loop) survives as :func:`eval_netlist_jax_levels` — it is the baseline the
-perf trajectory measures the fused engine against — and the Python
+Plans and grouped device tensors are cached by netlist content digest
+(:func:`netlist_digest`), so repeated benchmark figures reuse both the
+levelization work and — because shapes repeat — the jit compile cache.
+
+The value buffer is donated to the jit (``donate_argnums``), so evaluation
+reuses it in place.  The seed per-level dispatcher (one kernel launch per
+level from a Python loop) survives as :func:`eval_netlist_jax_levels` — the
+baseline the perf trajectory measures against — and the Python
 ``eval_netlist`` oracle in ``netlist.py`` stays the ground truth in tests.
 """
 from __future__ import annotations
 
 import functools
+import hashlib
 from collections import defaultdict
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -38,6 +56,40 @@ import jax
 import jax.numpy as jnp
 
 from .netlist import CONST0, CONST1, Netlist
+
+DEFAULT_MAX_BUCKETS = 3
+DEFAULT_MAX_GROUPS = 4
+
+_PLAN_CACHE_CAP = 64
+_PLAN_CACHE: dict[tuple, "FusedPlan"] = {}
+_ROWS_CACHE: dict[str, tuple] = {}
+_GROUP_CACHE_CAP = 16
+_GROUP_CACHE: dict[tuple, tuple] = {}
+
+
+def netlist_digest(net: Netlist) -> str:
+    """Content digest of a netlist's structure (the plan-cache key)."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr((net.n_signals, tuple(net.pis),
+                   tuple(net.lut_inputs), tuple(net.lut_tt),
+                   tuple(net.lut_out),
+                   tuple((tuple(c.a), tuple(c.b), tuple(c.sums), c.cin,
+                          c.cout) for c in net.chains),
+                   tuple(sorted((k, tuple(v))
+                                for k, v in net.pos.items())))).encode())
+    return h.hexdigest()
+
+
+def _cache_put(cache: dict, cap: int, key, value):
+    if len(cache) >= cap:
+        cache.pop(next(iter(cache)))
+    cache[key] = value
+
+
+def clear_plan_caches() -> None:
+    _PLAN_CACHE.clear()
+    _ROWS_CACHE.clear()
+    _GROUP_CACHE.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -76,96 +128,274 @@ def _tt_words(tt: int, k: int) -> tuple[int, int]:
     return full & 0xFFFFFFFF, full >> 32
 
 
-@dataclass
-class FusedPlan:
-    """Shape-uniform level tensors; ``sink = n_signals`` swallows padding."""
+def _level_rows(net: Netlist):
+    """Raw (unpadded) per-level node rows plus the level width profiles.
 
-    n_signals: int
+    Returns ``(lut_rows, chain_rows, m, c, b)`` where ``lut_rows[t]`` is a
+    list of ``(sig_ins, tt_lo, tt_hi, out)`` and ``chain_rows[t]`` a list of
+    ``(a, b, cin, sums, cout, last)``; ``m/c/b[t]`` are the level's LUT
+    count, chain count and widest chain.
+    """
+    by_luts, by_chains = _levelize(net)
+    levels = sorted(set(by_luts) | set(by_chains))
+    lut_rows, chain_rows = [], []
+    for lv in levels:
+        lr = []
+        for i in by_luts.get(lv, ()):
+            sig_ins = net.lut_inputs[i]
+            lo, hi = _tt_words(net.lut_tt[i], len(sig_ins))
+            lr.append((sig_ins, lo, hi, net.lut_out[i]))
+        cr = []
+        for ci in by_chains.get(lv, ()):
+            ch = net.chains[ci]
+            cr.append((ch.a, ch.b, ch.cin, ch.sums, ch.cout,
+                       len(ch.sums) - 1))
+        lut_rows.append(lr)
+        chain_rows.append(cr)
+    m = [len(lr) for lr in lut_rows]
+    c = [len(cr) for cr in chain_rows]
+    b = [max((len(r[3]) for r in cr), default=0) for cr in chain_rows]
+    return lut_rows, chain_rows, m, c, b
+
+
+def _level_rows_cached(net: Netlist, digest: str | None = None):
+    """Content-cached :func:`_level_rows` — plan building and group
+    building both need the raw rows; levelize once per circuit.  The
+    cached rows are treated as immutable by every consumer."""
+    key = digest if digest is not None else netlist_digest(net)
+    hit = _ROWS_CACHE.get(key)
+    if hit is None:
+        hit = _level_rows(net)
+        _cache_put(_ROWS_CACHE, _PLAN_CACHE_CAP, key, hit)
+    return hit
+
+
+def _segment_levels(m, c, b, max_buckets: int) -> list[tuple[int, int]]:
+    """Partition levels into <= ``max_buckets`` contiguous segments.
+
+    Minimizes the padded row volume ``sum_seg len(seg) * (M_seg + C_seg *
+    B_seg)`` by dynamic programming; L is tens at most, so the O(K L^2)
+    cost is negligible next to levelization.
+    """
+    L = len(m)
+    if L <= 1:
+        return [(0, L)] if L else [(0, 0)]
+    K = min(max_buckets, L)
+
+    def seg_cost(i, j):  # cost of segment [i, j)
+        mm = max(m[i:j])
+        cc = max(c[i:j])
+        bb = max(b[i:j])
+        return (j - i) * (mm + cc * bb)
+
+    INF = float("inf")
+    # dp[k][j]: min cost of first j levels using exactly k segments
+    dp = [[INF] * (L + 1) for _ in range(K + 1)]
+    back = [[0] * (L + 1) for _ in range(K + 1)]
+    dp[0][0] = 0
+    for k in range(1, K + 1):
+        for j in range(k, L + 1):
+            for i in range(k - 1, j):
+                if dp[k - 1][i] == INF:
+                    continue
+                cost = dp[k - 1][i] + seg_cost(i, j)
+                if cost < dp[k][j]:
+                    dp[k][j] = cost
+                    back[k][j] = i
+    best_k = min(range(1, K + 1), key=lambda k: dp[k][L])
+    bounds = []
+    j = L
+    for k in range(best_k, 0, -1):
+        i = back[k][j]
+        bounds.append((i, j))
+        j = i
+    return bounds[::-1]
+
+
+# ---------------------------------------------------------------------------
+# plans
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PlanBucket:
+    """One contiguous run of levels padded to its own envelope."""
+
     n_levels: int
     has_luts: bool
     has_chains: bool
-    lut_ins: np.ndarray     # [L, M, 6] int32 (padded pins/rows -> CONST0)
-    lut_tt_lo: np.ndarray   # [L, M] uint32
-    lut_tt_hi: np.ndarray   # [L, M] uint32
-    lut_out: np.ndarray     # [L, M] int32 (padded rows -> sink)
-    ch_a: np.ndarray        # [L, C, B] int32
-    ch_b: np.ndarray        # [L, C, B] int32
-    ch_cin: np.ndarray      # [L, C] int32
-    ch_sums: np.ndarray     # [L, C, B] int32 (padded -> sink)
-    ch_cout: np.ndarray     # [L, C] int32 (chains without cout -> sink)
-    ch_last: np.ndarray     # [L, C] int32 (index of the last real bit)
-    _dev: tuple | None = None   # cached device-resident copies
-
-    @property
-    def sink(self) -> int:
-        return self.n_signals
+    lut_ins: np.ndarray     # [l, M, 6] int32 (padded pins/rows -> CONST0)
+    lut_tt_lo: np.ndarray   # [l, M] uint32
+    lut_tt_hi: np.ndarray   # [l, M] uint32
+    lut_out: np.ndarray     # [l, M] int32 (padded rows -> sink)
+    ch_a: np.ndarray        # [l, C, B] int32
+    ch_b: np.ndarray        # [l, C, B] int32
+    ch_cin: np.ndarray      # [l, C] int32
+    ch_sums: np.ndarray     # [l, C, B] int32 (padded -> sink)
+    ch_cout: np.ndarray     # [l, C] int32 (chains without cout -> sink)
+    ch_last: np.ndarray     # [l, C] int32 (index of the last real bit)
 
     def arrays(self):
         return (self.lut_ins, self.lut_tt_lo, self.lut_tt_hi, self.lut_out,
                 self.ch_a, self.ch_b, self.ch_cin, self.ch_sums,
                 self.ch_cout, self.ch_last)
 
+    @property
+    def shape(self) -> tuple[int, int, int, int]:
+        """(levels, M, C, B) envelope of this bucket."""
+        return (self.n_levels, self.lut_out.shape[1],
+                self.ch_cout.shape[1], self.ch_a.shape[2])
+
+    @property
+    def padded_lut_rows(self) -> int:
+        l, M, _, _ = self.shape
+        return l * (M if self.has_luts else 0)
+
+    @property
+    def padded_chain_bits(self) -> int:
+        l, _, C, B = self.shape
+        return l * (C * B if self.has_chains else 0)
+
+
+@dataclass
+class FusedPlan:
+    """Width-bucketed level tensors; ``sink = n_signals`` swallows padding."""
+
+    n_signals: int
+    n_levels: int
+    buckets: tuple[PlanBucket, ...]
+    real_luts: int = 0
+    real_chain_bits: int = 0
+    _dev: tuple | None = field(default=None, repr=False)
+
+    @property
+    def sink(self) -> int:
+        return self.n_signals
+
+    @property
+    def has_luts(self) -> bool:
+        return any(bk.has_luts for bk in self.buckets)
+
+    @property
+    def has_chains(self) -> bool:
+        return any(bk.has_chains for bk in self.buckets)
+
+    @property
+    def flags(self) -> tuple[tuple[bool, bool], ...]:
+        """Static per-bucket (has_luts, has_chains) — part of the jit key."""
+        return tuple((bk.has_luts, bk.has_chains) for bk in self.buckets)
+
+    @property
+    def envelope(self) -> tuple[int, int, int, int]:
+        """The single worst-case (L, M, C, B) envelope (pre-bucketing).
+        Dimensions whose side is absent are 0, not the array floor of 1 —
+        a pure-LUT circuit must not be charged L phantom chain rows."""
+        return (self.n_levels,
+                max((bk.shape[1] if bk.has_luts else 0)
+                    for bk in self.buckets),
+                max((bk.shape[2] if bk.has_chains else 0)
+                    for bk in self.buckets),
+                max((bk.shape[3] if bk.has_chains else 0)
+                    for bk in self.buckets))
+
+    @property
+    def padded_lut_rows(self) -> int:
+        return sum(bk.padded_lut_rows for bk in self.buckets)
+
+    @property
+    def padded_chain_bits(self) -> int:
+        return sum(bk.padded_chain_bits for bk in self.buckets)
+
+    def arrays(self):
+        return tuple(bk.arrays() for bk in self.buckets)
+
     def device_arrays(self):
         """Plan tensors as device arrays, uploaded once per plan — reusing
         a plan across calls must not re-transfer megabytes of indices."""
         if self._dev is None:
-            self._dev = tuple(jnp.asarray(a) for a in self.arrays())
+            self._dev = tuple(tuple(jnp.asarray(a) for a in bk)
+                              for bk in self.arrays())
         return self._dev
 
 
-def plan_netlist(net: Netlist) -> FusedPlan:
-    """Compile a netlist into the fused evaluator's padded level tensors."""
-    by_luts, by_chains = _levelize(net)
-    levels = sorted(set(by_luts) | set(by_chains))
-    L = max(len(levels), 1)
-    M = max((len(by_luts[lv]) for lv in by_luts), default=0)
-    C = max((len(by_chains[lv]) for lv in by_chains), default=0)
-    B = max((len(net.chains[c].sums) for lv in by_chains
-             for c in by_chains[lv]), default=0)
-    sink = net.n_signals
-
-    lut_ins = np.full((L, max(M, 1), 6), CONST0, dtype=np.int32)
-    lut_tt_lo = np.zeros((L, max(M, 1)), dtype=np.uint32)
-    lut_tt_hi = np.zeros((L, max(M, 1)), dtype=np.uint32)
-    lut_out = np.full((L, max(M, 1)), sink, dtype=np.int32)
-    ch_a = np.full((L, max(C, 1), max(B, 1)), CONST0, dtype=np.int32)
-    ch_b = np.full((L, max(C, 1), max(B, 1)), CONST0, dtype=np.int32)
-    ch_cin = np.full((L, max(C, 1)), CONST0, dtype=np.int32)
-    ch_sums = np.full((L, max(C, 1), max(B, 1)), sink, dtype=np.int32)
-    ch_cout = np.full((L, max(C, 1)), sink, dtype=np.int32)
-    ch_last = np.zeros((L, max(C, 1)), dtype=np.int32)
-
-    for t, lv in enumerate(levels):
-        for r, i in enumerate(by_luts.get(lv, ())):
-            sig_ins = net.lut_inputs[i]
-            k = len(sig_ins)
-            lut_ins[t, r, :k] = sig_ins
-            lo, hi = _tt_words(net.lut_tt[i], k)
+def _build_bucket(lut_rows, chain_rows, M: int, C: int, B: int,
+                  sink: int) -> PlanBucket:
+    """Pad a run of levels' raw rows to the bucket envelope [l, M, C, B]."""
+    l = max(len(lut_rows), 1)
+    has_luts = M > 0
+    has_chains = C > 0
+    lut_ins = np.full((l, max(M, 1), 6), CONST0, dtype=np.int32)
+    lut_tt_lo = np.zeros((l, max(M, 1)), dtype=np.uint32)
+    lut_tt_hi = np.zeros((l, max(M, 1)), dtype=np.uint32)
+    lut_out = np.full((l, max(M, 1)), sink, dtype=np.int32)
+    ch_a = np.full((l, max(C, 1), max(B, 1)), CONST0, dtype=np.int32)
+    ch_b = np.full((l, max(C, 1), max(B, 1)), CONST0, dtype=np.int32)
+    ch_cin = np.full((l, max(C, 1)), CONST0, dtype=np.int32)
+    ch_sums = np.full((l, max(C, 1), max(B, 1)), sink, dtype=np.int32)
+    ch_cout = np.full((l, max(C, 1)), sink, dtype=np.int32)
+    ch_last = np.zeros((l, max(C, 1)), dtype=np.int32)
+    for t, (lr, cr) in enumerate(zip(lut_rows, chain_rows)):
+        for r, (sig_ins, lo, hi, out) in enumerate(lr):
+            lut_ins[t, r, :len(sig_ins)] = sig_ins
             lut_tt_lo[t, r] = lo
             lut_tt_hi[t, r] = hi
-            lut_out[t, r] = net.lut_out[i]
-        for r, c in enumerate(by_chains.get(lv, ())):
-            ch = net.chains[c]
-            n = len(ch.sums)
-            ch_a[t, r, :n] = ch.a
-            ch_b[t, r, :n] = ch.b
-            ch_cin[t, r] = ch.cin
-            ch_sums[t, r, :n] = ch.sums
-            ch_last[t, r] = n - 1
-            if ch.cout is not None:
-                ch_cout[t, r] = ch.cout
+            lut_out[t, r] = out
+        for r, (a, b, cin, sums, cout, last) in enumerate(cr):
+            n = len(sums)
+            ch_a[t, r, :n] = a
+            ch_b[t, r, :n] = b
+            ch_cin[t, r] = cin
+            ch_sums[t, r, :n] = sums
+            ch_last[t, r] = last
+            if cout is not None:
+                ch_cout[t, r] = cout
+    return PlanBucket(n_levels=l, has_luts=has_luts, has_chains=has_chains,
+                      lut_ins=lut_ins, lut_tt_lo=lut_tt_lo,
+                      lut_tt_hi=lut_tt_hi, lut_out=lut_out, ch_a=ch_a,
+                      ch_b=ch_b, ch_cin=ch_cin, ch_sums=ch_sums,
+                      ch_cout=ch_cout, ch_last=ch_last)
 
+
+def _plan_from_rows(lut_rows, chain_rows, bounds, n_signals: int,
+                    sink: int, envelopes=None) -> FusedPlan:
+    buckets = []
+    for bi, (i, j) in enumerate(bounds):
+        lr, cr = lut_rows[i:j], chain_rows[i:j]
+        if envelopes is not None:
+            M, C, B = envelopes[bi]
+        else:
+            M = max((len(x) for x in lr), default=0)
+            C = max((len(x) for x in cr), default=0)
+            B = max((len(r[3]) for x in cr for r in x), default=0)
+        buckets.append(_build_bucket(lr, cr, M, C, B, sink))
+    n_levels = sum(max(j - i, 1) for i, j in bounds) if bounds else 1
     return FusedPlan(
-        n_signals=net.n_signals, n_levels=L,
-        has_luts=M > 0, has_chains=C > 0,
-        lut_ins=lut_ins, lut_tt_lo=lut_tt_lo, lut_tt_hi=lut_tt_hi,
-        lut_out=lut_out, ch_a=ch_a, ch_b=ch_b, ch_cin=ch_cin,
-        ch_sums=ch_sums, ch_cout=ch_cout, ch_last=ch_last,
-    )
+        n_signals=n_signals, n_levels=n_levels, buckets=tuple(buckets),
+        real_luts=sum(len(x) for x in lut_rows),
+        real_chain_bits=sum(len(r[3]) for x in chain_rows for r in x))
+
+
+def plan_netlist(net: Netlist,
+                 max_buckets: int = DEFAULT_MAX_BUCKETS) -> FusedPlan:
+    """Compile a netlist into width-bucketed level tensors (content-cached)."""
+    digest = netlist_digest(net)
+    key = (digest, max_buckets)
+    cached = _PLAN_CACHE.get(key)
+    if cached is not None:
+        return cached
+    lut_rows, chain_rows, m, c, b = _level_rows_cached(net, digest)
+    if not lut_rows:  # no logic at all: one all-padding level
+        lut_rows, chain_rows = [[]], [[]]
+        m, c, b = [0], [0], [0]
+    bounds = _segment_levels(m, c, b, max_buckets)
+    plan = _plan_from_rows(lut_rows, chain_rows, bounds, net.n_signals,
+                           sink=net.n_signals)
+    _cache_put(_PLAN_CACHE, _PLAN_CACHE_CAP, key, plan)
+    return plan
 
 
 # ---------------------------------------------------------------------------
-# fused single-jit evaluation
+# fused single-jit evaluation (multi-scan over buckets)
 # ---------------------------------------------------------------------------
 
 
@@ -203,26 +433,27 @@ def _fused_body(vals, xs, *, has_luts: bool, has_chains: bool,
     return vals, None
 
 
-@functools.partial(jax.jit, donate_argnums=(0,),
-                   static_argnames=("has_luts", "has_chains", "use_pallas"))
-def _run_fused(vals, plan_arrays, *, has_luts, has_chains, use_pallas):
-    body = functools.partial(_fused_body, has_luts=has_luts,
-                             has_chains=has_chains, use_pallas=use_pallas)
-    vals, _ = jax.lax.scan(body, vals, plan_arrays)
+def _multi_scan(vals, bucket_arrays, flags, use_pallas):
+    """Back-to-back lax.scans, one per width bucket, in topological order."""
+    for (hl, hc), xs in zip(flags, bucket_arrays):
+        body = functools.partial(_fused_body, has_luts=hl, has_chains=hc,
+                                 use_pallas=use_pallas)
+        vals, _ = jax.lax.scan(body, vals, xs)
     return vals
 
 
 @functools.partial(jax.jit, donate_argnums=(0,),
-                   static_argnames=("has_luts", "has_chains", "use_pallas"))
-def _run_fused_batch(vals, plan_arrays, *, has_luts, has_chains, use_pallas):
-    body = functools.partial(_fused_body, has_luts=has_luts,
-                             has_chains=has_chains, use_pallas=use_pallas)
+                   static_argnames=("flags", "use_pallas"))
+def _run_fused(vals, bucket_arrays, *, flags, use_pallas):
+    return _multi_scan(vals, bucket_arrays, flags, use_pallas)
 
-    def one(v, arrs):
-        out, _ = jax.lax.scan(body, v, arrs)
-        return out
 
-    return jax.vmap(one)(vals, plan_arrays)
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("flags", "use_pallas"))
+def _run_fused_batch(vals, bucket_arrays, *, flags, use_pallas):
+    return jax.vmap(
+        lambda v, arrs: _multi_scan(v, arrs, flags, use_pallas)
+    )(vals, bucket_arrays)
 
 
 def _init_vals(plan: FusedPlan, pi_lanes: dict[int, np.ndarray],
@@ -240,75 +471,202 @@ def eval_netlist_jax(net: Netlist, pi_lanes: dict[int, np.ndarray],
     """Fused evaluation; returns ``vals[n_signals, n_lane_words]`` uint32.
 
     ``pi_lanes[signal]`` is a uint32 vector of packed test vectors.  Pass a
-    precompiled ``plan`` to amortize levelization across calls (the jit
-    cache already amortizes compilation by shape).
+    precompiled ``plan`` to skip the content-digest cache lookup (the jit
+    cache amortizes compilation by shape either way).
     """
     if plan is None:
         plan = plan_netlist(net)
     vals = _init_vals(plan, pi_lanes, n_lane_words)
-    out = _run_fused(vals, plan.device_arrays(),
-                     has_luts=plan.has_luts, has_chains=plan.has_chains,
+    out = _run_fused(vals, plan.device_arrays(), flags=plan.flags,
                      use_pallas=use_pallas)
     return out[:plan.n_signals]
 
 
-def _pad_to(a: np.ndarray, shape, fill) -> np.ndarray:
-    out = np.full(shape, fill, dtype=a.dtype)
-    out[tuple(slice(0, d) for d in a.shape)] = a
-    return out
+# ---------------------------------------------------------------------------
+# envelope-grouped suite evaluation
+# ---------------------------------------------------------------------------
+
+
+def group_plans_by_envelope(plans: list[FusedPlan],
+                            max_groups: int = DEFAULT_MAX_GROUPS
+                            ) -> list[list[int]]:
+    """Cluster plans into <= ``max_groups`` compatible-envelope groups.
+
+    Agglomerative: start one group per plan, repeatedly merge the pair
+    whose combined worst-case envelope increases the padded volume least.
+    Each resulting group compiles to exactly one vmapped jit program.
+    """
+    groups = [[i] for i in range(len(plans))]
+    envs = [list(p.envelope) for p in plans]
+
+    def vol(env, n):
+        L, M, C, B = env
+        return n * L * (M + C * B)
+
+    def merged(e1, e2):
+        return [max(a, b) for a, b in zip(e1, e2)]
+
+    while len(groups) > max(max_groups, 1):
+        best = None
+        for i in range(len(groups)):
+            for j in range(i + 1, len(groups)):
+                me = merged(envs[i], envs[j])
+                cost = (vol(me, len(groups[i]) + len(groups[j]))
+                        - vol(envs[i], len(groups[i]))
+                        - vol(envs[j], len(groups[j])))
+                if best is None or cost < best[0]:
+                    best = (cost, i, j, me)
+        _, i, j, me = best
+        groups[i] = groups[i] + groups[j]
+        envs[i] = me
+        del groups[j], envs[j]
+    return groups
+
+
+def _group_level_rows(nets: list[Netlist]):
+    """Per-member raw rows aligned to the group's level count + profiles."""
+    rows = [_level_rows_cached(net) for net in nets]
+    L = max((len(r[0]) for r in rows), default=0)
+    if L == 0:
+        L = 1
+        rows = [([[]], [[]], [0], [0], [0]) for _ in nets]
+    aligned = []
+    for lr, cr, m, c, b in rows:
+        pad = L - len(lr)
+        aligned.append((lr + [[] for _ in range(pad)],
+                        cr + [[] for _ in range(pad)]))
+    m = [max(len(a[0][t]) for a in aligned) for t in range(L)]
+    c = [max(len(a[1][t]) for a in aligned) for t in range(L)]
+    b = [max((len(r[3]) for a in aligned for r in a[1][t]), default=0)
+         for t in range(L)]
+    return aligned, m, c, b
+
+
+def _build_group(nets: list[Netlist], max_buckets: int):
+    """Stack one envelope group's member plans into vmappable tensors.
+
+    Bucket boundaries are recomputed on the group's combined width profile
+    and every member is padded to the group envelope; each member's sink
+    rows point at the shared ``n_sig`` row.
+    """
+    n_sig = max(net.n_signals for net in nets)
+    aligned, m, c, b = _group_level_rows(nets)
+    bounds = _segment_levels(m, c, b, max_buckets)
+    envelopes = [(max(m[i:j], default=0), max(c[i:j], default=0),
+                  max(b[i:j], default=0)) for i, j in bounds]
+    member_plans = [
+        _plan_from_rows(lr, cr, bounds, n_sig, sink=n_sig,
+                        envelopes=envelopes)
+        for lr, cr in aligned]
+    flags = tuple(
+        (any(p.buckets[bi].has_luts for p in member_plans),
+         any(p.buckets[bi].has_chains for p in member_plans))
+        for bi in range(len(bounds)))
+    stacked = tuple(
+        tuple(jnp.asarray(np.stack([np.asarray(p.buckets[bi].arrays()[ai])
+                                    for p in member_plans]))
+              for ai in range(10))
+        for bi in range(len(bounds)))
+    return n_sig, stacked, flags, member_plans
+
+
+def get_group_program(nets: list[Netlist],
+                      max_buckets: int = DEFAULT_MAX_BUCKETS):
+    """Cached stacked device tensors for one envelope group of netlists."""
+    key = (tuple(netlist_digest(net) for net in nets), max_buckets)
+    cached = _GROUP_CACHE.get(key)
+    if cached is None:
+        cached = _build_group(nets, max_buckets)
+        _cache_put(_GROUP_CACHE, _GROUP_CACHE_CAP, key, cached)
+    return cached
+
+
+@dataclass
+class SuiteProgram:
+    """A suite's clustering + stacked device tensors, prepared once.
+
+    ``run`` evaluates new lanes without re-digesting, re-clustering or
+    re-uploading anything — the handle benchmark loops should reuse.
+    """
+
+    n_signals: list[int]          # per input circuit
+    names: list[str]
+    groups: list[list[int]]       # member indices per envelope group
+    programs: list[tuple]         # (n_sig, stacked, flags, member_plans)
+    stats: dict
+
+    def run(self, pi_lanes_list: list[dict[int, np.ndarray]],
+            n_lane_words: int, use_pallas: bool = True) -> list[np.ndarray]:
+        outs: list = [None] * len(self.n_signals)
+        for members, (n_sig, stacked, flags, _) in zip(self.groups,
+                                                       self.programs):
+            vals = np.zeros((len(members), n_sig + 1, n_lane_words),
+                            dtype=np.uint32)
+            vals[:, CONST1] = 0xFFFFFFFF
+            for row, i in enumerate(members):
+                for s, v in pi_lanes_list[i].items():
+                    vals[row, s] = np.asarray(v, dtype=np.uint32)
+            out = _run_fused_batch(jnp.asarray(vals), stacked, flags=flags,
+                                   use_pallas=use_pallas)
+            # np.asarray blocks on the device result — timing loops over
+            # run() measure execution, not dispatch
+            out = np.asarray(out)
+            for row, i in enumerate(members):
+                outs[i] = out[row, :self.n_signals[i]]
+        return outs
+
+
+def prepare_suite_program(nets: list[Netlist],
+                          max_groups: int = DEFAULT_MAX_GROUPS,
+                          max_buckets: int = DEFAULT_MAX_BUCKETS
+                          ) -> SuiteProgram:
+    """Cluster a suite into <= ``max_groups`` compatible-envelope groups and
+    build (or fetch from the content cache) each group's stacked tensors."""
+    plans = [plan_netlist(net, max_buckets=max_buckets) for net in nets]
+    groups = group_plans_by_envelope(plans, max_groups=max_groups)
+    programs = [get_group_program([nets[i] for i in members],
+                                  max_buckets=max_buckets)
+                for members in groups]
+    stats = {"n_groups": len(groups), "groups": []}
+    for members, (_, _, _, member_plans) in zip(groups, programs):
+        gp = member_plans[0]
+        stats["groups"].append({
+            "members": [nets[i].name for i in members],
+            "n_buckets": len(gp.buckets),
+            "bucket_shapes": [bk.shape for bk in gp.buckets],
+            "padded_lut_rows": gp.padded_lut_rows * len(members),
+            "padded_chain_bits": gp.padded_chain_bits * len(members),
+        })
+    return SuiteProgram(n_signals=[p.n_signals for p in plans],
+                        names=[net.name for net in nets],
+                        groups=groups, programs=programs, stats=stats)
 
 
 def eval_netlists_batched_jax(nets: list[Netlist],
                               pi_lanes_list: list[dict[int, np.ndarray]],
                               n_lane_words: int,
-                              use_pallas: bool = True) -> list[np.ndarray]:
-    """Evaluate several circuits concurrently in one vmapped jit.
+                              use_pallas: bool = True,
+                              max_groups: int = DEFAULT_MAX_GROUPS,
+                              max_buckets: int = DEFAULT_MAX_BUCKETS,
+                              return_stats: bool = False,
+                              program: SuiteProgram | None = None):
+    """Evaluate a suite of circuits as a few vmapped jit programs.
 
-    Plans are padded to a common ``[L, M, 6]`` / ``[C, B]`` envelope and the
-    per-circuit sink rows are re-pointed at the shared envelope's sink.
-    Used to validate baseline/DD5/DD6 re-elaborations of the same source
-    in a single device program.  Returns per-circuit ``vals`` arrays.
+    Plans are clustered into <= ``max_groups`` envelope groups (one compile
+    per group) and each group's members are padded to the group's bucketed
+    envelope.  ``max_groups=1, max_buckets=1`` reproduces the old
+    single-worst-case-envelope path exactly.  Pass a prepared ``program``
+    to skip clustering/digesting in hot loops.  Returns per-circuit
+    ``vals`` arrays in input order (plus a stats record when
+    ``return_stats``).
     """
-    plans = [plan_netlist(net) for net in nets]
-    n_sig = max(p.n_signals for p in plans)
-    L = max(p.n_levels for p in plans)
-    M = max(p.lut_out.shape[1] for p in plans)
-    C = max(p.ch_cout.shape[1] for p in plans)
-    B = max(p.ch_a.shape[2] for p in plans)
-
-    stacked = []
-    for p in plans:
-        arrs = []
-        for a, shape, fill in (
-                (p.lut_ins, (L, M, 6), CONST0),
-                (p.lut_tt_lo, (L, M), 0),
-                (p.lut_tt_hi, (L, M), 0),
-                (np.where(p.lut_out == p.sink, n_sig, p.lut_out),
-                 (L, M), n_sig),
-                (p.ch_a, (L, C, B), CONST0),
-                (p.ch_b, (L, C, B), CONST0),
-                (p.ch_cin, (L, C), CONST0),
-                (np.where(p.ch_sums == p.sink, n_sig, p.ch_sums),
-                 (L, C, B), n_sig),
-                (np.where(p.ch_cout == p.sink, n_sig, p.ch_cout),
-                 (L, C), n_sig),
-                (p.ch_last, (L, C), 0)):
-            arrs.append(_pad_to(np.asarray(a), shape, fill))
-        stacked.append(arrs)
-    plan_arrays = tuple(jnp.asarray(np.stack([s[i] for s in stacked]))
-                        for i in range(10))
-
-    vals = np.zeros((len(nets), n_sig + 1, n_lane_words), dtype=np.uint32)
-    vals[:, CONST1] = 0xFFFFFFFF
-    for bi, lanes in enumerate(pi_lanes_list):
-        for s, v in lanes.items():
-            vals[bi, s] = np.asarray(v, dtype=np.uint32)
-    out = _run_fused_batch(jnp.asarray(vals), plan_arrays,
-                           has_luts=any(p.has_luts for p in plans),
-                           has_chains=any(p.has_chains for p in plans),
-                           use_pallas=use_pallas)
-    out = np.asarray(out)
-    return [out[i, :p.n_signals] for i, p in enumerate(plans)]
+    if program is None:
+        program = prepare_suite_program(nets, max_groups=max_groups,
+                                        max_buckets=max_buckets)
+    outs = program.run(pi_lanes_list, n_lane_words, use_pallas=use_pallas)
+    if return_stats:
+        return outs, program.stats
+    return outs
 
 
 # ---------------------------------------------------------------------------

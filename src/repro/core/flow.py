@@ -1,0 +1,222 @@
+"""The unified CAD flow pipeline: synth → techmap → pack → equiv → eval.
+
+Every benchmark driver and test drives the paper's flow through this
+module instead of hand-rolling its own pack/analyze/verify/evaluate loop.
+The stages:
+
+* **synthesis + techmap** happen inside the circuit generators
+  (``core.circuits``); the flow consumes finished :class:`Netlist`\\ s.
+* **pack + analyze** — :func:`pack_and_analyze` packs under an
+  architecture across placement seeds and averages the
+  :func:`~repro.core.timing.analyze` metrics (the paper averages three
+  seeds); :func:`pack_and_analyze_one` keeps the packed circuit for
+  callers that need structural access (stress capacity sweeps).
+* **equivalence gate** — :func:`run_circuit` optionally proves pack
+  equivalence per arch through :mod:`repro.core.equiv` (symbolic fast
+  path first, lane simulation as fallback), so any figure can be gated on
+  "the comparison is apples-to-apples".
+* **evaluation** — :func:`evaluate_netlist` / :func:`evaluate_suite` run
+  the width-bucketed fused engine (:mod:`repro.core.eval_jax`).
+  :func:`evaluate_suite` clusters a whole benchmark suite into a few
+  compatible-envelope groups, so Kratos + Koios + VTR evaluate per arch
+  as a handful of vmapped jit programs; plans and grouped tensors are
+  content-cached, so repeated figures reuse compiles.
+* :func:`oracle_check` closes the loop: any JAX-side result can be
+  proven bit-identical to the pure-Python ``eval_netlist`` oracle.
+
+Ratios against a baseline arch (the shape of Figs. 5-7) come from
+:func:`ratios_vs_baseline`; :func:`run_suites` maps the whole pipeline
+over named suites.
+"""
+from __future__ import annotations
+
+import random
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .alm import ARCHS, ArchParams
+from .equiv import check_pack_equivalence
+from .eval_jax import (DEFAULT_MAX_BUCKETS, DEFAULT_MAX_GROUPS, FusedPlan,
+                       SuiteProgram, eval_netlist_jax,
+                       eval_netlists_batched_jax, plan_netlist,
+                       prepare_suite_program)
+from .netlist import Netlist, eval_netlist
+from .packing import PackedCircuit, pack
+from .timing import analyze
+
+#: the paper averages three placement seeds per figure
+DEFAULT_SEEDS = (0, 1, 2)
+
+#: metrics whose per-seed mean makes up a flow record
+_METRIC_KEYS = ("alms", "area_mwta", "critical_path_ps", "adp",
+                "concurrent_luts", "lbs")
+
+
+def _arch(arch: str | ArchParams) -> ArchParams:
+    return ARCHS[arch] if isinstance(arch, str) else arch
+
+
+# ---------------------------------------------------------------------------
+# pack + analyze
+# ---------------------------------------------------------------------------
+
+
+def pack_and_analyze_one(net: Netlist, arch: str | ArchParams,
+                         seed: int = 0) -> tuple[PackedCircuit, dict]:
+    """One pack at one seed, returning both the packed circuit and its
+    analysis — for flows that need structural access (capacity sweeps)."""
+    packed = pack(net, _arch(arch), seed=seed)
+    return packed, analyze(packed)
+
+
+def pack_and_analyze(net: Netlist, arch: str | ArchParams,
+                     seeds: Sequence[int] = DEFAULT_SEEDS) -> dict:
+    """Average :func:`analyze` metrics over placement seeds."""
+    acc: dict[str, float] = {}
+    for s in seeds:
+        r = analyze(pack(net, _arch(arch), seed=s))
+        for k in _METRIC_KEYS:
+            acc[k] = acc.get(k, 0.0) + r[k] / len(seeds)
+    acc["adders"] = net.n_adders
+    acc["luts"] = net.n_luts
+    return acc
+
+
+def run_circuit(net: Netlist, archs: Sequence[str | ArchParams],
+                seeds: Sequence[int] = DEFAULT_SEEDS,
+                check_equiv: bool = False, n_vectors: int = 64,
+                equiv_method: str = "auto") -> dict[str, dict]:
+    """Pack + analyze one circuit under several archs, optionally gated on
+    pack equivalence.  Returns ``{arch_name: metrics}``; with
+    ``check_equiv`` each record carries ``equivalent`` / ``equiv_method``
+    and a non-equivalent pack raises ``AssertionError`` — a figure must
+    not silently average a corrupted pack.
+    """
+    out: dict[str, dict] = {}
+    for arch in archs:
+        ap = _arch(arch)
+        rec = pack_and_analyze(net, ap, seeds=seeds)
+        if check_equiv:
+            rep = check_pack_equivalence(net, ap, seed=seeds[0],
+                                         n_vectors=n_vectors,
+                                         method=equiv_method)
+            if not rep["equivalent"]:
+                if equiv_method == "symbolic" and not rep["mismatches"]:
+                    # incomplete proof, not a disproof — name it as such
+                    raise AssertionError(
+                        f"{net.name}@{ap.name}: symbolic proof incomplete "
+                        f"({len(rep.get('fallback', []))} unclosed cones); "
+                        f"use equiv_method='auto' to simulate the residue")
+                raise AssertionError(
+                    f"{net.name}@{ap.name}: pack is NOT equivalent "
+                    f"({rep['mismatches'][:1]})")
+            rec["equivalent"] = True
+            rec["equiv_method"] = rep.get("method", "simulate")
+        out[ap.name] = rec
+    return out
+
+
+def ratios_vs_baseline(per_arch: dict[str, dict], baseline: str = "baseline",
+                       keys: Sequence[str] = ("area_mwta",
+                                              "critical_path_ps", "adp")
+                       ) -> dict[str, dict[str, float]]:
+    """Per-arch metric ratios against ``per_arch[baseline]`` (Figs. 5-7)."""
+    base = per_arch[baseline]
+    return {name: {k: rec[k] / base[k] for k in keys}
+            for name, rec in per_arch.items() if name != baseline}
+
+
+def run_suites(suites: dict[str, list[Netlist]],
+               archs: Sequence[str | ArchParams],
+               seeds: Sequence[int] = DEFAULT_SEEDS,
+               check_equiv: bool = False,
+               per_circuit: Callable[[str, Netlist, dict], None]
+               | None = None) -> dict[str, list[dict]]:
+    """Map :func:`run_circuit` over named suites.
+
+    Returns ``{suite: [{"net": name, "per_arch": {...}}, ...]}``;
+    ``per_circuit(suite, net, per_arch)`` is an optional progress hook
+    (benchmark drivers use it to emit CSV rows as results arrive).
+    """
+    out: dict[str, list[dict]] = {}
+    for suite_name, nets in suites.items():
+        rows = []
+        for net in nets:
+            per_arch = run_circuit(net, archs, seeds=seeds,
+                                   check_equiv=check_equiv)
+            rows.append({"net": net.name, "per_arch": per_arch})
+            if per_circuit is not None:
+                per_circuit(suite_name, net, per_arch)
+        out[suite_name] = rows
+    return out
+
+
+# ---------------------------------------------------------------------------
+# evaluation
+# ---------------------------------------------------------------------------
+
+
+def random_lanes(net: Netlist, n_lane_words: int,
+                 seed: int = 0) -> dict[int, np.ndarray]:
+    """Random packed test vectors for every PI of ``net``."""
+    rng = random.Random(seed)
+    return {s: np.array([rng.getrandbits(32) for _ in range(n_lane_words)],
+                        dtype=np.uint32) for s in net.pis}
+
+
+def evaluate_netlist(net: Netlist, pi_lanes: dict[int, np.ndarray],
+                     n_lane_words: int, use_pallas: bool = True,
+                     max_buckets: int = DEFAULT_MAX_BUCKETS,
+                     plan: FusedPlan | None = None) -> np.ndarray:
+    """Single-circuit fused evaluation through the cached bucketed plan.
+
+    Pass a precomputed ``plan`` in timing loops — it skips even the
+    content-digest cache lookup.
+    """
+    if plan is None:
+        plan = plan_netlist(net, max_buckets=max_buckets)
+    return np.asarray(eval_netlist_jax(net, pi_lanes, n_lane_words,
+                                       use_pallas=use_pallas, plan=plan))
+
+
+def prepare_suite(nets: list[Netlist],
+                  max_groups: int = DEFAULT_MAX_GROUPS,
+                  max_buckets: int = DEFAULT_MAX_BUCKETS) -> SuiteProgram:
+    """One-time suite preparation (clustering + stacked device tensors);
+    reuse the returned program across :func:`evaluate_suite` calls."""
+    return prepare_suite_program(nets, max_groups=max_groups,
+                                 max_buckets=max_buckets)
+
+
+def evaluate_suite(nets: list[Netlist],
+                   pi_lanes_list: list[dict[int, np.ndarray]],
+                   n_lane_words: int, use_pallas: bool = True,
+                   max_groups: int = DEFAULT_MAX_GROUPS,
+                   max_buckets: int = DEFAULT_MAX_BUCKETS,
+                   program: SuiteProgram | None = None
+                   ) -> tuple[list[np.ndarray], dict]:
+    """Whole-suite evaluation as <= ``max_groups`` vmapped jit programs.
+
+    Returns ``(per-circuit vals arrays, stats)`` where stats records the
+    envelope groups, their bucket shapes, and padded-row counts.
+    """
+    return eval_netlists_batched_jax(
+        nets, pi_lanes_list, n_lane_words, use_pallas=use_pallas,
+        max_groups=max_groups, max_buckets=max_buckets, return_stats=True,
+        program=program)
+
+
+def oracle_check(net: Netlist, pi_lanes: dict[int, np.ndarray],
+                 vals: np.ndarray, n_lane_words: int) -> bool:
+    """Prove a JAX-side result bit-identical to the Python oracle on every
+    primary output (all lane words)."""
+    ok = True
+    for w in range(n_lane_words):
+        pi_vals = {s: int(pi_lanes[s][w]) for s in net.pis}
+        ref = eval_netlist(net, pi_vals, 32)
+        for bus in net.pos.values():
+            for s in bus:
+                if int(vals[s, w]) != (ref[s] & 0xFFFFFFFF):
+                    return False
+    return ok

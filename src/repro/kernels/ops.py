@@ -45,7 +45,9 @@ def lut_eval(inputs, tts, use_pallas=True):
 
 def lut_eval6(inputs, tt_lo, tt_hi, use_pallas=True):
     """Fused-layout 6-pin LUT kernel (un-jitted: always called from inside
-    the fused evaluator's own jit)."""
+    the fused evaluator's own jit — once per width bucket of the
+    multi-scan plan, so ``M`` is the bucket's own envelope, not the
+    circuit-wide worst case)."""
     if use_pallas:
         return _lut6_pallas(inputs, tt_lo, tt_hi, interpret=not _on_tpu())
     return ref.lut_eval6_ref(inputs, tt_lo, tt_hi)

@@ -9,7 +9,8 @@ from repro.core.alm import ARCHS, BASELINE, DD5, DD6
 from repro.core.circuits import kratos_conv1d, kratos_gemm, sha_like
 from repro.core.equiv import (ReElaborationError, assert_equivalent,
                               check_pack_equivalence, equivalence_report,
-                              reelaborate, verify_all_archs)
+                              reelaborate, symbolic_equivalence_report,
+                              verify_all_archs)
 from repro.core.netlist import CONST0, CONST1, Netlist
 from repro.core.packing import pack
 
@@ -126,6 +127,52 @@ def test_structural_corruption_raises():
                     reelaborate(packed)
                 return
     pytest.skip("no absorbed half in this pack")
+
+
+@pytest.mark.parametrize("arch_name", ["baseline", "dd5", "dd6"])
+@pytest.mark.parametrize("seed", range(8))
+def test_symbolic_fast_path_proves_packs(seed, arch_name):
+    """The per-ALM symbolic check must close real packs without
+    simulating a single vector — and agree with the lane-simulation
+    proof."""
+    net = random_netlist(seed)
+    packed = pack(net, ARCHS[arch_name], seed=seed)
+    re_elab = reelaborate(packed)
+    srep = symbolic_equivalence_report(net, re_elab)
+    assert srep["equivalent"], (srep["mismatches"], srep["fallback"])
+    assert srep["complete"]
+    assert srep["proven_luts"] + srep["proven_chain_bits"] > 0
+    # cross-check against the simulation oracle
+    assert equivalence_report(net, re_elab, n_vectors=64)["equivalent"]
+
+
+def test_symbolic_localizes_mask_corruption():
+    """A flipped truth-table bit must be caught *and named* symbolically,
+    with no simulation."""
+    net = random_netlist(7)
+    re_elab = reelaborate(pack(net, DD5, seed=0))
+    assert symbolic_equivalence_report(net, re_elab)["equivalent"]
+    assert re_elab.phys.n_luts > 0
+    re_elab.phys.lut_tt[0] ^= 1 << 1
+    srep = symbolic_equivalence_report(net, re_elab)
+    assert not srep["equivalent"]
+    assert srep["mismatches"], "corruption must localize to a node"
+    # the auto gate falls back to simulation for the authoritative verdict
+    # and keeps the symbolic localization
+    rep = equivalence_report(net, re_elab, n_vectors=128)
+    assert not rep["equivalent"]
+
+
+def test_check_pack_equivalence_uses_symbolic_fast_path():
+    """`method="auto"` must prove healthy packs symbolically (the report
+    says so) and `method="simulate"` must still be available."""
+    net = random_netlist(4)
+    rep = check_pack_equivalence(net, DD5, n_vectors=64)
+    assert rep["equivalent"]
+    assert rep["method"] == "symbolic"
+    rep2 = check_pack_equivalence(net, DD5, n_vectors=64, method="simulate")
+    assert rep2["equivalent"]
+    assert rep2["method"] == "simulate"
 
 
 def test_equivalence_via_fused_jax_engine():

@@ -86,3 +86,52 @@ def test_batched_multi_circuit_eval():
         for bus in net.pos.values():
             for s in bus:
                 assert np.array_equal(got[s], single[s]), (net.name, s)
+
+
+def test_plan_is_width_bucketed():
+    """Plans split the level sequence into <= 3 contiguous width buckets
+    whose padded volume never exceeds the single worst-case envelope."""
+    net = koios_mac_array(pes=2, width=4, ctrl_nodes=40)
+    plan = plan_netlist(net)
+    assert 1 <= len(plan.buckets) <= 3
+    assert sum(bk.n_levels for bk in plan.buckets) == plan.n_levels
+    L, M, C, B = plan.envelope
+    assert plan.padded_lut_rows + plan.padded_chain_bits \
+        <= L * M + L * C * B
+    # every real node is represented exactly once
+    assert plan.real_luts == net.n_luts
+    assert plan.real_chain_bits == net.n_adders
+
+
+def test_plan_cache_keyed_by_content():
+    """Identical structure -> same cached plan object; a structural edit
+    (new digest) -> a fresh plan."""
+    net = kratos_gemm(m=3, n=3, width=4, sparsity=0.3)
+    p1 = plan_netlist(net)
+    p2 = plan_netlist(net)
+    assert p1 is p2
+    net2 = kratos_gemm(m=3, n=3, width=4, sparsity=0.3)
+    assert plan_netlist(net2) is p1  # same content, same key
+    net2.lut_tt[0] ^= 1
+    assert plan_netlist(net2) is not p1
+
+
+def test_grouped_eval_respects_max_groups_and_matches_single():
+    nets = [kratos_gemm(m=3, n=3, width=4, sparsity=0.3),
+            sha_like(rounds=1),
+            koios_mac_array(pes=2, width=4, ctrl_nodes=40),
+            kratos_gemm(m=4, n=4, width=4, sparsity=0.5, seed=7)]
+    rng = random.Random(11)
+    NW = 1
+    lanes_list = [{s: np.array([rng.getrandbits(32)], dtype=np.uint32)
+                   for s in net.pis} for net in nets]
+    outs, stats = eval_netlists_batched_jax(nets, lanes_list, NW,
+                                            max_groups=2, return_stats=True)
+    assert stats["n_groups"] <= 2
+    names = sorted(m for g in stats["groups"] for m in g["members"])
+    assert names == sorted(n.name for n in nets)
+    for net, lanes, got in zip(nets, lanes_list, outs):
+        single = np.asarray(eval_netlist_jax(net, lanes, NW))
+        for bus in net.pos.values():
+            for s in bus:
+                assert np.array_equal(got[s], single[s]), (net.name, s)
