@@ -43,10 +43,15 @@ def run(scale: float = 1.0, verbose: bool = True):
 
 
 def main():
+    from repro.core.timing import read_timing_wall
+
+    w0 = read_timing_wall()
     with Timer() as t:
         res = run()
+    w1 = read_timing_wall()
     wall_adp = res["wallace"]["adp"]
-    emit("fig5_cad", t.us, f"wallace_adp_vs_stock_vtr={wall_adp:.3f}")
+    emit("fig5_cad", t.us, f"wallace_adp_vs_stock_vtr={wall_adp:.3f};"
+         f"timing_s={w1['s'] - w0['s']:.3f}")
     return res
 
 

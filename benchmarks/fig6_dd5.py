@@ -42,10 +42,15 @@ def run(verbose: bool = True):
 
 
 def main():
+    from repro.core.timing import read_timing_wall
+
+    w0 = read_timing_wall()
     with Timer() as t:
         res = run()
+    w1 = read_timing_wall()
     d = ";".join(f"{k}_area={v['area']:.3f}" for k, v in res.items())
-    emit("fig6_dd5", t.us, d + f";overall_adp={res['overall']['adp']:.3f}")
+    emit("fig6_dd5", t.us, d + f";overall_adp={res['overall']['adp']:.3f};"
+         f"timing_s={w1['s'] - w0['s']:.3f}")
     return res
 
 

@@ -39,11 +39,17 @@ def run(verbose: bool = True):
 
 
 def main():
+    from repro.core.timing import read_timing_wall
+
+    w0 = read_timing_wall()
     with Timer() as t:
         res = run()
+    w1 = read_timing_wall()
     k = res["kratos"]
     emit("fig7_dd6", t.us,
-         f"kratos_dd5_adp={k['dd5']['adp']:.3f};kratos_dd6_adp={k['dd6']['adp']:.3f}")
+         f"kratos_dd5_adp={k['dd5']['adp']:.3f};"
+         f"kratos_dd6_adp={k['dd6']['adp']:.3f};"
+         f"timing_s={w1['s'] - w0['s']:.3f}")
     return res
 
 

@@ -246,8 +246,80 @@ def run_suite_eval_cell(force: bool = False, n_lane_words: int = 4,
                                 for a in rec["archs"].values())
                         and all(a["n_groups"] <= 4
                                 for a in rec["archs"].values()))
+    # read-merge: other recorders (grouping-delta) share this file —
+    # a forced re-run must not drop their keys
+    merged = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = json.load(f)
+    merged.update(rec)
     with open(path, "w") as f:
-        json.dump(rec, f, indent=1)
+        json.dump(merged, f, indent=1)
+    return merged
+
+
+def record_grouping_delta(arch_name: str = "baseline") -> dict:
+    """Satellite record: the value-buffer padded-row delta from the
+    size-aware grouping term in ``group_plans_by_envelope`` (volume-only
+    cost vs volume + signal-count cost), on the re-elaborated 17-circuit
+    suite.  Appended to ``suite_eval_grouped.json`` under
+    ``size_aware_grouping``."""
+    from repro.core.alm import ARCHS
+    from repro.core.equiv import reelaborate
+    from repro.core.eval_jax import (group_plans_by_envelope,
+                                     grouping_padded_value_rows,
+                                     plan_netlist)
+    from repro.core.packing import pack as pack_fn
+
+    from .common import suites
+
+    nets = [net for nets_ in suites("wallace").values() for net in nets_]
+    phys = [reelaborate(pack_fn(net, ARCHS[arch_name], seed=0)).phys
+            for net in nets]
+    plans = [plan_netlist(p) for p in phys]
+
+    def plan_volume(groups):
+        tot = 0
+        for g in groups:
+            env = [0, 0, 0, 0]
+            for i in g:
+                env = [max(a, b) for a, b in zip(env, plans[i].envelope)]
+            L, M, C, B = env
+            tot += len(g) * L * (M + C * B)
+        return tot
+
+    g_vol = group_plans_by_envelope(plans, signal_weight=0.0)
+    g_size = group_plans_by_envelope(plans)
+    rows_vol = grouping_padded_value_rows(plans, g_vol)
+    rows_size = grouping_padded_value_rows(plans, g_size)
+    rec = {
+        "arch": arch_name,
+        "n_circuits": len(nets),
+        "groups_volume_only": g_vol,
+        "groups_size_aware": g_size,
+        "value_rows_real": rows_vol["real_rows"],
+        "value_rows_volume_only": rows_vol["padded_rows"],
+        "value_rows_size_aware": rows_size["padded_rows"],
+        "value_rows_delta": rows_vol["padded_rows"] - rows_size["padded_rows"],
+        "plan_volume_volume_only": plan_volume(g_vol),
+        "plan_volume_size_aware": plan_volume(g_size),
+    }
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, "suite_eval_grouped.json")
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data["size_aware_grouping"] = rec
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+    print(f"grouping_delta[{arch_name}] value rows: real="
+          f"{rec['value_rows_real']} volume-only="
+          f"{rec['value_rows_volume_only']} size-aware="
+          f"{rec['value_rows_size_aware']} "
+          f"(delta {rec['value_rows_delta']}); plan volume "
+          f"{rec['plan_volume_volume_only']} -> "
+          f"{rec['plan_volume_size_aware']}", flush=True)
     return rec
 
 
@@ -314,5 +386,7 @@ if __name__ == "__main__":
         run_netlist_eval_cell(force="force" in sys.argv[1:])
     elif "suite-eval" in sys.argv[1:]:
         run_suite_eval_cell(force="force" in sys.argv[1:])
+    elif "grouping-delta" in sys.argv[1:]:
+        record_grouping_delta()
     else:
         main()

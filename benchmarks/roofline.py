@@ -200,6 +200,40 @@ def netlist_eval_terms(net, n_lane_words: int, plan=None) -> dict:
     }
 
 
+def timing_program_terms(irs, n_archs: int = 1) -> dict:
+    """Roofline terms for one batched static-timing pass over lowered
+    PackIRs (``repro.core.pack_ir``), at ``n_archs`` delay rows.
+
+    The vectorized analyzer is a float64 gather/add/max workload: per LUT
+    row it gathers 6 arrivals + 6x3 edge components (3 adds each), a
+    6-way max and 3 node adds; per chain bit two 3-add operand edges, a
+    3-way max and the carry add.  Bytes count the arrival-buffer gathers/
+    scatters (8 B doubles) — intensity is low, so unlike the bitwise
+    evaluator the timing pass is memory-bound, and batching arch rows
+    amortizes the index traffic rather than the flops."""
+    flops = 0
+    bytes_ = 0
+    levels = 0
+    for ir in irs:
+        m, c, b = ir.level_profile()
+        levels = max(levels, ir.n_levels)
+        for M, C, B in zip(m, c, b):
+            flops += M * (6 * 3 + 5 + 3) + C * B * (2 * 3 + 2 + 1) + C * 3
+            bytes_ += M * (6 * 8 + 6 * 4 * 2 + 8) \
+                + C * B * (2 * 8 + 2 * 4 * 2 + 8) + C * (8 + 4 + 8)
+    flops *= n_archs
+    bytes_ *= n_archs
+    return {
+        "flops": flops,
+        "hbm_bytes": bytes_,
+        "intensity_flops_per_byte": flops / max(bytes_, 1),
+        "t_memory": bytes_ / HBM_BW,
+        "levels": levels,
+        "n_circuits": len(irs),
+        "n_archs": n_archs,
+    }
+
+
 def load_cells(dryrun_dir: str = DRYRUN_DIR) -> list[dict]:
     cells = []
     for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):

@@ -8,15 +8,26 @@ Prints ``name,us_per_call,derived`` CSV lines.  Sections:
   fig9  — packing stress test
   table4 — end-to-end SHA stress test
   beyond — beyond-paper sparsity/width ablations
+  sweep — arch-grid ADP frontier (bypass width x AddMux population),
+          batched PackIR timing, oracle-gated
   kernels — Pallas kernel microbenchmarks (interpret mode on CPU)
   roofline — reads dry-run artifacts if present (see launch/dryrun.py)
 
 Every section is failure-isolated — including its *import*: an exception
 anywhere in one figure reports a ``<section>,,failed(...)`` line on stderr
 and the run continues, so a CSV run always covers every section it can
-(previously only kernels/roofline were wrapped and any fig failure killed
-the whole run; an environment without jax still gets every jax-free
-section).
+(an environment without jax still gets every jax-free section).
+
+After each section the driver emits a ``<section>.timing_analysis`` CSV
+row: the static-timing wall time (and call count) that section spent in
+``repro.core.timing`` — the figure suites are packing-bound, and this row
+is what proves it (the vectorized PackIR analyzer keeps the timing share
+in the noise; see ``experiments/perf/timing_sweep.json`` for the
+suite-scale sweep numbers).
+
+``--smoke`` is the fast-tier CI entrypoint (also ``scripts/check.sh``):
+runs ``pytest -m "not slow"`` plus a 2-point arch-grid sweep gated on
+oracle bit-identity, and exits non-zero on any failure.
 """
 from __future__ import annotations
 
@@ -31,14 +42,29 @@ SECTIONS = [
     ("fig9", "fig9_stress"),
     ("table4", "table4_e2e"),
     ("beyond", "beyond_paper"),
+    ("sweep", "sweep_frontier"),
     ("kernels", "kernels"),
     ("roofline", "roofline"),
 ]
 
 
+def _timing_wall():
+    try:
+        from repro.core.timing import read_timing_wall
+
+        return read_timing_wall()
+    except ImportError:
+        return None
+
+
 def _section(name: str, module: str) -> str:
+    w0 = _timing_wall()
     try:
         importlib.import_module(f".{module}", package=__package__).main()
+        w1 = _timing_wall()
+        if w0 is not None and w1 is not None:
+            print(f"{name}.timing_analysis,{(w1['s'] - w0['s']) * 1e6:.0f},"
+                  f"calls={w1['calls'] - w0['calls']}")
         return "ok"
     except ImportError as e:
         # missing optional dependency (e.g. no jax): not a failure — the
@@ -50,7 +76,41 @@ def _section(name: str, module: str) -> str:
         return "failed"
 
 
+def smoke() -> int:
+    """Fast-tier check: ``pytest -m "not slow"`` + a 2-point arch-grid
+    sweep proven bit-identical to the timing oracle."""
+    import os
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    src = os.path.join(root, "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    print("== smoke: pytest fast tier ==", flush=True)
+    tests = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q", "-m", "not slow"],
+        cwd=root, env=env)
+    print("== smoke: 2-point arch-grid sweep ==", flush=True)
+    try:
+        from .sweep_frontier import run as sweep_run
+
+        rec = sweep_run(smoke=True)
+        sweep_ok = rec["oracle_match"]
+    except Exception as e:  # noqa: BLE001
+        print(f"smoke_sweep,,failed({type(e).__name__}: {e})",
+              file=sys.stderr)
+        sweep_ok = False
+    ok = tests.returncode == 0 and sweep_ok
+    print(f"smoke,,{'ok' if ok else 'failed'}"
+          f"(tests={'ok' if tests.returncode == 0 else 'fail'};"
+          f"sweep={'ok' if sweep_ok else 'fail'})")
+    return 0 if ok else 1
+
+
 def main() -> int:
+    if "--smoke" in sys.argv[1:]:
+        return smoke()
     print("name,us_per_call,derived")
     status = {name: _section(name, mod) for name, mod in SECTIONS}
     failed = [name for name, st in status.items() if st == "failed"]

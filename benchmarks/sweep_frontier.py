@@ -1,0 +1,147 @@
+"""Design-space sweep — ADP frontier over bypass width x AddMux population.
+
+The scenario the paper never measured: every circuit of the
+Kratos + Koios + VTR suites re-timed across the DD architecture grid
+(:func:`repro.core.alm.arch_grid` — bypass inputs x crossbar fan-in x
+6-LUT concurrency; the canonical baseline/DD5/DD6 are three of the rows).
+Packing happens once per *structural class*; timing runs as one batched
+``lax.scan``/``vmap`` jit program per class over the class's delay-table
+rows (:mod:`repro.core.sweep`).
+
+The run is gated on bit-identity against the per-circuit Python timing
+oracle and records wall times in ``experiments/perf/timing_sweep.json``:
+
+* ``t_oracle_s``      — per-circuit ``analyze_oracle`` over every
+  (circuit, grid point), the seed-style dict walk;
+* ``t_vector_cold_s`` — IR lowering + program build + first batched run
+  (includes jit compiles);
+* ``t_vector_warm_s`` — the same sweep re-run with packs and compile
+  caches hot (what an interactive frontier exploration pays per step).
+
+Pack time is excluded from both sides (identical work, shared by
+construction on the vector side).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+from repro.core.alm import arch_grid
+from repro.core.sweep import adp_frontier, sweep_suite
+from repro.core.timing import analyze_oracle
+
+from .common import Timer, emit, suites
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "perf")
+
+
+def _smoke_suites():
+    from repro.core.circuits import kratos_gemm, sha_like, vtr_mixed
+
+    return {"smoke": [kratos_gemm(m=5, n=5, width=5, sparsity=0.5),
+                      sha_like(rounds=1),
+                      vtr_mixed(logic_nodes=150, adders=2)]}
+
+
+def run(smoke: bool = False, verbose: bool = True, seed: int = 0,
+        write_json: bool = True) -> dict:
+    if smoke:
+        nets = _smoke_suites()
+        grid = [a for a in arch_grid() if a.name in ("b0", "b2_f10")]
+    else:
+        nets = suites("wallace")
+        grid = arch_grid()
+
+    packs: dict = {}
+    programs: dict = {}
+    t0 = time.perf_counter()
+    res = sweep_suite(nets, grid, seed=seed, packs=packs, programs=programs)
+    t_total_cold = time.perf_counter() - t0
+    t_cold = t_total_cold - res.wall["pack_s"]
+    t0 = time.perf_counter()
+    res_warm = sweep_suite(nets, grid, seed=seed, packs=packs,
+                           programs=programs)
+    t_warm = time.perf_counter() - t0 - res_warm.wall["pack_s"]
+
+    # the Python oracle on identical packs: re-tag each structural-class
+    # pack with the grid row's delays (delays never change the pack) so
+    # only the timing walk is timed
+    t0 = time.perf_counter()
+    oracle_cp = {}
+    for g in range(len(res.circuits)):
+        for k, arch in enumerate(grid):
+            p = packs[(g, arch.structural_key(), seed)]
+            rec = analyze_oracle(dataclasses.replace(p, arch=arch))
+            oracle_cp[(g, k)] = rec["critical_path_ps"]
+    t_oracle = time.perf_counter() - t0
+
+    match = all(
+        oracle_cp[(g, k)] == res.records[g][k]["critical_path_ps"]
+        and oracle_cp[(g, k)] == res_warm.records[g][k]["critical_path_ps"]
+        for g in range(len(res.circuits)) for k in range(len(grid)))
+    frontier = adp_frontier(res, baseline="b0")
+
+    from .roofline import timing_program_terms
+
+    terms = timing_program_terms([p.lower_ir() for p in packs.values()])
+
+    rec = {
+        "tag": "timing_sweep",
+        "smoke": smoke,
+        "n_circuits": len(res.circuits),
+        "n_grid_points": len(grid),
+        "grid": [{"name": a.name, "bypass_inputs": a.bypass_inputs,
+                  "addmux_fanin": a.addmux_fanin,
+                  "lut6": a.concurrent_6lut} for a in grid],
+        "n_structural_classes": res.n_classes,
+        "t_pack_s": res.wall["pack_s"],
+        "t_oracle_s": t_oracle,
+        "t_vector_cold_s": t_cold,
+        "t_vector_warm_s": t_warm,
+        "speedup_cold": t_oracle / max(t_cold, 1e-9),
+        "speedup_warm": t_oracle / max(t_warm, 1e-9),
+        "oracle_match": bool(match),
+        "wall_cold": res.wall,
+        "wall_warm": res_warm.wall,
+        "roofline_terms_one_pass": terms,
+        "frontier_vs_b0": frontier,
+        "pass_gate": bool(match) and (t_oracle / max(t_warm, 1e-9)) >= 10.0,
+    }
+    if write_json and not smoke:
+        os.makedirs(OUT, exist_ok=True)
+        with open(os.path.join(OUT, "timing_sweep.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        for row in frontier:
+            emit(f"sweep/frontier/{row['arch']}", 0,
+                 f"area={row['area_mwta']:.3f};"
+                 f"cpd={row['critical_path_ps']:.3f};adp={row['adp']:.3f}")
+        emit("sweep/timing", 0,
+             f"oracle={t_oracle:.2f}s;vector_cold={t_cold:.2f}s;"
+             f"vector_warm={t_warm:.2f}s;"
+             f"speedup_warm={rec['speedup_warm']:.1f}x;"
+             f"classes={res.n_classes};oracle_match={match}")
+    return rec
+
+
+def main():
+    with Timer() as t:
+        rec = run()
+    best = rec["frontier_vs_b0"][0] if rec["frontier_vs_b0"] else {}
+    emit("sweep_frontier", t.us,
+         f"grid={rec['n_grid_points']};classes={rec['n_structural_classes']};"
+         f"best_adp={best.get('arch', '')}={best.get('adp', 0):.3f};"
+         f"speedup_warm={rec['speedup_warm']:.1f}x;"
+         f"oracle_match={rec['oracle_match']}")
+    return rec
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--smoke" in sys.argv[1:]:
+        rec = run(smoke=True)
+        sys.exit(0 if rec["oracle_match"] else 1)
+    main()

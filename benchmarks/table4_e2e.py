@@ -44,14 +44,19 @@ def run(verbose: bool = True, max_instances: int = 48):
 
 
 def main():
+    from repro.core.timing import read_timing_wall
+
+    w0 = read_timing_wall()
     with Timer() as t:
         res = run()
+    w1 = read_timing_wall()
     gains = []
     for name, r in res.items():
         b, d = r["baseline"]["instances"], r["dd5"]["instances"]
         gains.append((d - b) / max(1, b) * 100)
     emit("table4_e2e", t.us,
-         ";".join(f"{n}=+{g:.0f}%" for n, g in zip(res, gains)))
+         ";".join(f"{n}=+{g:.0f}%" for n, g in zip(res, gains))
+         + f";timing_s={w1['s'] - w0['s']:.3f}")
     return res
 
 

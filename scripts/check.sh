@@ -1,0 +1,9 @@
+#!/bin/sh
+# Fast-tier CI check: CAD-core tests + a 2-point arch-grid sweep gated on
+# timing-oracle bit-identity.  Equivalent to `python -m benchmarks.run
+# --smoke`; run the full tier-1 line (`python -m pytest -x -q`) before
+# shipping.
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    exec python -m benchmarks.run --smoke

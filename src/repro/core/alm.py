@@ -18,10 +18,42 @@ two 4-LUTs (combinable into one 5-LUT).  Modes per half:
   uses the spare output pin (O2/O4).
 * logic half — no FA in use; hosts one <=5-input LUT (both archs; a plain
   logic ALM is two such halves, or a single 6-LUT across both halves).
+
+Design-space parameterization
+-----------------------------
+``ArchParams`` is fully data-driven: the DD features are two integers —
+``bypass_inputs`` (Z-path operand inputs per ALM half: 0 = baseline,
+2 = DD5/DD6) and ``addmux_fanin`` (the per-Z-pin crossbar mux fan-in;
+10/60 inputs = the paper's 17 %-populated AddMux) — plus the
+``concurrent_6lut`` flag.  :func:`make_arch` derives everything else
+(area model, Z-source budget, delay table) from those knobs, so
+``BASELINE``/``DD5``/``DD6`` are literally three rows of an architecture
+grid (:func:`arch_grid`) and the DD5-vs-DD6 design-space question
+("how many bypass inputs, how much AddMux crossbar") becomes a sweep
+axis (see :mod:`repro.core.sweep`).
+
+Two views matter to the rest of the stack:
+
+* :meth:`ArchParams.structural_key` — the pack-affecting fields.  Grid
+  points sharing a structural key produce *identical* packs, so a sweep
+  packs once per key and re-times many delay rows (delays never affect
+  packing).
+* :meth:`ArchParams.delay_table` — the Table II + free-parameter delays
+  as a flat float64 vector over :data:`DELAY_FIELDS`, the row format the
+  vectorized timing analyzer (:mod:`repro.core.timing_vec`) gathers from.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, fields
+
+import numpy as np
+
+#: canonical order of the delay parameters inside a delay-table row
+DELAY_FIELDS = (
+    "t_lbin_to_ah", "t_lbin_to_z", "t_ah_to_adder", "t_z_to_adder",
+    "t_lut4", "t_lut5", "t_lut6", "t_carry", "t_sum_out", "t_alm_out",
+    "t_out_mux_extra", "t_route_global", "t_route_local",
+)
 
 
 @dataclass(frozen=True)
@@ -34,6 +66,10 @@ class ArchParams:
     # +3.72 % "tile area"; solving (2366.6-2167.3+77.91)/x = 3.72 % puts the
     # baseline tile at ~7452 MWTA/ALM, which we adopt.
     alm_area_mwta: float
+    # DD design-space knobs (see module docstring); the canonical DD5/DD6
+    # point is (bypass_inputs=2, addmux_fanin=10)
+    bypass_inputs: int = 0        # Z-path FA operand inputs per half
+    addmux_fanin: int = 10        # crossbar mux fan-in per Z pin (of 60 ins)
     # cluster geometry / budgets
     alms_per_lb: int = 10
     lb_inputs: int = 60
@@ -44,7 +80,9 @@ class ArchParams:
     # with fan-in 10 drawn from the LB's 60 inputs (10/60 crosspoints).  With
     # spread subsets, bipartite matching succeeds until demand nears the pin
     # count, so the budget is one distinct signal per Z pin; Z sources also
-    # debit the ordinary LB input budget.
+    # debit the ordinary LB input budget.  A sparser crossbar (smaller
+    # ``addmux_fanin``) supports proportionally fewer distinct sources —
+    # :func:`make_arch` derives ``min(lb_outputs, 4 * addmux_fanin)``.
     z_sources: int = 40
     z_local_free: bool = True     # direct-link taps carry neighbouring outputs
     # Table II path delays (ps)
@@ -80,32 +118,134 @@ class ArchParams:
             return self.t_lut5
         return self.t_lut6
 
+    # -- data-driven views ---------------------------------------------------
+    def delay_table(self) -> np.ndarray:
+        """All delay parameters as a float64 vector over DELAY_FIELDS —
+        one row of the batched delay tensor the vectorized timing
+        analyzer gathers from."""
+        return np.array([getattr(self, f) for f in DELAY_FIELDS],
+                        dtype=np.float64)
 
+    def structural_key(self) -> tuple:
+        """The pack-affecting fields.  Two archs with equal structural
+        keys produce identical ``pack()`` results (delays never steer the
+        packer), which is what lets a design-space sweep pack once per
+        key and re-time every delay row of the class in one batch."""
+        return (self.concurrent, self.concurrent_6lut, self.bypass_inputs,
+                self.alms_per_lb, self.lb_inputs, self.ext_pin_util,
+                self.direct_link_inputs, self.lb_outputs, self.z_sources,
+                self.z_local_free)
+
+
+_FIELD_DEFAULTS = {f.name: f.default for f in fields(ArchParams)}
+
+# -- the area/delay model behind make_arch ----------------------------------
 _BASE_TILE = 7452.0
+#: Table I: the AddMux crossbar's share of the +3.72 % DD5 tile delta,
+#: at the canonical (2 bypass inputs x fan-in 10) point
+_XBAR_MWTA = 77.91
+#: the remaining ALM-internal share (AddMux drivers + output muxing):
+#: 0.0372 * 7452 - 77.91, so the canonical point lands exactly on x1.0372
+_ALM_BYPASS_MWTA = 0.0372 * _BASE_TILE - _XBAR_MWTA
+#: DD6's extra 6-LUT output muxing (estimated): lands exactly on x1.043
+_LUT6_MWTA = (1.043 - 1.0372) * _BASE_TILE
+#: ps of extra Z-pin mux delay per crossbar input beyond the canonical 10
+_T_Z_FANIN_SLOPE = 0.9
 
-BASELINE = ArchParams(
-    name="baseline",
-    concurrent=False,
-    concurrent_6lut=False,
-    alm_area_mwta=_BASE_TILE,
-)
 
-DD5 = ArchParams(
-    name="dd5",
-    concurrent=True,
-    concurrent_6lut=False,
-    alm_area_mwta=_BASE_TILE * 1.0372,  # +3.72 % tile area (Table I)
-    t_ah_to_adder=202.2,                # +51.6 % vs baseline (Table II)
-)
+def make_arch(name: str, bypass_inputs: int = 0, addmux_fanin: int = 10,
+              lut6: bool = False, z_sources: int | None = None,
+              **overrides) -> ArchParams:
+    """Build an architecture grid point from the DD design-space knobs.
 
-DD6 = ArchParams(
-    name="dd6",
-    concurrent=True,
-    concurrent_6lut=True,
-    alm_area_mwta=_BASE_TILE * 1.043,   # extra output muxing (estimated)
-    t_ah_to_adder=202.2,
-    t_out_mux_extra=60.0,               # drives the ~8 % Fmax penalty of §V-B
-)
+    Everything the packer and timer need is derived:
+
+    * ``concurrent`` = ``bypass_inputs >= 1`` (an FA operand can bypass
+      the LUTs at all), ``concurrent_6lut`` = ``lut6``;
+    * area: baseline tile + the ALM-internal bypass cost (scales with
+      bypass width) + the AddMux crossbar cost (scales with bypass width
+      x fan-in) + the DD6 output-mux cost.  The canonical points
+      reproduce Table I exactly: (2, 10) -> x1.0372, +lut6 -> x1.043;
+    * ``z_sources`` = ``min(lb_outputs, 4 * addmux_fanin)`` — a sparser
+      crossbar resolves fewer distinct sources by bipartite matching;
+    * delays: with any bypass the LUT-path adder feed pays the AddMux
+      (Table II: 133.4 -> 202.2 ps), and the Z-pin mux slows by
+      ``_T_Z_FANIN_SLOPE`` ps per crossbar input beyond fan-in 10.
+
+    ``overrides`` are applied last (escape hatch for ablations).
+    """
+    if bypass_inputs < 0 or bypass_inputs > 2:
+        raise ValueError("bypass_inputs must be 0..2 (2 FA operands/half)")
+    if lut6 and bypass_inputs < 2:
+        raise ValueError("concurrent 6-LUTs require 2 bypass inputs/half")
+    concurrent = bypass_inputs >= 1
+    w = bypass_inputs / 2.0
+    if bypass_inputs == 2 and addmux_fanin == 10:
+        # the published Table I points, verbatim (the additive
+        # decomposition below reproduces them only to the last ulp)
+        area = _BASE_TILE * (1.043 if lut6 else 1.0372)
+    else:
+        area = _BASE_TILE + w * _ALM_BYPASS_MWTA \
+            + w * _XBAR_MWTA * (addmux_fanin / 10.0)
+        if lut6:
+            area += _LUT6_MWTA
+    lb_outputs = overrides.get("lb_outputs", _FIELD_DEFAULTS["lb_outputs"])
+    params = dict(
+        name=name,
+        concurrent=concurrent,
+        concurrent_6lut=lut6,
+        alm_area_mwta=area,
+        bypass_inputs=bypass_inputs,
+        addmux_fanin=addmux_fanin,
+        z_sources=(min(lb_outputs, 4 * addmux_fanin) if z_sources is None
+                   else z_sources),
+        t_ah_to_adder=202.2 if concurrent else 133.4,
+        t_lbin_to_z=77.05 + _T_Z_FANIN_SLOPE * (addmux_fanin - 10),
+        t_out_mux_extra=60.0 if lut6 else 0.0,
+    )
+    params.update(overrides)
+    return ArchParams(**params)
+
+
+def arch_grid(bypass_inputs=(0, 2), addmux_fanin=(5, 10, 20),
+              lut6=(False, True)) -> list[ArchParams]:
+    """The DD design-space grid: bypass width x crossbar population x
+    6-LUT concurrency.  Infeasible corners (lut6 without full bypass)
+    and redundant baseline fan-in points are dropped; the canonical
+    baseline/DD5/DD6 rows appear under grid names (``b0``, ``b2_f10``,
+    ``b2_f10_l6``) with identical parameters."""
+    grid: list[ArchParams] = []
+    seen: set[tuple] = set()
+    for b in bypass_inputs:
+        fanins = addmux_fanin if b else (10,)   # no crossbar without bypass
+        for f in fanins:
+            for l6 in lut6:
+                if l6 and b < 2:
+                    continue
+                name = f"b{b}" + (f"_f{f}" if b else "") + ("_l6" if l6 else "")
+                key = (b, f if b else 10, l6)
+                if key in seen:
+                    continue
+                seen.add(key)
+                grid.append(make_arch(name, bypass_inputs=b, addmux_fanin=f,
+                                      lut6=l6))
+    return grid
+
+
+def group_archs_by_structure(archs) -> list[list[int]]:
+    """Indices of ``archs`` grouped by structural key (pack-sharing
+    classes), preserving first-seen order."""
+    groups: dict[tuple, list[int]] = {}
+    for i, a in enumerate(archs):
+        groups.setdefault(a.structural_key(), []).append(i)
+    return list(groups.values())
+
+
+# canonical paper rows — three points of the grid (checked by tests to land
+# exactly on the Table I ratios the seed hard-coded)
+BASELINE = make_arch("baseline", bypass_inputs=0)
+DD5 = make_arch("dd5", bypass_inputs=2, addmux_fanin=10)
+DD6 = make_arch("dd6", bypass_inputs=2, addmux_fanin=10, lut6=True)
 
 ARCHS = {a.name: a for a in (BASELINE, DD5, DD6)}
 

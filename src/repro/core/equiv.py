@@ -44,11 +44,20 @@ Flow
    mismatch *localizes* the corrupted node.  Cones wider than 6 inputs
    fall back to lane simulation.
 
-4. :func:`check_pack_equivalence` / :func:`verify_all_archs` are the
+4. :func:`exhaustive_residue_report` closes symbolic residue cones with
+   <= 16 support inputs by **full truth-table enumeration**: support
+   signals become free variables with ``tt_var`` bit patterns over
+   ``2^W`` lanes and both sides' cones evaluate bit-parallel over one
+   python int — an exhaustive proof, not a sample.  Only cones wider
+   than 16 inputs (or with unmapped leaves) remain for lane simulation —
+   the SAT-shaped open item is now wide cones only.
+
+5. :func:`check_pack_equivalence` / :func:`verify_all_archs` are the
    one-call gates used by tests and benchmarks: pack, re-elaborate, prove —
    for baseline, DD5 and DD6, so the A/B area comparison is provably
-   apples-to-apples.  The gates run the symbolic fast path first and only
-   simulate the cones it could not close.
+   apples-to-apples.  The gates run the symbolic fast path first, then
+   the exhaustive residue closure, and only simulate what neither pass
+   could close.
 """
 from __future__ import annotations
 
@@ -371,8 +380,149 @@ def symbolic_equivalence_report(src: Netlist,
         "pos_checked": sum(len(b) for b in src.pos.values()),
         "signals_checked": len(sig_map),
         "mismatches": mismatches,
+        "po_ok": po_ok,
         "complete": not fallback and po_ok,
         "equivalent": po_ok and not fallback and not mismatches,
+    }
+
+
+# ---------------------------------------------------------------------------
+# exhaustive residue closure (cones the symbolic pass cannot close)
+# ---------------------------------------------------------------------------
+
+#: widest cone support enumerated exhaustively (2^16 assignments as one
+#: bit-parallel python-int evaluation; beyond this, lane simulation remains)
+EXHAUSTIVE_MAX_SUPPORT = 16
+
+
+def _eval_cone(net: Netlist, targets, var_pat: dict[int, int], mask: int):
+    """Bit-parallel evaluation of the cones of ``targets``, treating
+    ``var_pat`` signals as free variables (their patterns enumerate every
+    assignment).  Returns ``{target: int}``; raises KeyError when a cone
+    leaf is neither a constant, a variable, nor a driven signal — that
+    cone cannot be closed from this support."""
+    val: dict[int, int] = {CONST0: 0, CONST1: mask}
+    val.update(var_pat)
+
+    def ev(s: int) -> int:
+        if s in val:
+            return val[s]
+        drv = net.driver[s]        # KeyError -> unclosable leaf
+        if drv[0] == "lut":
+            i = drv[1]
+            ins = [ev(q) for q in net.lut_inputs[i]]
+            tt = net.lut_tt[i]
+            out = 0
+            for m in range(1 << len(ins)):
+                if not tt_eval(tt, m):
+                    continue
+                term = mask
+                for j, sv in enumerate(ins):
+                    term &= sv if (m >> j) & 1 else (~sv & mask)
+                    if term == 0:
+                        break
+                out |= term
+            val[s] = out
+            return out
+        if drv[0] in ("chain", "cout"):
+            ci = drv[1]
+            ch = net.chains[ci]
+            # ripple only as deep as the requested signal needs: a per-bit
+            # residue entry's support covers bits 0..bi only, and deeper
+            # bits' operand cones may leave the support entirely
+            hi = drv[2] if drv[0] == "chain" else len(ch.sums) - 1
+            c = ev(ch.cin)
+            for bi in range(hi + 1):
+                av, bv = ev(ch.a[bi]), ev(ch.b[bi])
+                out = ch.sums[bi]
+                if out in var_pat:
+                    # the chosen support is not a cut: an enumerated
+                    # variable is also an internal node of this cone, so
+                    # a consistent valuation does not exist — unclosable
+                    raise KeyError(out)
+                val[out] = av ^ bv ^ c
+                c = (av & bv) | (c & (av ^ bv))
+            if drv[0] == "cout" and ch.cout is not None:
+                if ch.cout in var_pat:
+                    raise KeyError(ch.cout)
+                val[ch.cout] = c
+            return val[s]
+        raise KeyError(s)          # a PI outside the chosen support
+
+    return {t: ev(t) for t in targets}
+
+
+def _residue_node_spec(src: Netlist, entry):
+    """(support signals, output signals) of one symbolic-fallback entry."""
+    if entry[0] == "lut":
+        ins = [s for s in src.lut_inputs[entry[1]] if s > CONST1]
+        return ins, [src.lut_out[entry[1]]]
+    ci = entry[1]
+    ch = src.chains[ci]
+    hi = entry[2] if len(entry) > 2 else len(ch.sums) - 1
+    support: list[int] = []
+    for s in ([ch.cin] + [ch.a[b] for b in range(hi + 1)]
+              + [ch.b[b] for b in range(hi + 1)]):
+        if s > CONST1 and s not in support:
+            support.append(s)
+    outs = [ch.sums[b] for b in range(hi + 1)]
+    if ch.cout is not None and hi == len(ch.sums) - 1:
+        outs.append(ch.cout)
+    return support, outs
+
+
+def exhaustive_residue_report(src: Netlist, re_elab: ReElaboration,
+                              residue,
+                              max_support: int = EXHAUSTIVE_MAX_SUPPORT
+                              ) -> dict:
+    """Close symbolic-fallback cones by full truth-table enumeration.
+
+    Each residue entry (a ``symbolic_equivalence_report`` ``fallback``
+    item) is re-checked over *every* assignment of its source-side
+    support: support signals become free variables with
+    ``tt_var``-style bit patterns over ``2^W`` lanes, the source node and
+    its physical counterpart cone are both evaluated bit-parallel, and
+    the outputs are compared — an exhaustive proof, not a sample.  Cones
+    wider than ``max_support``, or whose physical cone reaches a leaf
+    outside the mapped support, stay open (``unclosed``) and fall back to
+    lane simulation exactly as before.
+    """
+    from .netlist import tt_var
+
+    sig_map, phys = re_elab.sig_map, re_elab.phys
+    proven = 0
+    unclosed: list = []
+    mismatches: list[dict] = []
+    for entry in residue:
+        support, outs = _residue_node_spec(src, entry)
+        W = len(support)
+        if (W > max_support or any(s not in sig_map for s in support)
+                or any(o not in sig_map for o in outs)):
+            unclosed.append(entry)
+            continue
+        mask = (1 << (1 << W)) - 1
+        pats = {s: tt_var(j, W) for j, s in enumerate(support)}
+        try:
+            want = _eval_cone(src, outs, pats, mask)
+            got = _eval_cone(
+                phys, [sig_map[o] for o in outs],
+                {sig_map[s]: p for s, p in pats.items()}, mask)
+        except KeyError:
+            unclosed.append(entry)
+            continue
+        bad = [o for o in outs if want[o] != got[sig_map[o]]]
+        if bad:
+            mismatches.append({"node": entry, "signal": bad[0],
+                               "phys_signal": sig_map[bad[0]],
+                               "support": W})
+        else:
+            proven += 1
+    return {
+        "method": "exhaustive",
+        "proven_cones": proven,
+        "unclosed": unclosed,
+        "mismatches": mismatches,
+        "max_support": max_support,
     }
 
 
@@ -481,11 +631,14 @@ def check_pack_equivalence(net: Netlist, arch: ArchParams, seed: int = 0,
                            method: str = "auto", **pack_kwargs) -> dict:
     """Pack ``net`` under ``arch``, re-elaborate, and prove equivalence.
 
-    ``method``: ``"auto"`` runs the per-ALM symbolic fast path first and
-    falls back to lane simulation only when some cone could not be closed
-    symbolically; ``"simulate"`` forces the random-lane proof;
-    ``"symbolic"`` returns the symbolic report as-is (``equivalent`` is
-    False when incomplete).
+    ``method``: ``"auto"`` runs the per-ALM symbolic fast path first,
+    closes any residue cones with <= :data:`EXHAUSTIVE_MAX_SUPPORT`
+    support inputs by full truth-table enumeration
+    (:func:`exhaustive_residue_report`), and falls back to lane
+    simulation only for cones neither pass could close (wide cones — the
+    remaining SAT-shaped gap); ``"simulate"`` forces the random-lane
+    proof; ``"symbolic"`` returns the symbolic report as-is
+    (``equivalent`` is False when incomplete).
     """
     if method not in ("auto", "symbolic", "simulate"):
         raise ValueError(f"unknown equivalence method {method!r}")
@@ -493,6 +646,18 @@ def check_pack_equivalence(net: Netlist, arch: ArchParams, seed: int = 0,
     re_elab = reelaborate(packed)
     if method in ("auto", "symbolic"):
         rep = symbolic_equivalence_report(net, re_elab)
+        if (method == "auto" and not rep["equivalent"] and rep["po_ok"]
+                and rep["fallback"] and not rep["mismatches"]):
+            ex = exhaustive_residue_report(net, re_elab, rep["fallback"])
+            rep["exhaustive_proven"] = ex["proven_cones"]
+            if ex["mismatches"]:
+                rep["mismatches"] = ex["mismatches"]
+            else:
+                rep["fallback"] = ex["unclosed"]
+                if not ex["unclosed"]:
+                    rep["method"] = "symbolic+exhaustive"
+                    rep["complete"] = True
+                    rep["equivalent"] = True
         if method == "auto" and not rep["equivalent"]:
             # incomplete or suspected corruption: the random-lane proof is
             # the authority; keep the symbolic localization alongside

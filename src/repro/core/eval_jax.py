@@ -26,7 +26,10 @@ Suite-scale batched evaluation
 ------------------------------
 :func:`eval_netlists_batched_jax` evaluates many circuits per device
 program.  Plans are clustered by *compatible envelopes* (agglomerative
-merging on the padded-volume increase, capped at ``max_groups`` groups), so
+merging on the padded plan volume **plus a signal-count term** — members
+pad their value buffers to the group's largest circuit, so the merge cost
+also charges the extra value-buffer rows; one giant circuit no longer
+drags small groupmates' buffers up), capped at ``max_groups`` groups, so
 a whole benchmark suite compiles into a handful of vmapped jit programs
 instead of either one-per-circuit or one worst-case envelope covering
 everything.  Within a group the bucket boundaries are recomputed on the
@@ -488,20 +491,34 @@ def eval_netlist_jax(net: Netlist, pi_lanes: dict[int, np.ndarray],
 
 
 def group_plans_by_envelope(plans: list[FusedPlan],
-                            max_groups: int = DEFAULT_MAX_GROUPS
-                            ) -> list[list[int]]:
+                            max_groups: int = DEFAULT_MAX_GROUPS,
+                            signal_weight: float = 1.0) -> list[list[int]]:
     """Cluster plans into <= ``max_groups`` compatible-envelope groups.
 
     Agglomerative: start one group per plan, repeatedly merge the pair
-    whose combined worst-case envelope increases the padded volume least.
-    Each resulting group compiles to exactly one vmapped jit program.
+    whose combined layout costs least.  Each resulting group compiles to
+    exactly one vmapped jit program.
+
+    The merge cost has two terms, both in "rows of N lane words":
+
+    * the padded *plan* volume ``n * L * (M + C * B)`` of the combined
+      worst-case envelope (the index tensors every scan step reads);
+    * the padded *value-buffer* volume ``n * max(n_signals)`` weighted by
+      ``signal_weight`` — every member's value buffer is padded to the
+      group's largest circuit, so co-locating one giant circuit with
+      small ones used to make the small members pay the giant's buffer
+      rows on every call even when the envelopes merged cheaply.
     """
     groups = [[i] for i in range(len(plans))]
     envs = [list(p.envelope) for p in plans]
+    nsig = [p.n_signals for p in plans]
 
     def vol(env, n):
         L, M, C, B = env
         return n * L * (M + C * B)
+
+    def cost_of(env, ns, n):
+        return vol(env, n) + signal_weight * n * ns
 
     def merged(e1, e2):
         return [max(a, b) for a, b in zip(e1, e2)]
@@ -511,16 +528,29 @@ def group_plans_by_envelope(plans: list[FusedPlan],
         for i in range(len(groups)):
             for j in range(i + 1, len(groups)):
                 me = merged(envs[i], envs[j])
-                cost = (vol(me, len(groups[i]) + len(groups[j]))
-                        - vol(envs[i], len(groups[i]))
-                        - vol(envs[j], len(groups[j])))
+                mns = max(nsig[i], nsig[j])
+                ni, nj = len(groups[i]), len(groups[j])
+                cost = (cost_of(me, mns, ni + nj)
+                        - cost_of(envs[i], nsig[i], ni)
+                        - cost_of(envs[j], nsig[j], nj))
                 if best is None or cost < best[0]:
-                    best = (cost, i, j, me)
-        _, i, j, me = best
+                    best = (cost, i, j, me, mns)
+        _, i, j, me, mns = best
         groups[i] = groups[i] + groups[j]
         envs[i] = me
-        del groups[j], envs[j]
+        nsig[i] = mns
+        del groups[j], envs[j], nsig[j]
     return groups
+
+
+def grouping_padded_value_rows(plans: list[FusedPlan],
+                               groups: list[list[int]]) -> dict:
+    """Value-buffer padding accounting for a grouping: every member is
+    padded to its group's largest ``n_signals``."""
+    real = sum(p.n_signals for p in plans)
+    padded = sum(len(g) * max(plans[i].n_signals for i in g) for g in groups)
+    return {"real_rows": real, "padded_rows": padded,
+            "waste": 1.0 - real / max(padded, 1)}
 
 
 def _group_level_rows(nets: list[Netlist]):

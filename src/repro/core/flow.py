@@ -10,7 +10,15 @@ The stages:
   architecture across placement seeds and averages the
   :func:`~repro.core.timing.analyze` metrics (the paper averages three
   seeds); :func:`pack_and_analyze_one` keeps the packed circuit for
-  callers that need structural access (stress capacity sweeps).
+  callers that need structural access (stress capacity sweeps).  Timing
+  runs on the columnar :class:`~repro.core.pack_ir.PackIR` through the
+  vectorized analyzer (bit-identical to the Python oracle) — figure
+  drivers never re-walk the packed object graph.
+* **design-space sweeps** — :func:`sweep_architectures` /
+  :func:`sweep_frontier` drive :mod:`repro.core.sweep`: pack once per
+  structural class, re-time the whole suite across an arch grid
+  (:func:`repro.core.alm.arch_grid`) as one batched jit program per
+  class, and reduce to geomean ADP-frontier rows.
 * **equivalence gate** — :func:`run_circuit` optionally proves pack
   equivalence per arch through :mod:`repro.core.equiv` (symbolic fast
   path first, lane simulation as fallback), so any figure can be gated on
@@ -115,6 +123,32 @@ def run_circuit(net: Netlist, archs: Sequence[str | ArchParams],
             rec["equiv_method"] = rep.get("method", "simulate")
         out[ap.name] = rec
     return out
+
+
+def sweep_architectures(suites_or_nets, archs=None, seed: int = 0,
+                        backend: str = "jax", max_buckets: int = 3,
+                        packs: dict | None = None,
+                        programs: dict | None = None):
+    """Design-space sweep over an architecture grid (see
+    :func:`repro.core.sweep.sweep_suite`).  ``archs`` defaults to the
+    full bypass-width x crossbar-population grid; pass any list of
+    :class:`~repro.core.alm.ArchParams` rows (e.g. the canonical
+    baseline/DD5/DD6 triple plus ablations)."""
+    from .alm import arch_grid
+    from .sweep import sweep_suite
+
+    if archs is None:
+        archs = arch_grid()
+    return sweep_suite(suites_or_nets, archs, seed=seed, backend=backend,
+                       max_buckets=max_buckets, packs=packs,
+                       programs=programs)
+
+
+def sweep_frontier(result, baseline: str | None = None):
+    """Geomean area/cpd/ADP ratio rows vs a baseline grid point."""
+    from .sweep import adp_frontier
+
+    return adp_frontier(result, baseline=baseline)
 
 
 def ratios_vs_baseline(per_arch: dict[str, dict], baseline: str = "baseline",

@@ -28,6 +28,16 @@ Every pack is *verifiable*: :mod:`repro.core.equiv` re-elaborates a
 (absorbed masks, Z-fed vs A–H-fed operands, hosted LUTs, 6-LUT spans) and
 proves functional equivalence against the source over random vector lanes —
 run ``check_pack_equivalence(net, arch)`` before trusting any area number.
+
+Every pack is also *lowerable*: :meth:`PackedCircuit.lower_ir` flattens the
+object graph into the columnar :class:`~repro.core.pack_ir.PackIR` (per-
+signal site/LB/kind columns, fanin CSR with timing edge classes, per-ALM
+mode columns, levelized node tables) — the shared substrate of the
+vectorized timing analyzer (:mod:`repro.core.timing_vec`), the architecture
+design-space sweep engine (:mod:`repro.core.sweep`) and the benchmark flow
+(:mod:`repro.core.flow`).  Only ``ArchParams.structural_key()`` fields steer
+this module; delay parameters never do, which is what lets a sweep reuse one
+pack (and one PackIR) across every delay row of a structural class.
 """
 from __future__ import annotations
 
@@ -114,6 +124,23 @@ class PackedCircuit:
     chain_site: dict[tuple[int, int], int]  # (chain, bit) -> alm idx
     alm_lb: list[int]              # alm idx -> lb idx
     concurrent_luts: int           # unrelated LUTs co-packed with active FAs
+
+    _ir: object | None = field(default=None, repr=False, compare=False)
+
+    def lower_ir(self, cache: bool = True):
+        """Lower to the columnar :class:`~repro.core.pack_ir.PackIR` (flat
+        per-signal / per-ALM / per-level arrays — the substrate the
+        vectorized timing analyzer and the arch-sweep engine consume).
+        The IR is cached on the packed circuit; it is immutable, so any
+        later mutation of ``alms`` must pass ``cache=False``."""
+        if self._ir is None or not cache:
+            from .pack_ir import lower_pack_ir
+
+            ir = lower_pack_ir(self)
+            if not cache:
+                return ir
+            self._ir = ir
+        return self._ir
 
     # -- stats -------------------------------------------------------------
     @property
@@ -506,16 +533,25 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
             new_ah = set(ah)
             for li in lut_list:
                 new_ah.update(s for s in net.lut_inputs[li] if s > CONST1)
-            # halves being converted move their FA operands to Z
+            # halves being converted move their FA operands to Z; a half
+            # whose bit has more live operands than the arch has bypass
+            # inputs cannot be converted at all
             conv = [fh for fh in free_halves[: len(lut_list)] if fh[1]]
             moved_z: set[int] = set()
+            over_bypass = False
             for h, _ in conv:
                 ci, bi = h.fa
                 ch = net.chains[ci]
-                for s in (ch.a[bi], ch.b[bi]):
-                    if s > CONST1:
-                        moved_z.add(s)
-                        new_ah.discard(s)
+                live = [s for s in (ch.a[bi], ch.b[bi]) if s > CONST1]
+                if len(live) > arch.bypass_inputs:
+                    over_bypass = True
+                    break
+                for s in live:
+                    moved_z.add(s)
+                    new_ah.discard(s)
+            if over_bypass:
+                dbg["rej_bypass"] = dbg.get("rej_bypass", 0) + 1
+                continue
             if len(new_ah) > 8:
                 dbg["rej_pin8"] = dbg.get("rej_pin8", 0) + 1
                 continue
@@ -555,11 +591,18 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
             if any(h.hosted_lut is not None or h.absorbed for h in alm.halves):
                 continue
             moved_z: set[int] = set()
+            over_bypass = False
             for h in alm.halves:
                 if h.fa is not None:
                     ci, bi = h.fa
                     ch = net.chains[ci]
-                    moved_z.update(s for s in (ch.a[bi], ch.b[bi]) if s > CONST1)
+                    live = [s for s in (ch.a[bi], ch.b[bi]) if s > CONST1]
+                    if len(live) > arch.bypass_inputs:
+                        over_bypass = True
+                        break
+                    moved_z.update(live)
+            if over_bypass:
+                continue
             new_ah = {s for s in net.lut_inputs[li] if s > CONST1}
             if len(new_ah) > 8:
                 continue
@@ -770,7 +813,12 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
                         continue
                     ci, bi = h.fa
                     ch = net.chains[ci]
-                    ops = {s for s in (ch.a[bi], ch.b[bi]) if s > CONST1}
+                    live = [s for s in (ch.a[bi], ch.b[bi]) if s > CONST1]
+                    # each live operand *pin* needs its own bypass path,
+                    # even when both pins carry the same signal
+                    if len(live) > arch.bypass_inputs:
+                        continue
+                    ops = set(live)
                     z_ext = ops - st.produced if arch.z_local_free else ops
                     if len(st.z_ext | z_ext) > arch.z_sources:
                         continue

@@ -1,0 +1,212 @@
+"""Architecture design-space sweep: pack once per structural class,
+re-time a whole suite across an N-point arch grid in one batched program.
+
+The paper compares three hand-picked architectures (baseline / DD5 / DD6).
+With :func:`repro.core.alm.make_arch` the DD design space is two integers
+(bypass width x AddMux crossbar fan-in, plus the 6-LUT flag) — and because
+delays never steer the packer, every grid point of a *structural class*
+(:meth:`ArchParams.structural_key`) shares one ``pack()`` and one
+:class:`~repro.core.pack_ir.PackIR`.  A sweep therefore costs:
+
+    packs:   n_circuits x n_structural_classes      (Python, the slow part)
+    timing:  one jit program per class — circuits stacked on one ``vmap``
+             axis, the class's delay-table rows on another
+
+instead of ``n_circuits x n_grid_points`` Python timing walks.  This opens
+the scenario the paper never measured: ADP frontiers over the
+bypass-width x crossbar-population plane (:func:`adp_frontier`).
+
+Results are bit-identical to ``timing.analyze_oracle`` per (circuit, grid
+point); ``benchmarks/sweep_frontier.py`` gates its recorded speedups on
+that parity and writes ``experiments/perf/timing_sweep.json``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from .alm import ArchParams, group_archs_by_structure
+from .netlist import Netlist
+from .packing import PackedCircuit, pack
+from .timing import record_timing_wall
+from .timing_vec import (build_suite_timing_program, delay_components,
+                         critical_path_numpy, metrics_from_cp)
+
+
+@dataclass
+class SweepResult:
+    """records[g][k] is the ``timing.analyze``-shaped metric dict of
+    circuit ``g`` under arch ``k`` (plus ``net``/``suite`` keys)."""
+
+    circuits: list[str]
+    suites: list[str]
+    archs: list[str]
+    records: list[list[dict]]
+    n_classes: int
+    wall: dict = field(default_factory=dict)
+
+    def by_arch(self, arch_name: str) -> list[dict]:
+        k = self.archs.index(arch_name)
+        return [row[k] for row in self.records]
+
+
+def _flatten(nets) -> tuple[list[str], list[Netlist]]:
+    if isinstance(nets, dict):
+        suites, flat = [], []
+        for sname, ns in nets.items():
+            for n in ns:
+                suites.append(sname)
+                flat.append(n)
+        return suites, flat
+    return [""] * len(nets), list(nets)
+
+
+def _envelope_groups(irs, max_groups: int) -> list[list[int]]:
+    """Cluster IRs into <= ``max_groups`` compatible-envelope groups (the
+    evaluator's agglomerative grouping, fed with timing-level envelopes) —
+    one small circuit must not pad to the suite's widest member."""
+    from .eval_jax import group_plans_by_envelope
+
+    class _Env:
+        def __init__(self, ir):
+            m, c, b = ir.level_profile()
+            self.envelope = (ir.n_levels, max(m, default=0),
+                             max(c, default=0), max(b, default=0))
+            self.n_signals = ir.n_signals
+
+    return group_plans_by_envelope([_Env(ir) for ir in irs],
+                                   max_groups=max_groups)
+
+
+def sweep_suite(nets, archs: Sequence[ArchParams], seed: int = 0,
+                max_buckets: int = 3, max_groups: int = 4,
+                backend: str = "jax", packs: dict | None = None,
+                programs: dict | None = None) -> SweepResult:
+    """Pack + re-time ``nets`` under every arch of the grid.
+
+    ``nets`` is a list of netlists or a ``{suite_name: [netlists]}`` dict.
+    Packing happens once per (circuit, structural class) at ``seed``;
+    timing runs as <= ``max_groups`` batched jit programs per class
+    (circuits clustered by envelope compatibility so small members do not
+    pad to the widest one; ``backend="jax"``) or as per-circuit numpy
+    level walks (``backend="numpy"`` — still vectorized, no compile;
+    useful for tiny grids).  Pass ``packs`` and ``programs`` (plain
+    dicts, caller-owned) to reuse pack results and compiled timing
+    programs across sweeps over the *same* circuit list: packs are keyed
+    by ``(circuit index, structural_key, seed)``, programs by
+    ``(structural_key, seed, max_buckets, max_groups)``.  A warm sweep
+    then pays only the batched executions — delay tables are data, not
+    shapes.
+    """
+    suites, flat = _flatten(nets)
+    archs = list(archs)
+    classes = group_archs_by_structure(archs)
+    records: list[list[dict | None]] = [[None] * len(archs) for _ in flat]
+    wall = {"pack_s": 0.0, "lower_s": 0.0, "build_s": 0.0, "timing_s": 0.0}
+    if packs is None:
+        packs = {}
+    if programs is None:
+        programs = {}
+    for idx_list in classes:
+        rep = archs[idx_list[0]]
+        skey = rep.structural_key()
+        t0 = time.perf_counter()
+        class_packs: list[PackedCircuit] = []
+        for g, net in enumerate(flat):
+            p = packs.get((g, skey, seed))
+            if p is None:
+                p = pack(net, rep, seed=seed)
+                packs[(g, skey, seed)] = p
+            class_packs.append(p)
+        wall["pack_s"] += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        irs = [p.lower_ir() for p in class_packs]
+        wall["lower_s"] += time.perf_counter() - t0
+        tables = np.stack([archs[i].delay_table() for i in idx_list])
+        if backend == "jax":
+            t0 = time.perf_counter()
+            progs = programs.get((skey, seed, max_buckets, max_groups))
+            if progs is None:
+                groups = _envelope_groups(irs, max_groups)
+                progs = [(members,
+                          build_suite_timing_program(
+                              [irs[i] for i in members],
+                              max_buckets=max_buckets))
+                         for members in groups]
+                programs[(skey, seed, max_buckets, max_groups)] = progs
+            wall["build_s"] += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            cps = np.zeros((len(irs), len(idx_list)))
+            for members, prog in progs:
+                gcps = prog.run(tables)
+                for row, gi in enumerate(members):
+                    cps[gi] = gcps[row]
+            wall["timing_s"] += time.perf_counter() - t0
+        elif backend == "numpy":
+            t0 = time.perf_counter()
+            cps = np.zeros((len(irs), len(idx_list)))
+            for k in range(len(idx_list)):
+                comps = delay_components(tables[k])
+                for g, ir in enumerate(irs):
+                    cps[g, k] = critical_path_numpy(ir, comps)
+            wall["timing_s"] += time.perf_counter() - t0
+        else:
+            raise ValueError(f"unknown sweep backend {backend!r}")
+        for g, ir in enumerate(irs):
+            for k, ai in enumerate(idx_list):
+                rec = metrics_from_cp(ir, archs[ai], float(cps[g, k]))
+                rec["net"] = flat[g].name
+                rec["suite"] = suites[g]
+                records[g][ai] = rec
+    record_timing_wall(wall["timing_s"] + wall["lower_s"] + wall["build_s"],
+                       calls=len(flat) * len(archs))
+    return SweepResult(
+        circuits=[n.name for n in flat], suites=suites,
+        archs=[a.name for a in archs], records=records,  # type: ignore
+        n_classes=len(classes), wall=wall)
+
+
+def _geomean(xs):
+    xs = [max(float(x), 1e-12) for x in xs]
+    return float(np.exp(np.mean(np.log(xs))))
+
+
+def adp_frontier(result: SweepResult, baseline: str | None = None,
+                 keys=("area_mwta", "critical_path_ps", "adp")) -> list[dict]:
+    """Geomean metric ratios vs the baseline arch, one row per grid point —
+    the ADP frontier over the design-space grid (sorted by ADP ratio)."""
+    base_name = baseline if baseline is not None else result.archs[0]
+    base = result.by_arch(base_name)
+    rows = []
+    for name in result.archs:
+        if name == base_name:
+            continue
+        recs = result.by_arch(name)
+        row = {"arch": name}
+        for k in keys:
+            row[k] = _geomean([r[k] / b[k] for r, b in zip(recs, base)])
+        rows.append(row)
+    rows.sort(key=lambda r: r.get("adp", 1.0))
+    return rows
+
+
+def oracle_parity(result: SweepResult, nets, archs: Sequence[ArchParams],
+                  seed: int = 0) -> bool:
+    """Prove every sweep record's critical path bit-identical to the
+    Python oracle (packing under the *actual* arch — structural-class
+    pack sharing is part of what this verifies)."""
+    from .timing import analyze_oracle
+
+    _, flat = _flatten(nets)
+    for g, net in enumerate(flat):
+        for k, arch in enumerate(archs):
+            ro = analyze_oracle(pack(net, arch, seed=seed))
+            if ro["critical_path_ps"] != result.records[g][k][
+                    "critical_path_ps"]:
+                return False
+            if ro["area_mwta"] != result.records[g][k]["area_mwta"]:
+                return False
+    return True

@@ -6,15 +6,72 @@ crossbar) or *global* (fixed inter-LB routing delay).  This is deliberately
 coarser than VPR's timing-driven router, but it is applied identically to
 baseline/DD5/DD6 so the architectural deltas (Z-path vs LUT-path adder feeds,
 DD6 output-mux penalty) dominate the comparison, as in the paper.
+
+Two implementations share this recurrence:
+
+* :func:`analyze_oracle` — the original per-signal Python walk, kept
+  verbatim as the ground truth;
+* the **vectorized analyzer** (:mod:`repro.core.timing_vec`) — the pack is
+  lowered once to the columnar :class:`~repro.core.pack_ir.PackIR` and the
+  arrival recurrence runs as levelized array programs (numpy per circuit,
+  or a ``lax.scan``/``vmap`` batched jit across circuits x architectures
+  for design-space sweeps).  It is bit-identical to the oracle — float64,
+  same addition association order, exact max — which tests assert.
+
+:func:`analyze` dispatches (``method="vector"`` default, ``"oracle"`` for
+the reference) and accounts every call's wall time in :data:`TIMING_WALL`
+so benchmark drivers can report how much of a figure was spent in static
+timing.
 """
 from __future__ import annotations
+
+import time
 
 from .alm import ArchParams
 from .netlist import CONST0, CONST1, Netlist
 from .packing import PackedCircuit
 
+#: cumulative static-timing wall clock (seconds) + call count, accounted by
+#: :func:`analyze` and by the sweep engine; benchmark sections report the
+#: per-section delta (see ``benchmarks/run.py``)
+TIMING_WALL = {"s": 0.0, "calls": 0}
 
-def analyze(packed: PackedCircuit) -> dict:
+
+def reset_timing_wall() -> None:
+    TIMING_WALL["s"] = 0.0
+    TIMING_WALL["calls"] = 0
+
+
+def read_timing_wall() -> dict:
+    return dict(TIMING_WALL)
+
+
+def record_timing_wall(seconds: float, calls: int = 1) -> None:
+    TIMING_WALL["s"] += seconds
+    TIMING_WALL["calls"] += calls
+
+
+def analyze(packed: PackedCircuit, method: str = "vector") -> dict:
+    """Timing + area record for one packed circuit.
+
+    ``method="vector"`` lowers to PackIR and runs the numpy vectorized
+    analyzer (bit-identical to the oracle, no per-signal Python walk);
+    ``method="oracle"`` runs the original reference implementation.
+    """
+    t0 = time.perf_counter()
+    if method == "oracle":
+        rec = analyze_oracle(packed)
+    elif method == "vector":
+        from .timing_vec import analyze_ir
+
+        rec = analyze_ir(packed.lower_ir(), packed.arch)
+    else:
+        raise ValueError(f"unknown timing method {method!r}")
+    record_timing_wall(time.perf_counter() - t0)
+    return rec
+
+
+def analyze_oracle(packed: PackedCircuit) -> dict:
     net = packed.net
     arch = packed.arch
 

@@ -1,0 +1,360 @@
+"""Vectorized static timing over the columnar PackIR.
+
+The Python oracle (:func:`repro.core.timing.analyze_oracle`) walks dicts
+signal-by-signal; this module executes the same levelized longest-path
+recurrence as array programs over :class:`~repro.core.pack_ir.PackIR`:
+
+* **numpy backend** — one gather/max per level, ragged (unpadded) level
+  tables, zero compile cost.  This is what ``timing.analyze`` uses for
+  one-off pack-and-analyze calls (every figure driver).
+* **jax backend** — levels are bucketed into contiguous width segments
+  (the evaluator's padded-volume DP), each bucket runs as one
+  ``lax.scan``, and the whole suite is batched with a nested ``vmap``:
+  outer over circuits (stacked, sink-padded tensors), inner over
+  architectures (delay-table rows).  One jit program re-times a whole
+  benchmark suite across an N-point arch grid — the engine behind
+  :mod:`repro.core.sweep`.
+
+Value identity
+--------------
+Both backends are **bit-identical** to the oracle (not merely close): all
+arithmetic is float64, additions compose in exactly the oracle's
+association order — ``((arrival + route) + pin) + path`` per edge,
+``((t_in + lut_delay) + t_alm_out) + t_out_mux_extra`` per node — and
+``max`` is exact in any order.  Padding exploits the model invariant that
+delays are non-negative: padded slots gather signal 0 (CONST0, arrival
+0.0) through the all-zero null edge class, reproducing the oracle's
+``default=0.0`` reductions exactly.
+
+Delay tables are data, not structure: an edge stores a *class* (0..26,
+see :mod:`repro.core.pack_ir`), the per-arch component table is built
+here by :func:`delay_components` from ``ArchParams.delay_table()`` rows.
+Batching across architectures is therefore just a leading axis on the
+component tables — no retrace, no repack.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from .alm import ArchParams, DELAY_FIELDS
+from .pack_ir import (N_EDGE_CLASSES, N_NODE_CLASSES, NDC_ABSORBED, NDC_LUT4,
+                      NDC_LUT5, NDC_LUT6, PackIR)
+
+_IDX = {f: i for i, f in enumerate(DELAY_FIELDS)}
+
+
+def delay_components(tables: np.ndarray) -> dict[str, np.ndarray]:
+    """Expand delay-table rows ``[..., len(DELAY_FIELDS)]`` into the three
+    component tables the executors gather from (leading axes preserved):
+
+    * ``edge [..., 27, 3]`` — (route, pin, path) components per edge class;
+    * ``lut  [..., 4, 3]``  — (lut_delay, t_alm_out, t_out_mux_extra) per
+      node delay class (all-zero for absorbed LUTs);
+    * ``chain [..., 3]``    — (t_sum_out, t_out_mux_extra, t_carry).
+    """
+    t = np.asarray(tables, dtype=np.float64)
+    lead = t.shape[:-1]
+    z = np.zeros(lead, dtype=np.float64)
+
+    def g(name):
+        return t[..., _IDX[name]]
+
+    route = np.stack([z, g("t_route_local"), g("t_route_global")], axis=-1)
+    pin = np.stack([z, g("t_lbin_to_ah"), g("t_lbin_to_z")], axis=-1)
+    path = np.stack([z, g("t_ah_to_adder"), g("t_z_to_adder")], axis=-1)
+    edge = np.zeros(lead + (N_EDGE_CLASSES, 3), dtype=np.float64)
+    for c in range(N_EDGE_CLASSES):
+        edge[..., c, 0] = route[..., c // 9]
+        edge[..., c, 1] = pin[..., (c // 3) % 3]
+        edge[..., c, 2] = path[..., c % 3]
+
+    lut = np.zeros(lead + (N_NODE_CLASSES, 3), dtype=np.float64)
+    for ndc, d in ((NDC_LUT4, g("t_lut4")), (NDC_LUT5, g("t_lut5")),
+                   (NDC_LUT6, g("t_lut6"))):
+        lut[..., ndc, 0] = d
+        lut[..., ndc, 1] = g("t_alm_out")
+        lut[..., ndc, 2] = g("t_out_mux_extra")
+    assert NDC_ABSORBED == 0  # row 0 stays all-zero: absorption adds nothing
+
+    chain = np.stack([g("t_sum_out"), g("t_out_mux_extra"), g("t_carry")],
+                     axis=-1)
+    return {"edge": edge, "lut": lut, "chain": chain}
+
+
+# ---------------------------------------------------------------------------
+# numpy backend (per-circuit, compile-free)
+# ---------------------------------------------------------------------------
+
+
+def arrival_times_numpy(ir: PackIR, comps: dict[str, np.ndarray]
+                        ) -> np.ndarray:
+    """Arrival time per signal, float64, oracle-identical."""
+    edge, lutc = comps["edge"], comps["lut"]
+    t_sum, t_extra, t_carry = (float(comps["chain"][0]),
+                               float(comps["chain"][1]),
+                               float(comps["chain"][2]))
+    arr = np.zeros(ir.n_signals, dtype=np.float64)
+    for ll, cl in zip(ir.lut_levels, ir.chain_levels):
+        if ll.out.shape[0]:
+            ec = edge[ll.cls]                          # [M, 6, 3]
+            t = ((arr[ll.ins] + ec[..., 0]) + ec[..., 1]) + ec[..., 2]
+            tin = t.max(axis=1)
+            nc = lutc[ll.ndc]                          # [M, 3]
+            arr[ll.out] = ((tin + nc[:, 0]) + nc[:, 1]) + nc[:, 2]
+        C = cl.cout.shape[0]
+        if C:
+            ea, eb = edge[cl.a_cls], edge[cl.b_cls]
+            a_t = ((arr[cl.a_sig] + ea[..., 0]) + ea[..., 1]) + ea[..., 2]
+            b_t = ((arr[cl.b_sig] + eb[..., 0]) + eb[..., 1]) + eb[..., 2]
+            ecin = edge[cl.cin_cls]
+            c = ((arr[cl.cin_sig] + ecin[:, 0]) + ecin[:, 1]) + ecin[:, 2]
+            B = cl.a_sig.shape[1]
+            carries = np.zeros((C, B), dtype=np.float64)
+            for bi in range(B):
+                th = np.maximum(np.maximum(a_t[:, bi], b_t[:, bi]), c)
+                valid = cl.sums[:, bi] >= 0
+                if valid.any():
+                    arr[cl.sums[valid, bi]] = (th[valid] + t_sum) + t_extra
+                c = th + t_carry
+                carries[:, bi] = c
+            has = cl.cout >= 0
+            if has.any():
+                cy = carries[np.flatnonzero(has), cl.last[has]]
+                arr[cl.cout[has]] = (cy + t_sum) + t_extra
+    return arr
+
+
+def critical_path_numpy(ir: PackIR, comps: dict[str, np.ndarray]) -> float:
+    arr = arrival_times_numpy(ir, comps)
+    cp = float(arr[ir.po_sig].max()) if ir.po_sig.size else 0.0
+    return max(cp, 1.0)
+
+
+def metrics_from_cp(ir: PackIR, arch: ArchParams, cp: float) -> dict:
+    """The :func:`repro.core.timing.analyze` record for one (IR, arch, cp).
+
+    ``n_alms``/``n_lbs``/``concurrent_luts`` come from the IR (structure);
+    area comes from the arch row — within a structural class only the
+    area constant and the delays differ, which is why one IR serves every
+    grid row of its class."""
+    area = ir.n_alms * arch.alm_area_mwta
+    return {
+        "arch": arch.name,
+        "critical_path_ps": cp,
+        "fmax_mhz": 1e6 / cp,
+        "alms": ir.n_alms,
+        "lbs": ir.n_lbs,
+        "area_mwta": area,
+        "adp": area * cp,
+        "adders": ir.n_adders,
+        "luts": ir.n_luts,
+        "concurrent_luts": ir.concurrent_luts,
+    }
+
+
+def analyze_ir(ir: PackIR, arch: ArchParams, backend: str = "numpy") -> dict:
+    """Vectorized :func:`repro.core.timing.analyze` over a lowered pack."""
+    if backend == "numpy":
+        comps = delay_components(arch.delay_table())
+        cp = critical_path_numpy(ir, comps)
+    elif backend == "jax":
+        prog = build_suite_timing_program([ir])
+        cp = float(prog.run(arch.delay_table()[None, :])[0, 0])
+    else:
+        raise ValueError(f"unknown timing backend {backend!r}")
+    return metrics_from_cp(ir, arch, cp)
+
+
+# ---------------------------------------------------------------------------
+# jax backend (suite x arch-grid batched program)
+# ---------------------------------------------------------------------------
+
+
+def _pad_levels(ir: PackIR, L: int, bounds, envelopes, sink: int):
+    """Pad one member's ragged level tables to the bucketed group envelope;
+    returns per-bucket 13-tuples of [l, ...] arrays (the scan xs)."""
+    out = []
+    for (i, j), (M, C, B) in zip(bounds, envelopes):
+        l = max(j - i, 1)
+        M1, C1, B1 = max(M, 1), max(C, 1), max(B, 1)
+        l_ins = np.zeros((l, M1, 6), dtype=np.int32)
+        l_cls = np.zeros((l, M1, 6), dtype=np.int32)
+        l_ndc = np.zeros((l, M1), dtype=np.int32)
+        l_out = np.full((l, M1), sink, dtype=np.int32)
+        a_sig = np.zeros((l, C1, B1), dtype=np.int32)
+        a_cls = np.zeros((l, C1, B1), dtype=np.int32)
+        b_sig = np.zeros((l, C1, B1), dtype=np.int32)
+        b_cls = np.zeros((l, C1, B1), dtype=np.int32)
+        cin_sig = np.zeros((l, C1), dtype=np.int32)
+        cin_cls = np.zeros((l, C1), dtype=np.int32)
+        sums = np.full((l, C1, B1), sink, dtype=np.int32)
+        cout = np.full((l, C1), sink, dtype=np.int32)
+        last = np.zeros((l, C1), dtype=np.int32)
+        for t in range(i, min(j, ir.n_levels)):
+            r = t - i
+            ll, cl = ir.lut_levels[t], ir.chain_levels[t]
+            m = ll.out.shape[0]
+            if m:
+                l_ins[r, :m] = ll.ins
+                l_cls[r, :m] = ll.cls
+                l_ndc[r, :m] = ll.ndc
+                l_out[r, :m] = ll.out
+            c = cl.cout.shape[0]
+            if c:
+                bb = cl.a_sig.shape[1]
+                a_sig[r, :c, :bb] = cl.a_sig
+                a_cls[r, :c, :bb] = cl.a_cls
+                b_sig[r, :c, :bb] = cl.b_sig
+                b_cls[r, :c, :bb] = cl.b_cls
+                cin_sig[r, :c] = cl.cin_sig
+                cin_cls[r, :c] = cl.cin_cls
+                s = cl.sums.copy()
+                s[s < 0] = sink
+                sums[r, :c, :bb] = s
+                co = cl.cout.copy()
+                co[co < 0] = sink
+                cout[r, :c] = co
+                last[r, :c] = cl.last
+        out.append((l_ins, l_cls, l_ndc, l_out, a_sig, a_cls, b_sig, b_cls,
+                    cin_sig, cin_cls, sums, cout, last))
+    return out
+
+
+@dataclass
+class SuiteTimingProgram:
+    """One batched timing program: G stacked circuits x K delay rows.
+
+    ``run(delay_tables[K, len(DELAY_FIELDS)])`` returns critical paths
+    ``[G, K]`` (float64), bit-identical to the oracle per (circuit, arch).
+    The program is jit-compiled once per (shape, K); re-running with new
+    delay rows of the same K reuses the compile — an arch-grid sweep is
+    pure data motion after the first call.
+    """
+
+    n_sig: int
+    n_members: int
+    flags: tuple[tuple[bool, bool], ...]
+    bucket_shapes: tuple[tuple[int, int, int, int], ...]
+    _tensors: tuple = field(repr=False)
+    _po: object = field(repr=False)
+    _jit: object = field(default=None, repr=False)
+
+    def _build_jit(self):
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+
+        flags = self.flags
+        n_sig = self.n_sig
+
+        def body(arr, xs, *, hl, hc, edge, lutc, chainc):
+            (l_ins, l_cls, l_ndc, l_out, a_sig, a_cls, b_sig, b_cls,
+             cin_sig, cin_cls, sums, cout, last) = xs
+            if hl:
+                ec = edge[l_cls]
+                t = ((arr[l_ins] + ec[..., 0]) + ec[..., 1]) + ec[..., 2]
+                tin = jnp.max(t, axis=1)
+                nc = lutc[l_ndc]
+                arr = arr.at[l_out].set(
+                    ((tin + nc[:, 0]) + nc[:, 1]) + nc[:, 2])
+            if hc:
+                ea, eb = edge[a_cls], edge[b_cls]
+                a_t = ((arr[a_sig] + ea[..., 0]) + ea[..., 1]) + ea[..., 2]
+                b_t = ((arr[b_sig] + eb[..., 0]) + eb[..., 1]) + eb[..., 2]
+                ecin = edge[cin_cls]
+                c0 = ((arr[cin_sig] + ecin[:, 0]) + ecin[:, 1]) + ecin[:, 2]
+                t_sum, t_extra, t_carry = chainc[0], chainc[1], chainc[2]
+
+                def ripple(c, ab):
+                    at, bt = ab
+                    th = jnp.maximum(jnp.maximum(at, bt), c)
+                    cy = th + t_carry
+                    return cy, (th, cy)
+
+                _, (ths, cys) = jax.lax.scan(
+                    ripple, c0, (a_t.swapaxes(0, 1), b_t.swapaxes(0, 1)))
+                arr = arr.at[sums].set((ths.swapaxes(0, 1) + t_sum) + t_extra)
+                cy_last = jnp.take_along_axis(
+                    cys.swapaxes(0, 1), last[:, None], axis=1)[:, 0]
+                arr = arr.at[cout].set((cy_last + t_sum) + t_extra)
+            return arr, None
+
+        def one(member_xs, po, edge, lutc, chainc):
+            arr = jnp.zeros(n_sig + 1, dtype=jnp.float64)
+            for (hl, hc), xs in zip(flags, member_xs):
+                bk = functools.partial(body, hl=hl, hc=hc, edge=edge,
+                                       lutc=lutc, chainc=chainc)
+                arr, _ = jax.lax.scan(bk, arr, xs)
+            return jnp.maximum(jnp.max(arr[po]), 1.0)
+
+        inner = jax.vmap(one, in_axes=(None, None, 0, 0, 0))   # arch axis
+        outer = jax.vmap(inner, in_axes=(0, 0, None, None, None))  # circuits
+        return jax.jit(outer)
+
+    def run(self, delay_tables: np.ndarray) -> np.ndarray:
+        """Critical paths ``[G, K]`` for delay rows ``[K, |DELAY_FIELDS|]``."""
+        from jax.experimental import enable_x64
+
+        comps = delay_components(np.asarray(delay_tables, dtype=np.float64))
+        with enable_x64():
+            if self._jit is None:
+                self._jit = self._build_jit()
+            cps = self._jit(self._tensors, self._po, comps["edge"],
+                            comps["lut"], comps["chain"])
+            return np.asarray(cps, dtype=np.float64)
+
+
+def build_suite_timing_program(irs: Sequence[PackIR],
+                               max_buckets: int = 3) -> SuiteTimingProgram:
+    """Stack many circuits' PackIRs into one width-bucketed timing program.
+
+    Levels are aligned to the longest member, the combined width profile
+    is segmented by the evaluator's padded-volume DP, and every member is
+    padded to the bucket envelopes with null rows (sink-scattering,
+    zero-gathering).  One program serves the whole suite."""
+    from .eval_jax import _segment_levels  # pure-python DP (lazy: jax import)
+
+    import jax.numpy as jnp
+
+    if not irs:
+        raise ValueError("empty IR list")
+    L = max(ir.n_levels for ir in irs)
+    profiles = [ir.level_profile() for ir in irs]
+
+    def col(t, sel):
+        return max((p[sel][t] if t < len(p[sel]) else 0 for p in profiles),
+                   default=0)
+
+    if L == 0:
+        L = 1
+    m = [col(t, 0) for t in range(L)]
+    c = [col(t, 1) for t in range(L)]
+    b = [col(t, 2) for t in range(L)]
+    bounds = _segment_levels(m, c, b, max_buckets)
+    envelopes = [(max(m[i:j], default=0), max(c[i:j], default=0),
+                  max(b[i:j], default=0)) for i, j in bounds]
+    n_sig = max(ir.n_signals for ir in irs)
+    sink = n_sig
+    members = [_pad_levels(ir, L, bounds, envelopes, sink) for ir in irs]
+    tensors = tuple(
+        tuple(jnp.asarray(np.stack([mb[bi][ai] for mb in members]))
+              for ai in range(13))
+        for bi in range(len(bounds)))
+    P = max(max((ir.po_sig.size for ir in irs), default=1), 1)
+    po = np.zeros((len(irs), P), dtype=np.int32)   # pad -> CONST0 (arr 0.0)
+    for g, ir in enumerate(irs):
+        po[g, :ir.po_sig.size] = ir.po_sig
+    flags = tuple(
+        (any(mb[bi][3].min() < sink for mb in members),     # any real lut out
+         any(mb[bi][11].min() < sink or (mb[bi][10] < sink).any()
+             for mb in members))                            # any real chain
+        for bi in range(len(bounds)))
+    shapes = tuple((max(j - i, 1), M, C, B)
+                   for (i, j), (M, C, B) in zip(bounds, envelopes))
+    return SuiteTimingProgram(
+        n_sig=n_sig, n_members=len(irs), flags=flags, bucket_shapes=shapes,
+        _tensors=tensors, _po=jnp.asarray(po))

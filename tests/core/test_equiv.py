@@ -7,8 +7,9 @@ import pytest
 
 from repro.core.alm import ARCHS, BASELINE, DD5, DD6
 from repro.core.circuits import kratos_conv1d, kratos_gemm, sha_like
-from repro.core.equiv import (ReElaborationError, assert_equivalent,
-                              check_pack_equivalence, equivalence_report,
+from repro.core.equiv import (EXHAUSTIVE_MAX_SUPPORT, ReElaborationError,
+                              assert_equivalent, check_pack_equivalence,
+                              equivalence_report, exhaustive_residue_report,
                               reelaborate, symbolic_equivalence_report,
                               verify_all_archs)
 from repro.core.netlist import CONST0, CONST1, Netlist
@@ -173,6 +174,98 @@ def test_check_pack_equivalence_uses_symbolic_fast_path():
     rep2 = check_pack_equivalence(net, DD5, n_vectors=64, method="simulate")
     assert rep2["equivalent"]
     assert rep2["method"] == "simulate"
+
+
+def _wide_chain_netlist(n_bits=4, n_pis=12, seed=0):
+    """Chain whose operands are fanout-2 4-LUTs (no absorption), so every
+    bit's composed cone support exceeds 6 inputs but stays <= n_pis."""
+    rng = random.Random(seed)
+    net = Netlist("wide")
+    ins = net.add_pi_bus("in", n_pis)
+    a_ops, b_ops = [], []
+    for i in range(n_bits):
+        la = net.add_lut(tuple(rng.sample(ins, 4)), rng.getrandbits(16))
+        lb = net.add_lut(tuple(rng.sample(ins, 4)), rng.getrandbits(16))
+        a_ops.append(la)
+        b_ops.append(lb)
+        net.set_po_bus(f"keep{i}", [la, lb])   # fanout > 1 -> no absorption
+    sums, cout = net.add_chain(a_ops, b_ops, want_cout=True)
+    net.set_po_bus("s", sums)
+    net.set_po_bus("c", [cout])
+    return net
+
+
+@pytest.mark.parametrize("arch_name", ["baseline", "dd5"])
+def test_exhaustive_residue_closes_all_narrow_cones(arch_name):
+    """Full-truth-table closure: every node of a real pack (forced into
+    the residue list) is proven over ALL 2^W support assignments — an
+    exhaustive proof, where the old path sampled random lanes."""
+    net = _wide_chain_netlist()
+    re_elab = reelaborate(pack(net, ARCHS[arch_name], seed=0))
+    residue = [("lut", i) for i in range(net.n_luts)] \
+        + [("chain", i) for i in range(len(net.chains))]
+    rep = exhaustive_residue_report(net, re_elab, residue)
+    assert rep["proven_cones"] == len(residue)
+    assert not rep["unclosed"] and not rep["mismatches"]
+
+
+def test_exhaustive_residue_closes_per_bit_entries():
+    """Per-bit residue entries — the shape symbolic fallback actually
+    emits for wide cones — must close too: the cone ripples only as deep
+    as the requested bit, so later bits' out-of-support operands don't
+    abort the proof (regression)."""
+    net = _wide_chain_netlist()
+    re_elab = reelaborate(pack(net, DD5, seed=0))
+    n_bits = len(net.chains[0].sums)
+    residue = [("chain", 0, bi) for bi in range(n_bits)]
+    rep = exhaustive_residue_report(net, re_elab, residue)
+    assert rep["proven_cones"] == n_bits, (rep["unclosed"],
+                                           rep["mismatches"])
+
+
+def test_exhaustive_residue_detects_corruption():
+    net = _wide_chain_netlist(seed=3)
+    re_elab = reelaborate(pack(net, DD5, seed=0))
+    re_elab.phys.lut_tt[0] ^= 1
+    residue = [("lut", i) for i in range(net.n_luts)]
+    rep = exhaustive_residue_report(net, re_elab, residue)
+    assert rep["mismatches"], "a flipped mask bit must fail exhaustively"
+    assert rep["mismatches"][0]["signal"] is not None
+
+
+def test_exhaustive_residue_leaves_wide_cones_open():
+    """Cones wider than EXHAUSTIVE_MAX_SUPPORT stay unclosed (the
+    remaining SAT-shaped gap is wide cones only)."""
+    net = _wide_chain_netlist(n_bits=10, n_pis=EXHAUSTIVE_MAX_SUPPORT + 8,
+                              seed=5)
+    re_elab = reelaborate(pack(net, DD5, seed=0))
+    rep = exhaustive_residue_report(net, re_elab,
+                                    [("chain", 0)], max_support=8)
+    assert rep["unclosed"] == [("chain", 0)]
+    assert rep["proven_cones"] == 0
+
+
+def test_auto_gate_closes_residue_exhaustively(monkeypatch):
+    """When the symbolic pass leaves narrow residue cones, the auto gate
+    must close them by enumeration (method "symbolic+exhaustive"), not
+    drop to random-lane simulation."""
+    import repro.core.equiv as eq
+
+    net = _wide_chain_netlist(seed=1)
+    real_sym = eq.symbolic_equivalence_report
+
+    def leaky(src, re_elab):
+        rep = real_sym(src, re_elab)
+        rep["fallback"] = rep["fallback"] + [("chain", 0)]
+        rep["equivalent"] = False
+        rep["complete"] = False
+        return rep
+
+    monkeypatch.setattr(eq, "symbolic_equivalence_report", leaky)
+    rep = eq.check_pack_equivalence(net, DD5, seed=0)
+    assert rep["equivalent"]
+    assert rep["method"] == "symbolic+exhaustive"
+    assert rep["exhaustive_proven"] == 1
 
 
 def test_equivalence_via_fused_jax_engine():

@@ -12,7 +12,8 @@ from repro.core.alm import ARCHS
 from repro.core.circuits import kratos_gemm, sha_like
 from repro.core.equiv import reelaborate
 from repro.core.eval_jax import (eval_netlists_batched_jax,
-                                 group_plans_by_envelope, plan_netlist)
+                                 group_plans_by_envelope,
+                                 grouping_padded_value_rows, plan_netlist)
 from repro.core.netlist import CONST0, CONST1, Netlist
 from repro.core.packing import pack
 
@@ -112,6 +113,29 @@ def test_suite_compiles_to_few_groups():
     groups = group_plans_by_envelope(plans, max_groups=4)
     assert len(groups) <= 4
     assert sorted(i for g in groups for i in g) == list(range(len(nets)))
+
+
+def test_size_aware_grouping_isolates_giant_value_buffer():
+    """A circuit with a huge signal count but a tiny level envelope must
+    not be co-located with small circuits (its group mates would pad
+    their value buffers to the giant's row count).  The signal-count
+    merge term isolates it; the volume-only cost (signal_weight=0) is
+    the old behavior and groups it."""
+    giant = Netlist("giant")
+    pis = giant.add_pi_bus("in", 3000)          # many signals, ...
+    o = giant.add_lut((pis[0], pis[1], pis[2]), 0b10010110)
+    giant.set_po_bus("po", [o])                 # ... near-empty envelope
+    smalls = [random_netlist(s) for s in (1, 2, 3)]
+    plans = [plan_netlist(n) for n in [giant] + smalls]
+    g_old = group_plans_by_envelope(plans, max_groups=2, signal_weight=0.0)
+    g_new = group_plans_by_envelope(plans, max_groups=2)
+    assert [0] in g_new, f"giant not isolated: {g_new}"
+    rows_old = grouping_padded_value_rows(plans, g_old)
+    rows_new = grouping_padded_value_rows(plans, g_new)
+    assert rows_new["padded_rows"] < rows_old["padded_rows"]
+    assert rows_new["padded_rows"] >= rows_new["real_rows"]
+    # grouping still covers every plan exactly once
+    assert sorted(i for g in g_new for i in g) == list(range(len(plans)))
 
 
 def test_bucketed_plan_cuts_padding_waste():

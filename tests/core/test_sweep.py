@@ -1,0 +1,157 @@
+"""Design-space sweep engine: data-driven archs, structural-class pack
+sharing, batched re-timing, frontier reduction."""
+import numpy as np
+import pytest
+
+from repro.core import flow
+from repro.core.alm import (ARCHS, BASELINE, DD5, DD6, arch_grid,
+                            group_archs_by_structure, make_arch)
+from repro.core.circuits import kratos_gemm, sha_like
+from repro.core.equiv import check_pack_equivalence
+from repro.core.packing import pack
+from repro.core.sweep import adp_frontier, oracle_parity, sweep_suite
+from repro.core.timing import analyze_oracle
+
+from test_flow import random_netlist
+
+
+def test_canonical_archs_are_grid_rows():
+    """baseline/DD5/DD6 are reproduced exactly by the make_arch factory
+    (Table I area ratios land verbatim, Table II delays intact)."""
+    b = make_arch("baseline", bypass_inputs=0)
+    d5 = make_arch("dd5", bypass_inputs=2, addmux_fanin=10)
+    d6 = make_arch("dd6", bypass_inputs=2, addmux_fanin=10, lut6=True)
+    for want, got in ((BASELINE, b), (DD5, d5), (DD6, d6)):
+        assert want == got
+    assert abs(DD5.alm_area_mwta / BASELINE.alm_area_mwta - 1.0372) < 1e-9
+    assert DD5.t_ah_to_adder == 202.2 and BASELINE.t_ah_to_adder == 133.4
+    grid = arch_grid()
+    by_knobs = {(a.bypass_inputs, a.addmux_fanin, a.concurrent_6lut): a
+                for a in grid}
+    assert by_knobs[(0, 10, False)].alm_area_mwta == BASELINE.alm_area_mwta
+    assert by_knobs[(2, 10, False)].alm_area_mwta == DD5.alm_area_mwta
+    assert by_knobs[(2, 10, True)].alm_area_mwta == DD6.alm_area_mwta
+
+
+def test_structural_classes():
+    """Delay-only variants share a structural key; structural knobs split
+    classes; delay tables order matches DELAY_FIELDS."""
+    d5 = ARCHS["dd5"]
+    f20 = make_arch("f20", bypass_inputs=2, addmux_fanin=20, z_sources=40)
+    assert d5.structural_key() == f20.structural_key()
+    assert d5.delay_table()[1] != f20.delay_table()[1]  # t_lbin_to_z moved
+    f5 = make_arch("f5", bypass_inputs=2, addmux_fanin=5)
+    assert f5.structural_key() != d5.structural_key()   # z_sources shrank
+    groups = group_archs_by_structure([d5, f20, f5, ARCHS["baseline"]])
+    assert sorted(len(g) for g in groups) == [1, 1, 2]
+
+
+def test_sweep_matches_oracle_exactly():
+    """A real (small) sweep is bit-identical to per-circuit analyze_oracle
+    under every grid point — including points that share a pack."""
+    nets = {"a": [random_netlist(5)],
+            "b": [kratos_gemm(m=4, n=4, width=4, sparsity=0.5)]}
+    grid = [ARCHS["baseline"], ARCHS["dd5"],
+            make_arch("dd5_f20", bypass_inputs=2, addmux_fanin=20,
+                      z_sources=40)]
+    res = sweep_suite(nets, grid, backend="jax")
+    assert res.n_classes == 2           # baseline | {dd5, dd5_f20}
+    assert oracle_parity(res, nets, grid)
+    res_np = sweep_suite(nets, grid, backend="numpy")
+    for g in range(len(res.circuits)):
+        for k in range(len(grid)):
+            assert (res.records[g][k]["critical_path_ps"]
+                    == res_np.records[g][k]["critical_path_ps"])
+            assert res.records[g][k]["suite"] in ("a", "b")
+
+
+def test_sweep_program_cache_reused():
+    """Warm sweeps reuse packs and compiled programs: second run does no
+    packing and rebuilds nothing."""
+    nets = [random_netlist(2)]
+    grid = [ARCHS["baseline"], ARCHS["dd5"]]
+    packs, programs = {}, {}
+    sweep_suite(nets, grid, packs=packs, programs=programs)
+    n_packs, n_progs = len(packs), len(programs)
+    res2 = sweep_suite(nets, grid, packs=packs, programs=programs)
+    assert len(packs) == n_packs and len(programs) == n_progs
+    assert res2.wall["pack_s"] < res2.wall["timing_s"] + 1.0  # packs cached
+
+
+def test_pack_cache_is_seed_keyed():
+    """Reusing a packs dict across sweeps at different seeds must not
+    serve stale-seed packs (regression: the cache key once dropped the
+    seed and seed-1 sweeps returned seed-0 timing)."""
+    nets = [kratos_gemm(m=4, n=4, width=4, sparsity=0.5)]
+    grid = [ARCHS["dd5"]]
+    pk: dict = {}
+    sweep_suite(nets, grid, seed=0, backend="numpy", packs=pk)
+    res1 = sweep_suite(nets, grid, seed=1, backend="numpy", packs=pk)
+    fresh = sweep_suite(nets, grid, seed=1, backend="numpy")
+    assert (res1.records[0][0]["critical_path_ps"]
+            == fresh.records[0][0]["critical_path_ps"])
+
+
+def test_make_arch_z_sources_respects_lb_outputs_override():
+    a = make_arch("x", bypass_inputs=2, addmux_fanin=20, lb_outputs=20)
+    assert a.z_sources == 20
+
+
+def test_adp_frontier_rows():
+    nets = [kratos_gemm(m=5, n=5, width=5, sparsity=0.5)]
+    grid = [ARCHS["baseline"], ARCHS["dd5"], ARCHS["dd6"]]
+    res = sweep_suite(nets, grid, backend="numpy")
+    rows = adp_frontier(res, baseline="baseline")
+    assert [r["arch"] for r in rows] != []
+    assert all(set(r) >= {"arch", "area_mwta", "critical_path_ps", "adp"}
+               for r in rows)
+    # frontier is sorted by ADP ratio
+    adps = [r["adp"] for r in rows]
+    assert adps == sorted(adps)
+    # paper direction: dd5 saves area vs baseline on an adder circuit
+    dd5 = next(r for r in rows if r["arch"] == "dd5")
+    assert dd5["area_mwta"] < 1.0
+
+
+def test_flow_sweep_wrapper():
+    nets = [random_netlist(4)]
+    res = flow.sweep_architectures(nets, archs=[ARCHS["baseline"],
+                                                ARCHS["dd5"]],
+                                   backend="numpy")
+    rows = flow.sweep_frontier(res, baseline="baseline")
+    assert len(rows) == 1 and rows[0]["arch"] == "dd5"
+
+
+def test_bypass_width_one_packs_and_verifies():
+    """bypass_inputs=1 (a half-populated bypass): only FA bits with a
+    single live operand may convert to Z; the pack must stay provably
+    equivalent and never out-convert the full DD5 bypass."""
+    b1 = make_arch("b1_f10", bypass_inputs=1, addmux_fanin=10)
+    assert b1.concurrent and b1.bypass_inputs == 1
+    net = kratos_gemm(m=4, n=4, width=4, sparsity=0.5)
+    rep = check_pack_equivalence(net, b1, seed=0)
+    assert rep["equivalent"]
+    p1 = pack(net, b1, seed=0)
+    p2 = pack(net, ARCHS["dd5"], seed=0)
+    z1 = sum(1 for alm in p1.alms for h in alm.halves if h.fa_feed == "z")
+    z2 = sum(1 for alm in p2.alms for h in alm.halves if h.fa_feed == "z")
+    assert z1 <= z2
+    # every converted bit respects the bypass width
+    for alm in p1.alms:
+        for h in alm.halves:
+            if h.fa is not None and h.fa_feed == "z":
+                ci, bi = h.fa
+                ch = p1.net.chains[ci]
+                live = sum(1 for s in (ch.a[bi], ch.b[bi]) if s > 1)
+                assert live <= 1
+    r1 = analyze_oracle(p1)
+    assert r1["critical_path_ps"] > 0
+
+
+def test_grid_infeasible_corners_rejected():
+    with pytest.raises(ValueError):
+        make_arch("bad", bypass_inputs=1, lut6=True)
+    with pytest.raises(ValueError):
+        make_arch("bad", bypass_inputs=3)
+    names = [a.name for a in arch_grid()]
+    assert len(names) == len(set(names))
