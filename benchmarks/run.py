@@ -58,12 +58,28 @@ def _timing_wall():
 
 
 def _section(name: str, module: str) -> str:
+    import time
+
     w0 = _timing_wall()
+    t0 = time.perf_counter()
     try:
         importlib.import_module(f".{module}", package=__package__).main()
+        elapsed = time.perf_counter() - t0
         w1 = _timing_wall()
         if w0 is not None and w1 is not None:
-            print(f"{name}.timing_analysis,{(w1['s'] - w0['s']) * 1e6:.0f},"
+            delta = w1["s"] - w0["s"]
+            # Non-overlap invariant: scope-aware accounting (see
+            # repro.core.timing.timing_section) guarantees each accounted
+            # span commits once, so a section's timing delta can never
+            # exceed the wall time the section actually ran for.  A
+            # violation means a nested accounting site double-counted.
+            # (explicit raise, not assert: must survive `python -O`)
+            if delta > elapsed + 1e-6:
+                raise RuntimeError(
+                    f"{name}: timing_analysis delta {delta:.3f}s exceeds "
+                    f"the section's elapsed {elapsed:.3f}s — TIMING_WALL "
+                    f"double-counted a nested section")
+            print(f"{name}.timing_analysis,{delta * 1e6:.0f},"
                   f"calls={w1['calls'] - w0['calls']}")
         return "ok"
     except ImportError as e:

@@ -1,5 +1,6 @@
 #!/bin/sh
-# Fast-tier CI check: CAD-core tests + a 2-point arch-grid sweep gated on
+# Fast-tier CI check: CAD-core tests + a 2-point arch-grid sweep + a
+# 2-point structural-axis (cluster-geometry) sweep, all gated on
 # timing-oracle bit-identity.  Equivalent to `python -m benchmarks.run
 # --smoke`; run the full tier-1 line (`python -m pytest -x -q`) before
 # shipping.

@@ -208,12 +208,22 @@ def make_arch(name: str, bypass_inputs: int = 0, addmux_fanin: int = 10,
 
 
 def arch_grid(bypass_inputs=(0, 2), addmux_fanin=(5, 10, 20),
-              lut6=(False, True)) -> list[ArchParams]:
+              lut6=(False, True), alms_per_lb=(10,), lb_inputs=(60,),
+              ext_pin_util=(0.9,)) -> list[ArchParams]:
     """The DD design-space grid: bypass width x crossbar population x
-    6-LUT concurrency.  Infeasible corners (lut6 without full bypass)
-    and redundant baseline fan-in points are dropped; the canonical
+    6-LUT concurrency, crossed with the **structural cluster-geometry
+    axes** the paper holds fixed at the Stratix-10-like point —
+    ``alms_per_lb`` (LB capacity), ``lb_inputs`` (crossbar input pins)
+    and ``ext_pin_util`` (usable-pin fraction).  Geometry axes default to
+    singleton canonical values, so the historical 7-point grid is
+    unchanged; widening any of them multiplies the grid (and, because
+    the geometry knobs are all pack-affecting, the structural classes —
+    the incremental repacker in :mod:`repro.core.repack` is what keeps
+    that affordable).  Infeasible corners (lut6 without full bypass) and
+    redundant baseline fan-in points are dropped; the canonical
     baseline/DD5/DD6 rows appear under grid names (``b0``, ``b2_f10``,
-    ``b2_f10_l6``) with identical parameters."""
+    ``b2_f10_l6``) with identical parameters; non-canonical geometry
+    points carry ``_a<alms>``/``_i<inputs>``/``_u<util%>`` suffixes."""
     grid: list[ArchParams] = []
     seen: set[tuple] = set()
     for b in bypass_inputs:
@@ -222,13 +232,23 @@ def arch_grid(bypass_inputs=(0, 2), addmux_fanin=(5, 10, 20),
             for l6 in lut6:
                 if l6 and b < 2:
                     continue
-                name = f"b{b}" + (f"_f{f}" if b else "") + ("_l6" if l6 else "")
-                key = (b, f if b else 10, l6)
-                if key in seen:
-                    continue
-                seen.add(key)
-                grid.append(make_arch(name, bypass_inputs=b, addmux_fanin=f,
-                                      lut6=l6))
+                for apl in alms_per_lb:
+                    for li in lb_inputs:
+                        for u in ext_pin_util:
+                            name = (f"b{b}" + (f"_f{f}" if b else "")
+                                    + ("_l6" if l6 else "")
+                                    + (f"_a{apl}" if apl != 10 else "")
+                                    + (f"_i{li}" if li != 60 else "")
+                                    + (f"_u{round(u * 100)}" if u != 0.9
+                                       else ""))
+                            key = (b, f if b else 10, l6, apl, li, u)
+                            if key in seen:
+                                continue
+                            seen.add(key)
+                            grid.append(make_arch(
+                                name, bypass_inputs=b, addmux_fanin=f,
+                                lut6=l6, alms_per_lb=apl, lb_inputs=li,
+                                ext_pin_util=u))
     return grid
 
 

@@ -49,7 +49,6 @@ baseline the perf trajectory measures against — and the Python
 from __future__ import annotations
 
 import functools
-import hashlib
 from collections import defaultdict
 from dataclasses import dataclass, field
 
@@ -71,16 +70,10 @@ _GROUP_CACHE: dict[tuple, tuple] = {}
 
 
 def netlist_digest(net: Netlist) -> str:
-    """Content digest of a netlist's structure (the plan-cache key)."""
-    h = hashlib.blake2b(digest_size=16)
-    h.update(repr((net.n_signals, tuple(net.pis),
-                   tuple(net.lut_inputs), tuple(net.lut_tt),
-                   tuple(net.lut_out),
-                   tuple((tuple(c.a), tuple(c.b), tuple(c.sums), c.cin,
-                          c.cout) for c in net.chains),
-                   tuple(sorted((k, tuple(v))
-                                for k, v in net.pos.items())))).encode())
-    return h.hexdigest()
+    """Content digest of a netlist's structure (the plan-cache key) —
+    alias of :meth:`Netlist.content_digest`, shared with the sweep
+    engine's pack/program caches."""
+    return net.content_digest()
 
 
 def _cache_put(cache: dict, cap: int, key, value):

@@ -127,21 +127,35 @@ def run_circuit(net: Netlist, archs: Sequence[str | ArchParams],
 
 def sweep_architectures(suites_or_nets, archs=None, seed: int = 0,
                         backend: str = "jax", max_buckets: int = 3,
+                        max_groups: int = 4,
                         packs: dict | None = None,
-                        programs: dict | None = None):
+                        programs: dict | None = None,
+                        prefixes: dict | None = None,
+                        grid_axes: dict | None = None):
     """Design-space sweep over an architecture grid (see
     :func:`repro.core.sweep.sweep_suite`).  ``archs`` defaults to the
     full bypass-width x crossbar-population grid; pass any list of
     :class:`~repro.core.alm.ArchParams` rows (e.g. the canonical
-    baseline/DD5/DD6 triple plus ablations)."""
+    baseline/DD5/DD6 triple plus ablations), or ``grid_axes`` — keyword
+    arguments for :func:`repro.core.alm.arch_grid` (e.g.
+    ``{"alms_per_lb": (8, 10), "lb_inputs": (48, 60)}``) — to grow the
+    grid along the structural cluster-geometry axes.
+
+    ``max_groups`` (the timing-program envelope-grouping knob) is
+    forwarded verbatim: a flow caller can now both match a direct
+    ``sweep_suite`` configuration and hit a ``programs`` cache warmed
+    with a non-default grouping.  ``packs``/``programs``/``prefixes``
+    are the caller-owned content-keyed caches of ``sweep_suite``."""
     from .alm import arch_grid
     from .sweep import sweep_suite
 
     if archs is None:
-        archs = arch_grid()
+        archs = arch_grid(**(grid_axes or {}))
+    elif grid_axes is not None:
+        raise ValueError("pass either archs or grid_axes, not both")
     return sweep_suite(suites_or_nets, archs, seed=seed, backend=backend,
-                       max_buckets=max_buckets, packs=packs,
-                       programs=programs)
+                       max_buckets=max_buckets, max_groups=max_groups,
+                       packs=packs, programs=programs, prefixes=prefixes)
 
 
 def sweep_frontier(result, baseline: str | None = None):

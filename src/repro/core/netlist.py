@@ -292,6 +292,28 @@ class Netlist:
             self.driver[cout] = ("cout", ci)
         return sums, cout
 
+    def content_digest(self) -> str:
+        """Digest of the netlist's *structure* (signals, LUTs, chains,
+        POs — not the name).  This is the cache key every caller-owned
+        pack/plan/program cache must use: keys derived from a circuit's
+        position in a list silently serve wrong entries when the same
+        cache is passed with a different list (see
+        :func:`repro.core.sweep.sweep_suite`).  Deliberately uncached:
+        callers may mutate netlist attributes directly, so a stale
+        digest would defeat the content keying this exists for."""
+        import hashlib
+
+        h = hashlib.blake2b(digest_size=16)
+        h.update(repr((self.n_signals, tuple(self.pis),
+                       tuple(self.lut_inputs), tuple(self.lut_tt),
+                       tuple(self.lut_out),
+                       tuple((tuple(c.a), tuple(c.b), tuple(c.sums),
+                              c.cin, c.cout) for c in self.chains),
+                       tuple(sorted((k, tuple(v))
+                                    for k, v in self.pos.items()))
+                       )).encode())
+        return h.hexdigest()
+
     # -- stats --------------------------------------------------------------
     @property
     def n_luts(self) -> int:

@@ -121,6 +121,10 @@ class ChainLevelRows:
 @dataclass(frozen=True)
 class PackIR:
     name: str
+    #: content digest of the source netlist — the incremental-lowering
+    #: template guard (same-shaped but different circuits must not patch
+    #: each other's IRs)
+    net_digest: str
     arch_name: str
     structural_key: tuple
     n_signals: int
@@ -187,26 +191,25 @@ def _levelize(net: Netlist):
     return by_luts, by_chains, sig_level
 
 
-def lower_pack_ir(packed: "PackedCircuit") -> PackIR:
-    """Flatten a :class:`~repro.core.packing.PackedCircuit` into columns."""
+def _placement_columns(packed: "PackedCircuit") -> dict:
+    """The placement-derived columns both lowering paths share: per-
+    signal site/LB, the per-ALM mode columns, and the chain-bit feed
+    views (the `(ci, bi) -> (feed, absorbed)` map, the absorbed-LUT set
+    and the per-sum-signal Z-feed flags).  Single source of truth —
+    :func:`lower_pack_ir_incremental` must patch exactly what this
+    builds."""
     net = packed.net
-    arch = packed.arch
     S = net.n_signals
 
     sig_site = np.full(S, -1, dtype=np.int32)
-    sig_kind = np.full(S, K_PI, dtype=np.int32)
-    sig_kind[: min(2, S)] = K_CONST
     for li, out in enumerate(net.lut_out):
         sig_site[out] = packed.lut_site.get(li, -2)
-        sig_kind[out] = K_LUT
     for ci, ch in enumerate(net.chains):
         for bi, s in enumerate(ch.sums):
             sig_site[s] = packed.chain_site.get((ci, bi), -2)
-            sig_kind[s] = K_SUM
         if ch.cout is not None:
             sig_site[ch.cout] = packed.chain_site.get((ci, len(ch.sums) - 1),
                                                       -2)
-            sig_kind[ch.cout] = K_COUT
 
     alm_lb_arr = np.asarray(packed.alm_lb, dtype=np.int32) \
         if packed.alm_lb else np.zeros(0, dtype=np.int32)
@@ -214,7 +217,6 @@ def lower_pack_ir(packed: "PackedCircuit") -> PackIR:
     placed = sig_site >= 0
     sig_lb[placed] = alm_lb_arr[sig_site[placed]]
 
-    # per-ALM mode columns + the chain-bit feed map the timing model needs
     A = len(packed.alms)
     alm_is_arith = np.zeros(A, dtype=bool)
     alm_feed = np.zeros((A, 2), dtype=np.int32)
@@ -222,6 +224,7 @@ def lower_pack_ir(packed: "PackedCircuit") -> PackIR:
     alm_lut6 = np.full(A, -1, dtype=np.int32)
     feed: dict[tuple[int, int], tuple[str, list[int]]] = {}
     absorbed_all: set[int] = set()
+    z_of_sum = np.zeros(S, dtype=bool)
     for ai, alm in enumerate(packed.alms):
         alm_is_arith[ai] = alm.is_arith
         if alm.lut6 is not None:
@@ -231,8 +234,39 @@ def lower_pack_ir(packed: "PackedCircuit") -> PackIR:
                 alm_feed[ai, hi] = 2 if h.fa_feed == "z" else 1
                 feed[h.fa] = (h.fa_feed, h.absorbed)
                 absorbed_all.update(h.absorbed)
+                if h.fa_feed == "z":
+                    ci, bi = h.fa
+                    z_of_sum[net.chains[ci].sums[bi]] = True
             if h.hosted_lut is not None:
                 alm_hosted[ai, hi] = h.hosted_lut
+
+    return {"sig_site": sig_site, "sig_lb": sig_lb, "alm_lb": alm_lb_arr,
+            "alm_is_arith": alm_is_arith, "alm_feed": alm_feed,
+            "alm_hosted": alm_hosted, "alm_lut6": alm_lut6,
+            "feed": feed, "absorbed_all": absorbed_all,
+            "z_of_sum": z_of_sum}
+
+
+def lower_pack_ir(packed: "PackedCircuit") -> PackIR:
+    """Flatten a :class:`~repro.core.packing.PackedCircuit` into columns."""
+    net = packed.net
+    arch = packed.arch
+    S = net.n_signals
+
+    cols = _placement_columns(packed)
+    sig_site, sig_lb, alm_lb_arr = (cols["sig_site"], cols["sig_lb"],
+                                    cols["alm_lb"])
+    feed, absorbed_all = cols["feed"], cols["absorbed_all"]
+
+    sig_kind = np.full(S, K_PI, dtype=np.int32)
+    sig_kind[: min(2, S)] = K_CONST
+    for out in net.lut_out:
+        sig_kind[out] = K_LUT
+    for ch in net.chains:
+        for s in ch.sums:
+            sig_kind[s] = K_SUM
+        if ch.cout is not None:
+            sig_kind[ch.cout] = K_COUT
     for li in absorbed_all:
         sig_kind[net.lut_out[li]] = K_LUT_ABS
 
@@ -363,16 +397,141 @@ def lower_pack_ir(packed: "PackedCircuit") -> PackIR:
                       dtype=np.int32)
 
     return PackIR(
-        name=net.name, arch_name=arch.name,
+        name=net.name, net_digest=net.content_digest(),
+        arch_name=arch.name,
         structural_key=arch.structural_key(),
         n_signals=S,
         sig_site=sig_site, sig_lb=sig_lb, sig_kind=sig_kind,
         sig_level=sig_level,
         fanin_ptr=fanin_ptr, fanin_sig=fanin_sig, fanin_cls=fanin_cls,
-        alm_lb=alm_lb_arr, alm_is_arith=alm_is_arith, alm_feed=alm_feed,
-        alm_hosted=alm_hosted, alm_lut6=alm_lut6,
+        alm_lb=alm_lb_arr, alm_is_arith=cols["alm_is_arith"],
+        alm_feed=cols["alm_feed"], alm_hosted=cols["alm_hosted"],
+        alm_lut6=cols["alm_lut6"],
         lut_levels=tuple(lut_levels), chain_levels=tuple(chain_levels),
         po_sig=po_sig,
+        n_alms=packed.n_alms, n_lbs=packed.n_lbs, n_luts=net.n_luts,
+        n_adders=net.n_adders, concurrent_luts=packed.concurrent_luts,
+    )
+
+
+#: the unique class of an absorbed chain operand (no route, no pin, the
+#: folded A-H adder path) — structural, never produced by any other edge
+_CLS_ABSORBED = edge_class(ROUTE_NULL, PIN_NULL, PATH_AH)
+
+
+def lower_pack_ir_incremental(packed: "PackedCircuit",
+                              template: PackIR) -> PackIR:
+    """Re-lower a pack by patching a sibling class's PackIR.
+
+    ``template`` must be a full lowering of a pack of the *same netlist
+    and prefix* (any structural class — typically the first class of a
+    sweep).  Clustering can only move atoms between ALMs/LBs and flip
+    chain-bit feeds, so the netlist-shaped columns (signal kinds/levels,
+    level tables' signals, fanin CSR topology, primary outputs) are
+    reused verbatim and only the placement-derived columns are
+    recomputed: per-signal site/LB, per-ALM mode columns, and every edge
+    delay class (routing locality, A-H vs Z pin, adder path).  The
+    result is array-for-array identical to :func:`lower_pack_ir` — the
+    parity tests compare every column.
+    """
+    net = packed.net
+    arch = packed.arch
+    S = net.n_signals
+    if template.net_digest != net.content_digest():
+        raise ValueError(
+            f"template PackIR {template.name!r} is not a lowering of "
+            f"netlist {net.name!r} — incremental patching needs a sibling "
+            f"structural class of the same circuit (content digests "
+            f"differ)")
+
+    # --- placement-derived columns (shared builder with the full path) -----
+    cols = _placement_columns(packed)
+    sig_lb = cols["sig_lb"]
+    z_of_sum = cols["z_of_sum"]
+
+    # --- patch edge classes level by level ---------------------------------
+    cls_lut_local = edge_class(ROUTE_LOCAL, PIN_AH, PATH_NULL)
+    cls_lut_global = edge_class(ROUTE_GLOBAL, PIN_AH, PATH_NULL)
+    fanin_cls = np.zeros_like(template.fanin_cls)
+    ptr = template.fanin_ptr
+
+    def op_route(src_lb: np.ndarray, dst_lb: np.ndarray) -> np.ndarray:
+        return np.where((src_lb == dst_lb) & (src_lb >= 0),
+                        ROUTE_LOCAL, ROUTE_GLOBAL)
+
+    lut_levels: list[LutLevelRows] = []
+    chain_levels: list[ChainLevelRows] = []
+    for ll, cl in zip(template.lut_levels, template.chain_levels):
+        # ---- LUT rows: route locality is the only class variable ----
+        mask = ll.ins > CONST1
+        dst = sig_lb[ll.out][:, None]
+        local = (sig_lb[ll.ins] == dst) & (sig_lb[ll.ins] >= 0)
+        cls = np.where(mask, np.where(local, cls_lut_local, cls_lut_global),
+                       0).astype(np.int32)
+        lut_levels.append(LutLevelRows(ins=ll.ins, cls=cls, ndc=ll.ndc,
+                                       out=ll.out))
+        if mask.any():
+            offs = np.cumsum(mask, axis=1) - 1
+            slots = ptr[ll.out][:, None] + offs
+            fanin_cls[slots[mask]] = cls[mask]
+
+        # ---- chain rows: absorbed mask is structural (read from the
+        # template), feed kind and routing are placement-derived ----
+        C = cl.cout.shape[0]
+        if C:
+            sums_safe = np.clip(cl.sums, 0, None)
+            dst = np.where(cl.sums >= 0, sig_lb[sums_safe], -1)
+            feed_z = z_of_sum[sums_safe] & (cl.sums >= 0)
+
+            def patch_ops(op_sig, op_cls_tpl):
+                m = op_sig > CONST1
+                absorbed = op_cls_tpl == _CLS_ABSORBED
+                route = op_route(sig_lb[op_sig], dst)
+                c_z = route * 9 + PIN_Z * 3 + PATH_Z
+                c_ah = route * 9 + PIN_AH * 3 + PATH_AH
+                c = np.where(absorbed, _CLS_ABSORBED,
+                             np.where(feed_z, c_z, c_ah))
+                return np.where(m, c, 0).astype(np.int32), m
+
+            a_cls, amask = patch_ops(cl.a_sig, cl.a_cls)
+            b_cls, bmask = patch_ops(cl.b_sig, cl.b_cls)
+            cmask = cl.cin_sig > CONST1
+            route0 = op_route(sig_lb[cl.cin_sig], dst[:, 0])
+            cin_cls = np.where(cmask, route0 * 9 + PIN_AH * 3 + PATH_AH,
+                               0).astype(np.int32)
+            # CSR order per sum: a-edge, b-edge, then cin on bit 0
+            base = ptr[sums_safe]
+            if amask.any():
+                fanin_cls[base[amask]] = a_cls[amask]
+            slots_b = base + amask.astype(np.int32)
+            if bmask.any():
+                fanin_cls[slots_b[bmask]] = b_cls[bmask]
+            slot_c = base[:, 0] + amask[:, 0].astype(np.int32) \
+                + bmask[:, 0].astype(np.int32)
+            if cmask.any():
+                fanin_cls[slot_c[cmask]] = cin_cls[cmask]
+            chain_levels.append(ChainLevelRows(
+                a_sig=cl.a_sig, a_cls=a_cls, b_sig=cl.b_sig, b_cls=b_cls,
+                cin_sig=cl.cin_sig, cin_cls=cin_cls, sums=cl.sums,
+                cout=cl.cout, last=cl.last))
+        else:
+            chain_levels.append(cl)
+
+    return PackIR(
+        name=net.name, net_digest=template.net_digest,
+        arch_name=arch.name,
+        structural_key=arch.structural_key(),
+        n_signals=S,
+        sig_site=cols["sig_site"], sig_lb=sig_lb,
+        sig_kind=template.sig_kind,
+        sig_level=template.sig_level,
+        fanin_ptr=template.fanin_ptr, fanin_sig=template.fanin_sig,
+        fanin_cls=fanin_cls,
+        alm_lb=cols["alm_lb"], alm_is_arith=cols["alm_is_arith"],
+        alm_feed=cols["alm_feed"], alm_hosted=cols["alm_hosted"],
+        alm_lut6=cols["alm_lut6"],
+        lut_levels=tuple(lut_levels), chain_levels=tuple(chain_levels),
+        po_sig=template.po_sig,
         n_alms=packed.n_alms, n_lbs=packed.n_lbs, n_luts=net.n_luts,
         n_adders=net.n_adders, concurrent_luts=packed.concurrent_luts,
     )

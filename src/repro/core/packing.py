@@ -41,8 +41,10 @@ pack (and one PackIR) across every delay row of a structural class.
 """
 from __future__ import annotations
 
+import heapq
 from collections import defaultdict
 from dataclasses import dataclass, field
+from itertools import islice
 
 from .alm import ArchParams
 from .netlist import CONST0, CONST1, Netlist
@@ -51,7 +53,7 @@ from .netlist import CONST0, CONST1, Netlist
 LAST_PACK_DEBUG: dict[str, int] = {}
 
 
-@dataclass
+@dataclass(slots=True)
 class Half:
     """One ALM half: 1 FA bit + two 4-LUTs (one 5-LUT equivalent)."""
 
@@ -61,7 +63,7 @@ class Half:
     hosted_lut: int | None = None          # unrelated LUT index (mode C/logic)
 
 
-@dataclass
+@dataclass(slots=True)
 class ALM:
     halves: tuple[Half, Half]
     lut6: int | None = None                # a hosted 6-LUT spans both halves
@@ -109,7 +111,7 @@ class ALM:
         return outs
 
 
-@dataclass
+@dataclass(slots=True)
 class LB:
     alms: list[int] = field(default_factory=list)  # indices into packed.alms
 
@@ -127,16 +129,25 @@ class PackedCircuit:
 
     _ir: object | None = field(default=None, repr=False, compare=False)
 
-    def lower_ir(self, cache: bool = True):
+    def lower_ir(self, cache: bool = True, template: object | None = None):
         """Lower to the columnar :class:`~repro.core.pack_ir.PackIR` (flat
         per-signal / per-ALM / per-level arrays — the substrate the
         vectorized timing analyzer and the arch-sweep engine consume).
         The IR is cached on the packed circuit; it is immutable, so any
-        later mutation of ``alms`` must pass ``cache=False``."""
-        if self._ir is None or not cache:
-            from .pack_ir import lower_pack_ir
+        later mutation of ``alms`` must pass ``cache=False``.
 
-            ir = lower_pack_ir(self)
+        **Incremental mode**: pass ``template`` — a full lowering of a
+        sibling structural class of the same circuit/prefix — and only
+        the placement-derived columns (sites, LBs, edge delay classes,
+        ALM modes) are recomputed; the netlist-shaped columns (levels,
+        fanin CSR topology, node tables' signals) are reused.  Identical
+        output to a fresh lowering, at a fraction of the cost — this is
+        what a cluster-geometry sweep pays per structural class."""
+        if self._ir is None or not cache:
+            from .pack_ir import lower_pack_ir, lower_pack_ir_incremental
+
+            ir = (lower_pack_ir_incremental(self, template)
+                  if template is not None else lower_pack_ir(self))
             if not cache:
                 return ir
             self._ir = ir
@@ -190,69 +201,18 @@ class PackedCircuit:
 def pack(net: Netlist, arch: ArchParams, seed: int = 0,
          allow_unrelated: bool = True, strict_phases: tuple = (False,),
          pull_runs: bool = False) -> PackedCircuit:
-    import random
+    """Full pack = arch-invariant prefix + one re-clustering.
 
-    rng = random.Random(seed)
+    The prefix (absorption, chain slotting, LUT pairing, cluster plan —
+    see :mod:`repro.core.repack`) depends only on the netlist and the
+    seed; the clustering stage consumes the structural arch knobs.  A
+    design-space sweep over cluster geometry computes the prefix once
+    per circuit and replays only the clustering per structural class."""
+    from .repack import pack_prefix, repack
 
-    LAST_PACK_DEBUG.clear()
-    fanout = _fanout_counts(net)
-
-    # --- 1. absorption pre-pass -------------------------------------------
-    absorbed_of: dict[tuple[int, int], list[int]] = {}
-    lut_absorbed: set[int] = set()
-    for ci, ch in enumerate(net.chains):
-        for bi in range(len(ch.sums)):
-            got: list[int] = []
-            for s in (ch.a[bi], ch.b[bi]):
-                if s <= CONST1:
-                    continue
-                drv = net.driver.get(s)
-                if (drv is not None and drv[0] == "lut"
-                        and fanout[s] == 1
-                        and len(net.lut_inputs[drv[1]]) <= 4
-                        and drv[1] not in lut_absorbed):
-                    got.append(drv[1])
-                    lut_absorbed.add(drv[1])
-            if got:
-                absorbed_of[(ci, bi)] = got
-
-    free_luts = [i for i in range(net.n_luts) if i not in lut_absorbed]
-
-    # --- 2. chain slotting --------------------------------------------------
-    alms: list[ALM] = []
-    chain_site: dict[tuple[int, int], int] = {}
-    lut_site: dict[int, int] = {}
-    chain_alm_runs: list[list[int]] = []  # per chain, its ALM indices
-    for ci, ch in enumerate(net.chains):
-        run: list[int] = []
-        for lo in range(0, len(ch.sums), 2):
-            halves = []
-            for bi in (lo, lo + 1):
-                if bi < len(ch.sums):
-                    ab = absorbed_of.get((ci, bi), [])
-                    halves.append(Half(fa=(ci, bi), fa_feed="lut", absorbed=ab))
-                else:
-                    halves.append(Half())
-            alm = ALM(halves=(halves[0], halves[1]), is_arith=True)
-            ai = len(alms)
-            alms.append(alm)
-            run.append(ai)
-            for bi in (lo, lo + 1):
-                if bi < len(ch.sums):
-                    chain_site[(ci, bi)] = ai
-                    for li in absorbed_of.get((ci, bi), []):
-                        lut_site[li] = ai
-        chain_alm_runs.append(run)
-
-    # --- 3. LUT pairing -----------------------------------------------------
-    pairs, singles6, singles5 = _pair_luts(net, free_luts, rng)
-
-    # --- 4+5. clustering ----------------------------------------------------
-    packed = _cluster(net, arch, alms, chain_alm_runs, pairs, singles6,
-                      singles5, chain_site, lut_site, rng,
-                      allow_unrelated=allow_unrelated,
-                      strict_phases=strict_phases, pull_runs=pull_runs)
-    return packed
+    return repack(pack_prefix(net, seed=seed), arch,
+                  allow_unrelated=allow_unrelated,
+                  strict_phases=strict_phases, pull_runs=pull_runs)
 
 
 def _fanout_counts(net: Netlist) -> dict[int, int]:
@@ -345,6 +305,10 @@ class _LBState:
         self.ext_in: set[int] = set()
         self.ext_out_capacity = arch.output_budget
         self.z_ext: set[int] = set()
+        # arith ALMs with hostable halves, in placement order (the
+        # hosting scans' first-fit order); pruned lazily as halves fill
+        self.hostable: list[int] = []
+        self.alm_pos: dict[int, int] = {}
 
     def n_alms(self) -> int:
         return len(self.alm_ids)
@@ -364,10 +328,47 @@ class _LBState:
         self.z_ext |= new_z_ext
 
 
-def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
-             chain_site, lut_site, rng, allow_unrelated=True,
-             strict_phases=(True, False), pull_runs=True):
-    # Atom = ("run", chain_idx) | ("pair", a, b) | ("single", li, k)
+@dataclass
+class ClusterPlan:
+    """Arch-invariant clustering inputs, computed once per (net, seed).
+
+    Everything here depends only on the netlist, the chain-slotted ALM
+    skeleton and the pairing RNG — never on cluster geometry — so a
+    structural-axis sweep builds one plan per circuit and replays
+    :func:`_cluster` under each grid point's LB budgets.
+    """
+
+    # Atom = ("run", chain_idx) | ("pair", a, b) | ("single6"/"single5", li)
+    atoms: list[tuple]
+    run_order: list[int]                  # connectivity-greedy chain order
+    lut_order: list[int]                  # seeded shuffle of LUT atoms
+    #: per skeleton-ALM (ah, z, prod) at placement time — ALMs are only
+    #: mutated *after* they are placed, so these are arch-invariant
+    skeleton_io: list[tuple[set[int], set[int], set[int]]]
+    #: per atom, the (ah, z, prod) of its materialized logic ALM
+    #: (``None`` for chain runs)
+    atom_io: list[tuple[set[int], set[int], set[int]] | None]
+    #: per atom, its frontier-bump targets as (neighbor, shared-signal
+    #: count) pairs, ordered by first occurrence in the legacy
+    #: signal-set x sig2atoms iteration (ties in the greedy pull are
+    #: broken by first-seen order, so the order is semantic)
+    atom_neighbors: list[list[tuple[int, int]]]
+    #: per (chain, bit), the live (> CONST1) FA operand signals
+    bit_live: dict[tuple[int, int], list[int]]
+    #: per LUT atom, its candidate-LB probes in legacy order:
+    #: (0, sig) — LB producing ``sig``; (1, alm) — LB of the (fixed,
+    #: skeleton) ALM of a consuming chain bit; (2, lut) — LB hosting a
+    #: consuming LUT (dynamic).  Empty for chain runs.
+    atom_cand_ops: list[list[tuple[int, int]]]
+
+
+def _build_cluster_plan(net, alms, chain_alm_runs, chain_site, pairs,
+                        singles6, singles5, rng) -> ClusterPlan:
+    """Build the :class:`ClusterPlan` — the atom list, connectivity
+    indexes, placement orders and placement-time IO sets
+    :func:`_cluster` consumes.  Must draw from ``rng`` exactly as the
+    pre-refactor ``_cluster`` did (one shuffle of the LUT atoms) so
+    packs stay byte-stable."""
     atoms: list[tuple] = []
     for ci, run in enumerate(chain_alm_runs):
         if run:
@@ -379,7 +380,7 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
     for li in singles5:
         atoms.append(("single5", li))
 
-    def atom_sigs(atom) -> set[int]:
+    def compute_atom_sigs(atom) -> set[int]:
         kind = atom[0]
         sigs: set[int] = set()
         if kind == "run":
@@ -395,10 +396,12 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
                     sigs.add(net.lut_out[li])
         return sigs
 
+    atom_sigs = [compute_atom_sigs(a) for a in atoms]
+
     # connectivity index
     sig2atoms: dict[int, list[int]] = defaultdict(list)
-    for idx, atom in enumerate(atoms):
-        for s in atom_sigs(atom):
+    for idx in range(len(atoms)):
+        for s in atom_sigs[idx]:
             sig2atoms[s].append(idx)
 
     # consumer index: signal -> consuming sites (chain bits and luts)
@@ -413,23 +416,137 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
                 if s > CONST1:
                     sig_consumers[s].append(("chain", ci, bi))
 
+    # Chain runs are placed in *connectivity order*: start from the largest
+    # run, then repeatedly take the unplaced run sharing the most signals
+    # with what is already placed.  Consumer chains land next to their
+    # producers, so Z conversions ride the free local/direct-link taps.
+    run_idxs = [i for i, a in enumerate(atoms) if a[0] == "run"]
+    run_order: list[int] = []
+    if run_idxs:
+        remaining = set(run_idxs)
+        overlap: dict[int, int] = {i: 0 for i in run_idxs}
+        sig2runs: dict[int, list[int]] = defaultdict(list)
+        for i in run_idxs:
+            for s in atom_sigs[i]:
+                sig2runs[s].append(i)
+        first = max(remaining, key=lambda i: len(chain_alm_runs[atoms[i][1]]))
+        run_order.append(first)
+        remaining.discard(first)
+        for s in atom_sigs[first]:
+            for j in sig2runs[s]:
+                if j in remaining:
+                    overlap[j] += 1
+        while remaining:
+            nxt = max(remaining,
+                      key=lambda i: (overlap[i],
+                                     len(chain_alm_runs[atoms[i][1]])))
+            run_order.append(nxt)
+            remaining.discard(nxt)
+            for s in atom_sigs[nxt]:
+                for j in sig2runs[s]:
+                    if j in remaining:
+                        overlap[j] += 1
+    lut_order = [i for i, a in enumerate(atoms) if a[0] != "run"]
+    rng.shuffle(lut_order)
+
+    # placement-time IO sets: the skeleton ALMs (and the logic ALMs the
+    # LUT atoms materialize) are queried by the clusterer only *before*
+    # their first mutation, so their (ah, z, prod) never depends on the
+    # architecture — computing them here keeps the greedy replay off the
+    # ``input_signals`` object walk entirely
+    skeleton_io = [(alm.input_signals(net) + (alm.output_signals(net),))
+                   for alm in alms]
+
+    def logic_atom_io(atom):
+        if atom[0] == "run":
+            return None
+        ah: set[int] = set()
+        prod: set[int] = set()
+        for li in atom[1:]:
+            ah.update(s for s in net.lut_inputs[li] if s > CONST1)
+            prod.add(net.lut_out[li])
+        return (ah, set(), prod)
+
+    atom_io = [logic_atom_io(a) for a in atoms]
+
+    # frontier-bump targets aggregated to (neighbor, count), first
+    # occurrence following the legacy (signal-set order x sig2atoms
+    # order) flattening — a bump is atomic between placements, so one
+    # +count increment replays the legacy per-signal +1 sequence exactly
+    atom_neighbors: list[list[tuple[int, int]]] = []
+    for i in range(len(atoms)):
+        agg: dict[int, int] = {}
+        for s in atom_sigs[i]:
+            for j in sig2atoms[s]:
+                agg[j] = agg.get(j, 0) + 1
+        atom_neighbors.append(list(agg.items()))
+
+    bit_live = {(ci, bi): [s for s in (ch.a[bi], ch.b[bi]) if s > CONST1]
+                for ci, ch in enumerate(net.chains)
+                for bi in range(len(ch.sums))}
+
+    # candidate-LB probe sequences: producer lookups and consumer sites
+    # flattened per atom in the legacy per-LUT order; chain-bit consumer
+    # sites resolve to *fixed* skeleton ALM indices already here
+    atom_cand_ops: list[list[tuple[int, int]]] = []
+    for atom in atoms:
+        ops: list[tuple[int, int]] = []
+        if atom[0] != "run":
+            for li in atom[1:]:
+                if isinstance(li, int):
+                    for s in net.lut_inputs[li]:
+                        ops.append((0, s))
+                    for cons in sig_consumers.get(net.lut_out[li], ()):
+                        if cons[0] == "chain":
+                            ops.append((1, chain_site[(cons[1], cons[2])]))
+                        else:
+                            ops.append((2, cons[1]))
+        atom_cand_ops.append(ops)
+
+    # atom_sigs / sig2atoms / sig_consumers are construction scaffolding:
+    # everything the clusterer replays is baked into the orders, the
+    # neighbor counts and the probe sequences, so the retained plan (it
+    # lives as long as a sweep's prefix cache) stays slim
+    return ClusterPlan(atoms=atoms, run_order=run_order,
+                       lut_order=lut_order, skeleton_io=skeleton_io,
+                       atom_io=atom_io, atom_neighbors=atom_neighbors,
+                       bit_live=bit_live, atom_cand_ops=atom_cand_ops)
+
+
+def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
+             chain_site, lut_site, allow_unrelated=True,
+             strict_phases=(True, False), pull_runs=True):
+    atoms = plan.atoms
+
     placed = [False] * len(atoms)
     lbs_state: list[_LBState] = []
     lb_list: list[LB] = []
     alm_lb: list[int] = [-1] * len(alms)
     concurrent = 0
 
+    # (ah, z, prod) per ALM — seeded from the plan's arch-invariant
+    # placement-time sets, recomputed lazily after a mutation (hosting,
+    # Z conversion) invalidates an entry.  Callers must treat the sets
+    # as read-only (they may be shared across re-clusterings).
+    alm_io_cache: dict[int, tuple] = dict(enumerate(plan.skeleton_io))
+    # hostable halves per arith ALM, same invalidation discipline
+    free_halves_cache: dict[int, list] = {}
+
     def alm_io(ai: int):
-        ah, z = alms[ai].input_signals(net)
-        prod = alms[ai].output_signals(net)
-        return ah, z, prod
+        r = alm_io_cache.get(ai)
+        if r is None:
+            ah, z = alms[ai].input_signals(net)
+            prod = alms[ai].output_signals(net)
+            r = (ah, z, prod)
+            alm_io_cache[ai] = r
+        return r
 
     def open_lb() -> int:
         lbs_state.append(_LBState(arch))
         lb_list.append(LB())
         return len(lbs_state) - 1
 
-    prod_site: dict[int, int] = {}
+    prod_site = [-1] * net.n_signals      # signal -> producing ALM (or -1)
     host_capacity_lbs: set[int] = set()
 
     def _has_free_half(alm: ALM) -> bool:
@@ -445,13 +562,16 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
         ah, z, prod = alm_io(ai)
         z_ext = z - st.produced if arch.z_local_free else set(z)
         st.add(ah | z, prod, z_ext)
+        st.alm_pos[ai] = len(st.alm_ids)
         st.alm_ids.append(ai)
         lb_list[lb_idx].alms.append(ai)
         alm_lb[ai] = lb_idx
         for s in prod:
             prod_site[s] = ai
-        if arch.concurrent and _has_free_half(alms[ai]):
-            host_capacity_lbs.add(lb_idx)
+        if _has_free_half(alms[ai]):
+            st.hostable.append(ai)
+            if arch.concurrent:
+                host_capacity_lbs.add(lb_idx)
 
     def try_fit_alm(ai: int, lb_idx: int) -> bool:
         st = lbs_state[lb_idx]
@@ -488,6 +608,8 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
         nonlocal concurrent
         st = lbs_state[lb_idx]
         ai = lut_site.pop(li)
+        alm_io_cache.pop(ai, None)
+        free_halves_cache.pop(ai, None)
         for h in alms[ai].halves:
             if h.hosted_lut == li:
                 h.hosted_lut = None
@@ -495,6 +617,32 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
                     h.fa_feed = "lut"
                     concurrent -= 1
         st.ext_in, st.produced, st.z_ext = snapshot
+        # the ALM regained hostable halves; restore it at its placement-
+        # order slot if a scan pruned it while its halves were full
+        if ai not in st.hostable:
+            pos = st.alm_pos[ai]
+            idx = 0
+            while (idx < len(st.hostable)
+                   and st.alm_pos[st.hostable[idx]] < pos):
+                idx += 1
+            st.hostable.insert(idx, ai)
+
+    def free_halves_of(ai: int) -> list:
+        """Hostable halves of an arith ALM (Z-free first) — cached, with
+        the same invalidation points as ``alm_io_cache``."""
+        fh = free_halves_cache.get(ai)
+        if fh is None:
+            fh = []
+            for h in alms[ai].halves:
+                if h.hosted_lut is not None:
+                    continue
+                if h.fa is None:
+                    fh.append((h, False))   # no Z needed
+                elif not h.absorbed:
+                    fh.append((h, True))    # needs Z conversion
+            fh.sort(key=lambda x: x[1])     # prefer Z-free halves
+            free_halves_cache[ai] = fh
+        return fh
 
     def _host_in_one_alm(lut_list: list[int], lb_idx: int,
                          strict_z: bool = False) -> bool:
@@ -504,32 +652,24 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
         dbg = LAST_PACK_DEBUG
         dbg["host_calls"] = dbg.get("host_calls", 0) + 1
         st = lbs_state[lb_idx]
-        any_free = False
-        for ai in st.alm_ids:
-            if _has_free_half(alms[ai]):
-                any_free = True
-                break
-        if not any_free:
-            host_capacity_lbs.discard(lb_idx)
-            return False
-        for ai in st.alm_ids:
+        hostable = st.hostable
+        i = 0
+        while i < len(hostable):
+            ai = hostable[i]
             alm = alms[ai]
-            if not alm.is_arith or alm.lut6 is not None:
+            if alm.lut6 is not None:
+                hostable.pop(i)       # 6-LUT span: never hostable again
                 continue
-            free_halves = []
-            for h in alm.halves:
-                if h.hosted_lut is not None:
-                    continue
-                if h.fa is None:
-                    free_halves.append((h, False))   # no Z needed
-                elif not h.absorbed:
-                    free_halves.append((h, True))    # needs Z conversion
-            free_halves.sort(key=lambda fh: fh[1])   # prefer Z-free halves
+            free_halves = free_halves_of(ai)
+            if not free_halves:
+                hostable.pop(i)       # filled up; prune (order preserved)
+                continue
+            i += 1
             if len(free_halves) < len(lut_list):
                 dbg["rej_nofree"] = dbg.get("rej_nofree", 0) + 1
                 continue
             # input budget at ALM level: all residents' A-H pins <= 8
-            ah, z = alm.input_signals(net)
+            ah, z, _ = alm_io(ai)
             new_ah = set(ah)
             for li in lut_list:
                 new_ah.update(s for s in net.lut_inputs[li] if s > CONST1)
@@ -540,9 +680,7 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
             moved_z: set[int] = set()
             over_bypass = False
             for h, _ in conv:
-                ci, bi = h.fa
-                ch = net.chains[ci]
-                live = [s for s in (ch.a[bi], ch.b[bi]) if s > CONST1]
+                live = plan.bit_live[h.fa]
                 if len(live) > arch.bypass_inputs:
                     over_bypass = True
                     break
@@ -567,6 +705,8 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
                 dbg["rej_lbin"] = dbg.get("rej_lbin", 0) + 1
                 continue
             # commit
+            alm_io_cache.pop(ai, None)
+            free_halves_cache.pop(ai, None)
             for li, (h, needs_z) in zip(lut_list, free_halves):
                 h.hosted_lut = li
                 lut_site[li] = ai
@@ -577,6 +717,8 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
             new_prod = {net.lut_out[li] for li in lut_list}
             st.add(new_in, new_prod, z_ext)
             return True
+        if not hostable:
+            host_capacity_lbs.discard(lb_idx)
         return False
 
     def host6_in_arith(li: int, lb_idx: int) -> bool:
@@ -594,9 +736,7 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
             over_bypass = False
             for h in alm.halves:
                 if h.fa is not None:
-                    ci, bi = h.fa
-                    ch = net.chains[ci]
-                    live = [s for s in (ch.a[bi], ch.b[bi]) if s > CONST1]
+                    live = plan.bit_live[h.fa]
                     if len(live) > arch.bypass_inputs:
                         over_bypass = True
                         break
@@ -612,6 +752,8 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
             new_in = new_ah | moved_z
             if not st.fits_inputs(new_in - st.produced, z_ext):
                 continue
+            alm_io_cache.pop(ai, None)
+            free_halves_cache.pop(ai, None)
             alm.lut6 = li
             lut_site[li] = ai
             for h in alm.halves:
@@ -622,7 +764,8 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
             return True
         return False
 
-    def materialize_logic_alm(atom) -> int:
+    def materialize_logic_alm(aidx: int) -> int:
+        atom = atoms[aidx]
         kind = atom[0]
         if kind == "pair":
             a, b = atom[1], atom[2]
@@ -630,6 +773,7 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
             ai = len(alms)
             alms.append(alm)
             alm_lb.append(-1)
+            alm_io_cache[ai] = plan.atom_io[aidx]
             lut_site[a] = ai
             lut_site[b] = ai
             return ai
@@ -640,6 +784,7 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
         ai = len(alms)
         alms.append(alm)
         alm_lb.append(-1)
+        alm_io_cache[ai] = plan.atom_io[aidx]
         if kind == "single6":
             lut_site[atom[1]] = ai
         else:
@@ -647,47 +792,36 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
         return ai
 
     # --- main greedy loop ---------------------------------------------------
-    # Chain runs are placed in *connectivity order*: start from the largest
-    # run, then repeatedly take the unplaced run sharing the most signals
-    # with what is already placed.  Consumer chains land next to their
-    # producers, so Z conversions ride the free local/direct-link taps.
-    run_idxs = [i for i, a in enumerate(atoms) if a[0] == "run"]
-    run_order: list[int] = []
-    if run_idxs:
-        remaining = set(run_idxs)
-        overlap: dict[int, int] = {i: 0 for i in run_idxs}
-        run_sig_cache = {i: atom_sigs(atoms[i]) for i in run_idxs}
-        sig2runs: dict[int, list[int]] = defaultdict(list)
-        for i in run_idxs:
-            for s in run_sig_cache[i]:
-                sig2runs[s].append(i)
-        first = max(remaining, key=lambda i: len(chain_alm_runs[atoms[i][1]]))
-        run_order.append(first)
-        remaining.discard(first)
-        for s in run_sig_cache[first]:
-            for j in sig2runs[s]:
-                if j in remaining:
-                    overlap[j] += 1
-        while remaining:
-            nxt = max(remaining,
-                      key=lambda i: (overlap[i],
-                                     len(chain_alm_runs[atoms[i][1]])))
-            run_order.append(nxt)
-            remaining.discard(nxt)
-            for s in run_sig_cache[nxt]:
-                for j in sig2runs[s]:
-                    if j in remaining:
-                        overlap[j] += 1
-    lut_order = [i for i, a in enumerate(atoms) if a[0] != "run"]
-    rng.shuffle(lut_order)
+    # Atom orders come precomputed from the plan: chain runs in
+    # connectivity order, LUT atoms in the seeded shuffle.  The frontier
+    # is a lazy max-heap over (score, first-seen order): the legacy dict
+    # scan picked the earliest-inserted atom among the max scores, and
+    # (-score, seen, atom) heap entries reproduce exactly that winner —
+    # stale entries (superseded scores, placed atoms) pop through.
+    # Scores/first-seen live in flat lists (atom-indexed) — the bump
+    # loop is the hottest spot of a re-clustering.
+    n_atoms = len(atoms)
+    frontier_scores = [0] * n_atoms
+    frontier_seen = [-1] * n_atoms
+    frontier_heap: list[tuple[int, int, int]] = []
+    n_seen = 0
+    eligible = [pull_runs or a[0] != "run" for a in atoms]
+    heappush = heapq.heappush
 
-    frontier_scores: dict[int, int] = {}
-
-    def bump_frontier(sigs: set[int]):
-        for s in sigs:
-            for aidx in sig2atoms.get(s, ()):
-                if not placed[aidx]:
-                    frontier_scores[aidx] = frontier_scores.get(aidx, 0) + 1
+    def bump_frontier(src_aidx: int):
+        nonlocal n_seen
+        for j, cnt in plan.atom_neighbors[src_aidx]:
+            if placed[j]:
+                continue
+            v = frontier_scores[j] + cnt
+            frontier_scores[j] = v
+            seq = frontier_seen[j]
+            if seq < 0:
+                seq = n_seen
+                frontier_seen[j] = seq
+                n_seen += 1
+            if eligible[j]:
+                heappush(frontier_heap, (-v, seq, j))
 
     def place_atom(aidx: int, lb_idx: int | None) -> int | None:
         """Place atom; returns the (possibly new) current LB index."""
@@ -706,32 +840,28 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
                 place_alm(ai, tgt)
                 lb_idx = tgt
             placed[aidx] = True
-            bump_frontier(atom_sigs(atom))
+            bump_frontier(aidx)
             return lb_idx
         # LUT atoms: try concurrent hosting — connectivity-driven first
         # (current LB, then LBs producing this atom's inputs, then LBs
         # consuming its outputs), then VPR-style unrelated clustering over
-        # any LB with spare arithmetic halves.
+        # any LB with spare arithmetic halves.  The probe sequence comes
+        # precompiled from the plan (chain-bit consumer sites are fixed
+        # skeleton ALMs); only the producer/hosting lookups are dynamic.
         cand_lbs: list[int] = []
         if lb_idx is not None:
             cand_lbs.append(lb_idx)
-        for li in atom[1:]:
-            if isinstance(li, int):
-                for s in net.lut_inputs[li]:
-                    psite = prod_site.get(s)
-                    if psite is not None and alm_lb[psite] >= 0:
-                        cand_lbs.append(alm_lb[psite])
-                for cons in sig_consumers.get(net.lut_out[li], ()):
-                    if cons[0] == "chain":
-                        cai = chain_site.get((cons[1], cons[2]))
-                        if cai is not None and alm_lb[cai] >= 0:
-                            cand_lbs.append(alm_lb[cai])
-                    else:
-                        csite = lut_site.get(cons[1])
-                        if csite is not None and alm_lb[csite] >= 0:
-                            cand_lbs.append(alm_lb[csite])
+        for op, payload in plan.atom_cand_ops[aidx]:
+            if op == 0:
+                site = prod_site[payload]
+            elif op == 1:
+                site = payload
+            else:
+                site = lut_site.get(payload, -1)
+            if site >= 0 and alm_lb[site] >= 0:
+                cand_lbs.append(alm_lb[site])
         if allow_unrelated and arch.concurrent:
-            cand_lbs.extend(list(host_capacity_lbs)[:64])
+            cand_lbs.extend(islice(host_capacity_lbs, 64))
         for strict in strict_phases:
             seen_lb: set[int] = set()
             for cand in cand_lbs:
@@ -747,9 +877,9 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
                     ok = host6_in_arith(atom[1], cand)
                 if ok:
                     placed[aidx] = True
-                    bump_frontier(atom_sigs(atom))
+                    bump_frontier(aidx)
                     return lb_idx if lb_idx is not None else cand
-        ai = materialize_logic_alm(atom)
+        ai = materialize_logic_alm(aidx)
         tgt = lb_idx
         if tgt is None or not try_fit_alm(ai, tgt):
             # look for any LB with room before opening a new one
@@ -762,11 +892,11 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
                 tgt = open_lb()
         place_alm(ai, tgt)
         placed[aidx] = True
-        bump_frontier(atom_sigs(atom))
+        bump_frontier(aidx)
         return tgt
 
     cur_lb: int | None = None
-    for aidx in run_order:
+    for aidx in plan.run_order:
         if placed[aidx]:
             continue
         cur_lb = place_atom(aidx, cur_lb)
@@ -775,24 +905,21 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
         # what lets Z pins ride the free direct-link taps.
         while True:
             cand = None
-            best = 0
-            for k, v in list(frontier_scores.items()):
-                if placed[k]:
-                    frontier_scores.pop(k, None)
+            while frontier_heap:
+                negv, _, j = frontier_heap[0]
+                if placed[j] or frontier_scores[j] != -negv:
+                    heapq.heappop(frontier_heap)   # stale or already placed
                     continue
-                if not pull_runs and atoms[k][0] == "run":
-                    continue
-                if v > best:
-                    best, cand = v, k
+                cand = j
+                break
             if cand is None or cur_lb is None:
                 break
             before = len(lbs_state)
             cur_lb = place_atom(cand, cur_lb)
-            frontier_scores.pop(cand, None)
             if len(lbs_state) != before:
                 break  # spilled into a new LB; go back to chain order
 
-    for aidx in lut_order:
+    for aidx in plan.lut_order:
         if not placed[aidx]:
             cur_lb = place_atom(aidx, cur_lb)
 
@@ -811,9 +938,7 @@ def _cluster(net, arch, alms, chain_alm_runs, pairs, singles6, singles5,
                     if (h.fa is None or h.fa_feed != "lut" or h.absorbed
                             or h.hosted_lut is not None):
                         continue
-                    ci, bi = h.fa
-                    ch = net.chains[ci]
-                    live = [s for s in (ch.a[bi], ch.b[bi]) if s > CONST1]
+                    live = plan.bit_live[h.fa]
                     # each live operand *pin* needs its own bypass path,
                     # even when both pins carry the same signal
                     if len(live) > arch.bypass_inputs:

@@ -1,0 +1,162 @@
+"""Incremental repacking: one arch-invariant prefix, many re-clusterings.
+
+:func:`repro.core.packing.pack` is two stages with very different
+architecture sensitivity:
+
+* the **prefix** — absorption pre-pass, chain slotting, LUT pairing and
+  the cluster plan (atom list, connectivity indexes, placement orders) —
+  depends only on the netlist and the placement seed, never on cluster
+  geometry (``alms_per_lb``, ``lb_inputs``, ``ext_pin_util``,
+  ``z_sources``);
+* the **clustering** stage replays the shared atom list under one grid
+  point's LB budgets and is the only part that must re-run per
+  structural class.
+
+:func:`pack_prefix` computes the first once per (circuit, seed);
+:func:`repack` replays the second against any :class:`ArchParams` row.
+``pack(net, arch, seed)`` is now literally ``repack(pack_prefix(net,
+seed), arch)``, so both paths are byte-identical by construction — the
+structural-grid oracle-parity tests (``tests/core/test_repack.py``) and
+the pinned Fig-5/Table-III numbers hold it there.
+
+A sweep over the cluster-geometry axes therefore costs::
+
+    prefixes:    n_circuits                  (once, the expensive part)
+    reclusters:  n_circuits x n_classes      (cheap greedy replay)
+
+instead of ``n_circuits x n_classes`` full packs, and the lowering side
+pairs with it: :meth:`PackedCircuit.lower_ir` accepts a ``template``
+PackIR from any sibling class and patches only the columns clustering
+can change (sites, LBs, edge delay classes, ALM modes) instead of
+re-levelizing the whole netlist (see
+:func:`repro.core.pack_ir.lower_pack_ir_incremental`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .alm import ArchParams
+from .netlist import CONST1, Netlist
+from .packing import (ALM, LAST_PACK_DEBUG, ClusterPlan, Half, PackedCircuit,
+                      _build_cluster_plan, _cluster, _fanout_counts,
+                      _pair_luts)
+
+
+@dataclass
+class PackPrefix:
+    """The arch-invariant prefix of a pack: chain-slotted ALM skeleton,
+    absorbed-LUT assignment, LUT pairing and the cluster plan.  Immutable
+    by convention — :func:`repack` copies every structure clustering
+    mutates, so one prefix serves any number of re-clusterings."""
+
+    net: Netlist
+    seed: int
+    alms: list[ALM]                      # chain-slotted arith skeleton
+    chain_site: dict[tuple[int, int], int]
+    lut_site: dict[int, int]             # absorbed LUTs only, at this stage
+    chain_alm_runs: list[list[int]]
+    pairs: list[tuple[int, int]]
+    singles6: list[int]
+    singles5: list[int]
+    plan: ClusterPlan
+    #: first fully-lowered PackIR of this prefix (any structural class) —
+    #: the template sibling classes patch instead of re-lowering
+    ir_template: object | None = field(default=None, repr=False)
+
+
+def pack_prefix(net: Netlist, seed: int = 0) -> PackPrefix:
+    """Steps 1-3 of :func:`repro.core.packing.pack` (absorption, chain
+    slotting, LUT pairing) plus the cluster plan — everything that does
+    not depend on the architecture."""
+    import random
+
+    rng = random.Random(seed)
+    fanout = _fanout_counts(net)
+
+    # --- 1. absorption pre-pass -------------------------------------------
+    absorbed_of: dict[tuple[int, int], list[int]] = {}
+    lut_absorbed: set[int] = set()
+    for ci, ch in enumerate(net.chains):
+        for bi in range(len(ch.sums)):
+            got: list[int] = []
+            for s in (ch.a[bi], ch.b[bi]):
+                if s <= CONST1:
+                    continue
+                drv = net.driver.get(s)
+                if (drv is not None and drv[0] == "lut"
+                        and fanout[s] == 1
+                        and len(net.lut_inputs[drv[1]]) <= 4
+                        and drv[1] not in lut_absorbed):
+                    got.append(drv[1])
+                    lut_absorbed.add(drv[1])
+            if got:
+                absorbed_of[(ci, bi)] = got
+
+    free_luts = [i for i in range(net.n_luts) if i not in lut_absorbed]
+
+    # --- 2. chain slotting --------------------------------------------------
+    alms: list[ALM] = []
+    chain_site: dict[tuple[int, int], int] = {}
+    lut_site: dict[int, int] = {}
+    chain_alm_runs: list[list[int]] = []  # per chain, its ALM indices
+    for ci, ch in enumerate(net.chains):
+        run: list[int] = []
+        for lo in range(0, len(ch.sums), 2):
+            halves = []
+            for bi in (lo, lo + 1):
+                if bi < len(ch.sums):
+                    ab = absorbed_of.get((ci, bi), [])
+                    halves.append(Half(fa=(ci, bi), fa_feed="lut", absorbed=ab))
+                else:
+                    halves.append(Half())
+            alm = ALM(halves=(halves[0], halves[1]), is_arith=True)
+            ai = len(alms)
+            alms.append(alm)
+            run.append(ai)
+            for bi in (lo, lo + 1):
+                if bi < len(ch.sums):
+                    chain_site[(ci, bi)] = ai
+                    for li in absorbed_of.get((ci, bi), []):
+                        lut_site[li] = ai
+        chain_alm_runs.append(run)
+
+    # --- 3. LUT pairing -----------------------------------------------------
+    pairs, singles6, singles5 = _pair_luts(net, free_luts, rng)
+
+    # --- cluster plan (atom list, connectivity, placement orders) -----------
+    plan = _build_cluster_plan(net, alms, chain_alm_runs, chain_site,
+                               pairs, singles6, singles5, rng)
+
+    return PackPrefix(net=net, seed=seed, alms=alms, chain_site=chain_site,
+                      lut_site=lut_site, chain_alm_runs=chain_alm_runs,
+                      pairs=pairs, singles6=singles6, singles5=singles5,
+                      plan=plan)
+
+
+def _copy_skeleton(alms: list[ALM]) -> list[ALM]:
+    """Fresh ALM objects for one re-clustering — clustering mutates
+    halves (hosting, Z conversion) and appends logic ALMs, so the
+    prefix's skeleton must never be handed out directly."""
+    out: list[ALM] = []
+    for alm in alms:
+        halves = tuple(Half(fa=h.fa, fa_feed=h.fa_feed,
+                            absorbed=h.absorbed,  # shared: never mutated
+                            hosted_lut=h.hosted_lut)
+                       for h in alm.halves)
+        out.append(ALM(halves=halves, lut6=alm.lut6, is_arith=alm.is_arith))
+    return out
+
+
+def repack(prefix: PackPrefix, arch: ArchParams,
+           allow_unrelated: bool = True, strict_phases: tuple = (False,),
+           pull_runs: bool = False) -> PackedCircuit:
+    """Replay the clustering stage of ``pack()`` under ``arch``'s LB
+    budgets.  Byte-identical to ``pack(prefix.net, arch, prefix.seed)``
+    by construction, at the cost of one skeleton copy instead of the
+    whole prefix."""
+    LAST_PACK_DEBUG.clear()
+    return _cluster(prefix.net, arch, _copy_skeleton(prefix.alms),
+                    prefix.chain_alm_runs, prefix.plan,
+                    dict(prefix.chain_site), dict(prefix.lut_site),
+                    allow_unrelated=allow_unrelated,
+                    strict_phases=strict_phases, pull_runs=pull_runs)

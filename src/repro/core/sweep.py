@@ -84,51 +84,96 @@ def _envelope_groups(irs, max_groups: int) -> list[list[int]]:
 def sweep_suite(nets, archs: Sequence[ArchParams], seed: int = 0,
                 max_buckets: int = 3, max_groups: int = 4,
                 backend: str = "jax", packs: dict | None = None,
-                programs: dict | None = None) -> SweepResult:
+                programs: dict | None = None,
+                prefixes: dict | None = None) -> SweepResult:
     """Pack + re-time ``nets`` under every arch of the grid.
 
     ``nets`` is a list of netlists or a ``{suite_name: [netlists]}`` dict.
-    Packing happens once per (circuit, structural class) at ``seed``;
-    timing runs as <= ``max_groups`` batched jit programs per class
+    The arch-invariant packing prefix (absorption, chain slotting, LUT
+    pairing, cluster plan — :func:`repro.core.repack.pack_prefix`) is
+    computed once per circuit at ``seed`` and *re-clustered* once per
+    structural class, so a grid over pack-affecting knobs (``alms_per_lb``,
+    ``lb_inputs``, ``ext_pin_util``, ``z_sources``, bypass width) costs
+    ``n_circuits`` prefixes + cheap re-clusterings instead of
+    ``n_circuits x n_classes`` full packs.  Lowering is incremental too:
+    the first class lowers each circuit fully, sibling classes patch that
+    template's placement-derived columns
+    (:func:`repro.core.pack_ir.lower_pack_ir_incremental`).
+
+    Timing runs as <= ``max_groups`` batched jit programs per class
     (circuits clustered by envelope compatibility so small members do not
     pad to the widest one; ``backend="jax"``) or as per-circuit numpy
     level walks (``backend="numpy"`` — still vectorized, no compile;
-    useful for tiny grids).  Pass ``packs`` and ``programs`` (plain
-    dicts, caller-owned) to reuse pack results and compiled timing
-    programs across sweeps over the *same* circuit list: packs are keyed
-    by ``(circuit index, structural_key, seed)``, programs by
-    ``(structural_key, seed, max_buckets, max_groups)``.  A warm sweep
-    then pays only the batched executions — delay tables are data, not
-    shapes.
+    useful for tiny grids).
+
+    Pass ``packs``, ``programs`` and ``prefixes`` (plain dicts,
+    caller-owned) to reuse pack results, compiled timing programs and
+    packing prefixes across sweeps.  All caches key on the netlists'
+    *content digest* (plus structural key / seed / grouping knobs), so a
+    cache warmed with one circuit list simply misses — never silently
+    serves wrong entries — when reused with a different list.  A warm
+    sweep then pays only the batched executions — delay tables are data,
+    not shapes.
     """
+    from .repack import pack_prefix, repack
+
     suites, flat = _flatten(nets)
     archs = list(archs)
     classes = group_archs_by_structure(archs)
     records: list[list[dict | None]] = [[None] * len(archs) for _ in flat]
-    wall = {"pack_s": 0.0, "lower_s": 0.0, "build_s": 0.0, "timing_s": 0.0}
+    wall = {"pack_s": 0.0, "prefix_s": 0.0, "recluster_s": 0.0,
+            "lower_s": 0.0, "build_s": 0.0, "timing_s": 0.0}
     if packs is None:
         packs = {}
     if programs is None:
         programs = {}
-    for idx_list in classes:
-        rep = archs[idx_list[0]]
-        skey = rep.structural_key()
+    if prefixes is None:
+        prefixes = {}
+    digests = [net.content_digest() for net in flat]
+    suite_key = tuple(digests)
+    class_reps = [archs[idx[0]] for idx in classes]
+    skeys = [rep.structural_key() for rep in class_reps]
+    # --- phase 1: pack + lower, circuit-outer ---------------------------
+    # One prefix per circuit, then its re-clusterings and IR patches for
+    # every class back to back: the prefix's plan (and the IR template)
+    # stay cache-hot across all classes, which a class-outer loop — one
+    # touch per prefix per class, 16 circuits apart — would forfeit.
+    all_irs: list[list] = [[] for _ in classes]
+    for g, net in enumerate(flat):
+        prefix = prefixes.get((digests[g], seed))
         t0 = time.perf_counter()
-        class_packs: list[PackedCircuit] = []
-        for g, net in enumerate(flat):
-            p = packs.get((g, skey, seed))
+        circ_packs: list[PackedCircuit] = []
+        for c, rep in enumerate(class_reps):
+            p = packs.get((digests[g], skeys[c], seed))
             if p is None:
-                p = pack(net, rep, seed=seed)
-                packs[(g, skey, seed)] = p
-            class_packs.append(p)
+                if prefix is None:
+                    t1 = time.perf_counter()
+                    prefix = pack_prefix(net, seed=seed)
+                    prefixes[(digests[g], seed)] = prefix
+                    wall["prefix_s"] += time.perf_counter() - t1
+                t1 = time.perf_counter()
+                p = repack(prefix, rep)
+                wall["recluster_s"] += time.perf_counter() - t1
+                packs[(digests[g], skeys[c], seed)] = p
+            circ_packs.append(p)
         wall["pack_s"] += time.perf_counter() - t0
         t0 = time.perf_counter()
-        irs = [p.lower_ir() for p in class_packs]
+        for c, p in enumerate(circ_packs):
+            tpl = prefix.ir_template if prefix is not None else None
+            ir = p.lower_ir(template=tpl)
+            if prefix is not None and prefix.ir_template is None:
+                prefix.ir_template = ir
+            all_irs[c].append(ir)
         wall["lower_s"] += time.perf_counter() - t0
+    # --- phase 2: batched timing, class-outer ---------------------------
+    for c, idx_list in enumerate(classes):
+        skey = skeys[c]
+        irs = all_irs[c]
         tables = np.stack([archs[i].delay_table() for i in idx_list])
         if backend == "jax":
             t0 = time.perf_counter()
-            progs = programs.get((skey, seed, max_buckets, max_groups))
+            progs = programs.get(
+                (suite_key, skey, seed, max_buckets, max_groups))
             if progs is None:
                 groups = _envelope_groups(irs, max_groups)
                 progs = [(members,
@@ -136,7 +181,8 @@ def sweep_suite(nets, archs: Sequence[ArchParams], seed: int = 0,
                               [irs[i] for i in members],
                               max_buckets=max_buckets))
                          for members in groups]
-                programs[(skey, seed, max_buckets, max_groups)] = progs
+                programs[(suite_key, skey, seed, max_buckets,
+                          max_groups)] = progs
             wall["build_s"] += time.perf_counter() - t0
             t0 = time.perf_counter()
             cps = np.zeros((len(irs), len(idx_list)))
@@ -170,7 +216,16 @@ def sweep_suite(nets, archs: Sequence[ArchParams], seed: int = 0,
 
 
 def _geomean(xs):
-    xs = [max(float(x), 1e-12) for x in xs]
+    xs = [float(x) for x in xs]
+    bad = [x for x in xs if not x > 0.0 or not np.isfinite(x)]
+    if bad:
+        # a non-positive (or NaN/inf) metric ratio is never valid — it
+        # means a record upstream is broken; clamping it (the old
+        # behaviour) poisoned the whole frontier row by orders of
+        # magnitude instead of surfacing the bad record
+        raise ValueError(
+            f"geomean over metric ratios got non-positive/non-finite "
+            f"values {bad[:4]!r} — a sweep record is corrupt")
     return float(np.exp(np.mean(np.log(xs))))
 
 

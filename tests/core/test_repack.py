@@ -1,0 +1,171 @@
+"""Incremental repacking engine: prefix/re-cluster equivalence to full
+``pack()`` across the structural grid, incremental ``lower_ir`` parity,
+and byte-stability pins on the canonical archs.
+
+The contract is *identity*, not closeness: ``repack(pack_prefix(net,
+seed), arch)`` must reproduce ``pack(net, arch, seed)`` exactly (same
+ALM graph, same sites, same oracle timing record), and the incremental
+IR patch must equal a fresh lowering array for array.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.alm import ARCHS, arch_grid, make_arch
+from repro.core.circuits import kratos_gemm, sha_like, vtr_mixed
+from repro.core.equiv import check_pack_equivalence
+from repro.core.pack_ir import (PackIR, lower_pack_ir,
+                                lower_pack_ir_incremental)
+from repro.core.packing import pack
+from repro.core.repack import pack_prefix, repack
+from repro.core.timing import analyze_oracle
+
+from test_flow import random_netlist
+
+#: a small grid that exercises every structural axis (bypass width,
+#: LB capacity, LB inputs, pin utilization) — each point is its own
+#: structural class
+STRUCT_GRID = [
+    ARCHS["baseline"],
+    ARCHS["dd5"],
+    ARCHS["dd6"],
+    make_arch("dd5_a8", bypass_inputs=2, alms_per_lb=8),
+    make_arch("dd5_i48", bypass_inputs=2, lb_inputs=48),
+    make_arch("b0_a8_u70", bypass_inputs=0, alms_per_lb=8,
+              ext_pin_util=0.7),
+]
+
+
+def _assert_same_pack(a, b):
+    """Structural identity of two PackedCircuits (same object graph)."""
+    assert a.n_alms == b.n_alms and a.n_lbs == b.n_lbs
+    assert a.concurrent_luts == b.concurrent_luts
+    assert a.lut_site == b.lut_site
+    assert a.chain_site == b.chain_site
+    assert a.alm_lb == b.alm_lb
+    for x, y in zip(a.alms, b.alms):
+        assert x.lut6 == y.lut6 and x.is_arith == y.is_arith
+        for hx, hy in zip(x.halves, y.halves):
+            assert hx.fa == hy.fa and hx.fa_feed == hy.fa_feed
+            assert hx.absorbed == hy.absorbed
+            assert hx.hosted_lut == hy.hosted_lut
+    assert [lb.alms for lb in a.lbs] == [lb.alms for lb in b.lbs]
+
+
+def _assert_same_ir(a: PackIR, b: PackIR):
+    for f in dataclasses.fields(PackIR):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if f.name in ("lut_levels", "chain_levels"):
+            assert len(va) == len(vb)
+            for x, y in zip(va, vb):
+                for g in dataclasses.fields(type(x)):
+                    assert np.array_equal(getattr(x, g.name),
+                                          getattr(y, g.name)), \
+                        (f.name, g.name)
+        elif isinstance(va, np.ndarray):
+            assert np.array_equal(va, vb), f.name
+        else:
+            assert va == vb, f.name
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_repack_equals_full_pack_across_structural_grid(seed):
+    """One prefix, re-clustered under every structural grid point, must
+    equal a from-scratch ``pack()`` — the invariant the sweep engine's
+    prefix sharing rests on.  Every repacked circuit is also
+    equivalence-gated against its source netlist."""
+    for mk in (lambda: kratos_gemm(m=4, n=4, width=4, sparsity=0.5),
+               lambda: sha_like(rounds=1)):
+        net = mk()
+        prefix = pack_prefix(net, seed=seed)
+        for arch in STRUCT_GRID:
+            full = pack(net, arch, seed=seed)
+            inc = repack(prefix, arch)
+            _assert_same_pack(full, inc)
+            assert (analyze_oracle(full)["critical_path_ps"]
+                    == analyze_oracle(inc)["critical_path_ps"])
+        rep = check_pack_equivalence(net, STRUCT_GRID[3], seed=seed)
+        assert rep["equivalent"]
+
+
+def test_repack_prefix_is_reusable():
+    """Re-clustering must not leak state into the prefix: repeated
+    repacks from one prefix (same and different archs, interleaved) are
+    identical to each other and to fresh packs."""
+    net = vtr_mixed(logic_nodes=150, adders=2)
+    prefix = pack_prefix(net, seed=0)
+    first = repack(prefix, ARCHS["dd5"])
+    repack(prefix, ARCHS["baseline"])       # interleave another class
+    repack(prefix, make_arch("a8", bypass_inputs=2, alms_per_lb=8))
+    again = repack(prefix, ARCHS["dd5"])
+    _assert_same_pack(first, again)
+    _assert_same_pack(again, pack(net, ARCHS["dd5"], seed=0))
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_incremental_lower_ir_matches_fresh(seed):
+    """Column-patched lowering (template from a sibling structural
+    class) == fresh lowering, every column, every level table."""
+    net = random_netlist(seed)
+    prefix = pack_prefix(net, seed=0)
+    template = None
+    for arch in STRUCT_GRID:
+        p = repack(prefix, arch)
+        fresh = lower_pack_ir(p)
+        if template is None:
+            template = fresh
+            continue
+        _assert_same_ir(fresh, lower_pack_ir_incremental(p, template))
+
+
+def test_incremental_lower_ir_rejects_wrong_template():
+    net_a = random_netlist(1)
+    net_b = random_netlist(2)
+    tpl = pack(net_a, ARCHS["dd5"], seed=0).lower_ir()
+    p = pack(net_b, ARCHS["dd5"], seed=0)
+    with pytest.raises(ValueError):
+        lower_pack_ir_incremental(p, tpl)
+
+
+def test_lower_ir_template_kwarg():
+    """``PackedCircuit.lower_ir(template=...)`` is the incremental mode
+    the sweep engine drives; it must agree with the cached full path."""
+    net = kratos_gemm(m=4, n=4, width=4, sparsity=0.5)
+    prefix = pack_prefix(net, seed=0)
+    tpl = repack(prefix, ARCHS["baseline"]).lower_ir()
+    p = repack(prefix, ARCHS["dd5"])
+    via_template = p.lower_ir(cache=False, template=tpl)
+    _assert_same_ir(p.lower_ir(), via_template)
+
+
+@pytest.mark.parametrize("arch_name", ["baseline", "dd5", "dd6"])
+def test_repack_reproduces_pinned_table3_numbers(arch_name):
+    """The pre-refactor Fig-5/Table-III pins (single source of truth in
+    test_timing_vec._PINS), re-asserted through the prefix+repack path
+    so the refactored pack() stays byte-stable."""
+    from test_timing_vec import _PINS
+
+    net = sha_like(rounds=1)
+    rec = analyze_oracle(repack(pack_prefix(net, seed=0), ARCHS[arch_name]))
+    cp, alms, area, adp = _PINS[(net.name, arch_name)]
+    assert rec["critical_path_ps"] == cp
+    assert rec["alms"] == alms
+    assert rec["area_mwta"] == area
+    assert rec["adp"] == adp
+
+
+def test_structural_axes_change_packs():
+    """The geometry axes really are pack-affecting: shrinking the LB
+    capacity produces more LBs; the structural key separates the
+    classes; the grid dedups and names them distinctly."""
+    net = kratos_gemm(m=5, n=5, width=5, sparsity=0.5)
+    p10 = pack(net, ARCHS["dd5"], seed=0)
+    a8 = make_arch("dd5_a8", bypass_inputs=2, alms_per_lb=8)
+    p8 = pack(net, a8, seed=0)
+    assert p8.n_lbs > p10.n_lbs
+    assert a8.structural_key() != ARCHS["dd5"].structural_key()
+    grid = arch_grid(alms_per_lb=(8, 10), lb_inputs=(48, 60))
+    assert len(grid) == 4 * 7            # geometry axes multiply the grid
+    assert len({a.name for a in grid}) == len(grid)
+    assert len({a.structural_key() for a in grid}) == 4 * 5

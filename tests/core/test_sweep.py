@@ -92,6 +92,121 @@ def test_pack_cache_is_seed_keyed():
             == fresh.records[0][0]["critical_path_ps"])
 
 
+def test_pack_cache_is_content_keyed():
+    """Regression (the old keys were list positions): a packs cache
+    warmed with one circuit list, passed to a sweep over a *different*
+    list, must miss and repack — never silently reuse the other
+    circuit's pack and report its metrics."""
+    net_a = kratos_gemm(m=4, n=4, width=4, sparsity=0.5)
+    net_b = sha_like(rounds=1)
+    grid = [ARCHS["dd5"]]
+    pk: dict = {}
+    sweep_suite([net_a], grid, seed=0, backend="numpy", packs=pk)
+    warmed = dict(pk)
+    res_b = sweep_suite([net_b], grid, seed=0, backend="numpy", packs=pk)
+    fresh_b = sweep_suite([net_b], grid, seed=0, backend="numpy")
+    assert (res_b.records[0][0]["critical_path_ps"]
+            == fresh_b.records[0][0]["critical_path_ps"])
+    assert (res_b.records[0][0]["area_mwta"]
+            == fresh_b.records[0][0]["area_mwta"])
+    # and the warmed entries were misses, not hits: new keys were added
+    assert len(pk) > len(warmed)
+    # keys are content digests — independent of list position
+    res_both = sweep_suite([net_b, net_a], grid, seed=0, backend="numpy",
+                           packs=pk)   # b now at index 0, a at index 1
+    assert (res_both.records[0][0]["critical_path_ps"]
+            == fresh_b.records[0][0]["critical_path_ps"])
+
+
+def test_program_cache_is_suite_keyed():
+    """The compiled-program cache must also key on the circuit list's
+    content: reusing it with a different suite rebuilds instead of
+    running another suite's (wrong-shaped) program."""
+    net_a = kratos_gemm(m=4, n=4, width=4, sparsity=0.5)
+    net_b = sha_like(rounds=1)
+    grid = [ARCHS["dd5"]]
+    progs: dict = {}
+    sweep_suite([net_a], grid, programs=progs)
+    n = len(progs)
+    res_b = sweep_suite([net_b], grid, programs=progs)
+    assert len(progs) == 2 * n
+    fresh_b = sweep_suite([net_b], grid)
+    assert (res_b.records[0][0]["critical_path_ps"]
+            == fresh_b.records[0][0]["critical_path_ps"])
+
+
+def test_sweep_prefix_sharing_structural_axes():
+    """A cluster-geometry sweep (every point its own structural class)
+    shares one prefix per circuit and stays bit-identical to per-point
+    ``analyze_oracle`` on from-scratch packs."""
+    nets = [kratos_gemm(m=4, n=4, width=4, sparsity=0.5),
+            random_netlist(6)]
+    grid = [make_arch("g_a8", bypass_inputs=2, alms_per_lb=8),
+            make_arch("g_a10", bypass_inputs=2, alms_per_lb=10),
+            make_arch("g_i48", bypass_inputs=2, lb_inputs=48),
+            make_arch("g_b0a8", bypass_inputs=0, alms_per_lb=8)]
+    prefixes: dict = {}
+    res = sweep_suite(nets, grid, backend="numpy", prefixes=prefixes)
+    assert res.n_classes == len(grid)
+    assert len(prefixes) == len(nets)      # one prefix per circuit
+    assert oracle_parity(res, nets, grid)
+
+
+def test_geomean_raises_on_nonpositive_ratio():
+    """Regression: a non-positive metric ratio used to be clamped to
+    1e-12 and silently poisoned the frontier row; it must raise."""
+    from repro.core.sweep import _geomean
+
+    assert _geomean([1.0, 2.0, 0.5]) == pytest.approx(1.0)
+    with pytest.raises(ValueError):
+        _geomean([1.0, 0.0, 2.0])
+    with pytest.raises(ValueError):
+        _geomean([1.0, -3.0])
+    with pytest.raises(ValueError):
+        _geomean([float("nan")])
+    # end to end: a corrupted sweep record surfaces instead of skewing
+    nets = [kratos_gemm(m=4, n=4, width=4, sparsity=0.5)]
+    grid = [ARCHS["baseline"], ARCHS["dd5"]]
+    res = sweep_suite(nets, grid, backend="numpy")
+    res.records[0][1]["adp"] = 0.0
+    with pytest.raises(ValueError):
+        adp_frontier(res, baseline="baseline")
+
+
+def test_timing_wall_scope_reports_once():
+    """Regression: nested accounting (an outer accounted region driving
+    ``analyze``/``sweep_suite``, which record themselves) used to add
+    both layers to TIMING_WALL; scoped accounting commits exactly one
+    outermost span."""
+    from repro.core.timing import (analyze, read_timing_wall,
+                                   record_timing_wall, reset_timing_wall,
+                                   timing_section)
+
+    packed = pack(kratos_gemm(m=4, n=4, width=4, sparsity=0.5),
+                  ARCHS["dd5"], seed=0)
+    reset_timing_wall()
+    with timing_section():
+        analyze(packed)                   # would add its own span pre-fix
+        record_timing_wall(1e6, calls=3)  # simulated nested section
+    w = read_timing_wall()
+    # the nested gigasecond never reaches the global counter — only the
+    # outer section's measured span commits (calls still aggregate)
+    assert w["s"] < 1.0
+    assert w["calls"] == 4
+    # un-scoped behaviour unchanged
+    reset_timing_wall()
+    analyze(packed)
+    analyze(packed)
+    assert read_timing_wall()["calls"] == 2
+    # measure=False sections commit their recorded sub-phases once
+    reset_timing_wall()
+    with timing_section(measure=False):
+        record_timing_wall(2.0, calls=1)
+        with timing_section(measure=False):
+            record_timing_wall(3.0, calls=1)
+    assert read_timing_wall() == {"s": 5.0, "calls": 2}
+
+
 def test_make_arch_z_sources_respects_lb_outputs_override():
     a = make_arch("x", bypass_inputs=2, addmux_fanin=20, lb_outputs=20)
     assert a.z_sources == 20
@@ -120,6 +235,40 @@ def test_flow_sweep_wrapper():
                                    backend="numpy")
     rows = flow.sweep_frontier(res, baseline="baseline")
     assert len(rows) == 1 and rows[0]["arch"] == "dd5"
+
+
+def test_flow_sweep_forwards_max_groups():
+    """Regression: ``flow.sweep_architectures`` used to drop
+    ``max_groups``, so flow callers could neither match a direct
+    ``sweep_suite`` configuration nor hit a programs cache warmed with a
+    non-default grouping."""
+    nets = [random_netlist(4), random_netlist(9)]
+    grid = [ARCHS["baseline"], ARCHS["dd5"]]
+    progs: dict = {}
+    direct = sweep_suite(nets, grid, max_groups=1, programs=progs)
+    n = len(progs)
+    assert n and all(k[4] == 1 for k in progs)   # grouping knob in key
+    via_flow = flow.sweep_architectures(nets, archs=grid, max_groups=1,
+                                        programs=progs)
+    assert len(progs) == n                       # warmed cache was hit
+    for g in range(len(nets)):
+        for k in range(len(grid)):
+            assert (direct.records[g][k]["critical_path_ps"]
+                    == via_flow.records[g][k]["critical_path_ps"])
+
+
+def test_flow_sweep_grid_axes():
+    """The flow wrapper can grow the structural grid directly."""
+    nets = [random_netlist(4)]
+    res = flow.sweep_architectures(
+        nets, backend="numpy",
+        grid_axes={"bypass_inputs": (2,), "addmux_fanin": (10,),
+                   "lut6": (False,), "alms_per_lb": (8, 10)})
+    assert res.archs == ["b2_f10_a8", "b2_f10"]
+    assert res.n_classes == 2
+    with pytest.raises(ValueError):
+        flow.sweep_architectures(nets, archs=[ARCHS["dd5"]],
+                                 grid_axes={"alms_per_lb": (8,)})
 
 
 def test_bypass_width_one_packs_and_verifies():
