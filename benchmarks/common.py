@@ -41,5 +41,35 @@ class Timer:
         self.us = (time.perf_counter() - self.t0) * 1e6
 
 
+def min_of_n(fn, n: int = 3, warmup: int = 0, sample=None):
+    """Best-of-``n`` wall clock of ``fn()`` — the shared timer for every
+    >= 2x perf gate.
+
+    Container timing noise is one-sided (preemption and cache evictions
+    only ever *inflate* a sample), so a gate comparing single samples
+    flakes; the minimum over N ``perf_counter`` runs is the faithful
+    estimate of the code's cost.  ``warmup`` extra calls run untimed
+    first (jit compiles).  ``sample(result, elapsed)`` overrides the
+    measured quantity — e.g. to subtract an inner phase a run reports
+    about itself — otherwise the wall clock of the call is used.
+    Returns ``(best_seconds, best_result)`` — the result of the run that
+    produced the best sample, so anything the caller records about the
+    run (per-phase walls, stats) decomposes the number it sits next to.
+    """
+    best = float("inf")
+    best_result = None
+    for _ in range(warmup):
+        fn()
+    for _ in range(max(n, 1)):
+        t0 = time.perf_counter()
+        result = fn()
+        elapsed = time.perf_counter() - t0
+        s = sample(result, elapsed) if sample is not None else elapsed
+        if s < best:
+            best = s
+            best_result = result
+    return best, best_result
+
+
 def emit(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.0f},{derived}")

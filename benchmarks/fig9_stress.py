@@ -13,13 +13,11 @@ the per-bucket padding waste next to the old single-envelope waste.
 """
 from __future__ import annotations
 
-import time
-
 from repro.core import flow
 from repro.core.alm import BASELINE, DD5
 from repro.core.stress import run_packing_stress, packing_stress_circuit
 
-from .common import Timer, emit
+from .common import Timer, emit, min_of_n
 
 LUT_COUNTS = [0, 50, 100, 150, 200, 250, 300, 350, 400, 450, 500]
 
@@ -68,12 +66,10 @@ def run_eval_benchmark(n_lane_words: int = 8, use_pallas: bool = True,
     plan = plan_netlist(net)
 
     def bench(fn):
-        jax.block_until_ready(fn())  # warmup / compile, fully drained
-        best = float("inf")
-        for _ in range(reps):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn())
-            best = min(best, time.perf_counter() - t0)
+        # min-of-N perf_counter (shared gate timer): one untimed warmup
+        # drains the jit compile, then the best of ``reps`` runs
+        best, _ = min_of_n(lambda: jax.block_until_ready(fn()),
+                           n=reps, warmup=1)
         return best
 
     t_levels = bench(lambda: eval_netlist_jax_levels(

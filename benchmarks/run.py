@@ -94,7 +94,9 @@ def _section(name: str, module: str) -> str:
 
 def smoke() -> int:
     """Fast-tier check: ``pytest -m "not slow"`` + a 2-point arch-grid
-    sweep proven bit-identical to the timing oracle."""
+    sweep proven bit-identical to the timing oracle + the IR-parity step
+    (two circuits lowered ONCE each; eval and timing both proven against
+    their oracles from the same CircuitIR object)."""
     import os
     import subprocess
 
@@ -117,10 +119,21 @@ def smoke() -> int:
         print(f"smoke_sweep,,failed({type(e).__name__}: {e})",
               file=sys.stderr)
         sweep_ok = False
-    ok = tests.returncode == 0 and sweep_ok
+    print("== smoke: IR parity (one lowering serves eval + timing) ==",
+          flush=True)
+    try:
+        from .ir_parity import run as ir_parity_run
+
+        ir_ok = ir_parity_run()["oracle_match"]
+    except Exception as e:  # noqa: BLE001
+        print(f"smoke_ir_parity,,failed({type(e).__name__}: {e})",
+              file=sys.stderr)
+        ir_ok = False
+    ok = tests.returncode == 0 and sweep_ok and ir_ok
     print(f"smoke,,{'ok' if ok else 'failed'}"
           f"(tests={'ok' if tests.returncode == 0 else 'fail'};"
-          f"sweep={'ok' if sweep_ok else 'fail'})")
+          f"sweep={'ok' if sweep_ok else 'fail'};"
+          f"ir_parity={'ok' if ir_ok else 'fail'})")
     return 0 if ok else 1
 
 

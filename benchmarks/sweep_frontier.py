@@ -44,7 +44,7 @@ from repro.core.alm import arch_grid
 from repro.core.sweep import _flatten, adp_frontier, sweep_suite
 from repro.core.timing import analyze_oracle
 
-from .common import Timer, emit, suites
+from .common import Timer, emit, min_of_n, suites
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "perf")
 
@@ -88,12 +88,37 @@ def cluster_geometry(nets, seed: int = 0, smoke: bool = False) -> dict:
     gc_was_enabled = gc.isenabled()
     gc.disable()
     try:
-        res = sweep_suite(nets, grid, seed=seed)
-        t_pack_inc = res.wall["pack_s"]
-        t_lower_inc = res.wall["lower_s"]
+        from repro.core.plan import clear_caches
 
-        # the naive baseline this engine replaces: one full pack (and
-        # one full IR lowering) per (circuit, grid point) — timed,
+        # min-of-N on the gated (cheap) side: container noise only ever
+        # inflates a sample, and an inflated t_pack_inc is what used to
+        # flake the >= 2x gate.  Each wall term takes its own min across
+        # the runs (a sum of per-term mins — mixing one run's best pack
+        # with another run's noisy lower would re-introduce the flake on
+        # the pack-to-IR ratio).  The slow full-per-point baseline below
+        # runs once — its noise can only overstate the baseline, which
+        # never fails the gate spuriously.
+        pack_samples, lower_samples = [], []
+        res = None
+        for _ in range(1 if smoke else 2):
+            # cold semantics per sample: no warm templates / functional
+            # IRs from the previous repetition
+            clear_caches()
+            res = sweep_suite(nets, grid, seed=seed)
+            pack_samples.append(res.wall["pack_s"])
+            lower_samples.append(res.wall["lower_s"])
+        t_pack_inc = min(pack_samples)
+        t_lower_inc = min(lower_samples)
+
+        # the naive baseline this engine replaces: one full pack per
+        # (circuit, grid point), plus a fresh `lower_ir(cache=False)`
+        # per point.  NOTE on the lowering side: since the CircuitIR
+        # unification a "fresh" lowering is the placement patch over the
+        # content-cached functional IR (levelization once per circuit
+        # digest), so t_lower_full_per_point_s measures today's real
+        # fresh-lowering cost, not the pre-PR-5 re-levelize-every-point
+        # cost — the full and incremental lower walls are expected to
+        # converge, and the engine's gate is the pack wall.  Timed,
         # parity-checked against the incremental sweep's record, and
         # dropped (nothing from the per-point baseline is retained)
         _, flat_nets = _flatten(nets)
@@ -156,10 +181,12 @@ def run(smoke: bool = False, verbose: bool = True, seed: int = 0,
     res = sweep_suite(nets, grid, seed=seed, packs=packs, programs=programs)
     t_total_cold = time.perf_counter() - t0
     t_cold = t_total_cold - res.wall["pack_s"]
-    t0 = time.perf_counter()
-    res_warm = sweep_suite(nets, grid, seed=seed, packs=packs,
-                           programs=programs)
-    t_warm = time.perf_counter() - t0 - res_warm.wall["pack_s"]
+    # warm wall feeds the >= 10x gate: min-of-N perf_counter runs (the
+    # shared gate timer), each net of its own pack_s
+    t_warm, res_warm = min_of_n(
+        lambda: sweep_suite(nets, grid, seed=seed, packs=packs,
+                            programs=programs),
+        n=3, sample=lambda r, elapsed: elapsed - r.wall["pack_s"])
 
     # the Python oracle on identical packs: re-tag each structural-class
     # pack with the grid row's delays (delays never change the pack) so

@@ -1,9 +1,11 @@
 #!/bin/sh
 # Fast-tier CI check: CAD-core tests + a 2-point arch-grid sweep + a
 # 2-point structural-axis (cluster-geometry) sweep, all gated on
-# timing-oracle bit-identity.  Equivalent to `python -m benchmarks.run
-# --smoke`; run the full tier-1 line (`python -m pytest -x -q`) before
-# shipping.
+# timing-oracle bit-identity, + the IR-parity step (two circuits lowered
+# ONCE each; eval and timing proven against their oracles from the same
+# CircuitIR object, lowering counters asserting no duplicates).
+# Equivalent to `python -m benchmarks.run --smoke`; run the full tier-1
+# line (`python -m pytest -x -q`) before shipping.
 set -e
 cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \

@@ -30,9 +30,12 @@ Flow
 
 2. :func:`equivalence_report` drives source and physical netlists with the
    same random test-vector lanes (bit-parallel over arbitrary-width python
-   ints, or the fused JAX engine for large circuits) and compares every
-   primary output — plus every re-elaborated internal signal, so a
-   mismatch localizes to the first corrupted node.
+   ints, or — by default for large circuit pairs, ``use_jax="auto"`` —
+   the fused vectorized engine over the unified
+   :class:`~repro.core.circuit_ir.CircuitIR` lowering, shared with every
+   other consumer) and compares every primary output — plus every
+   re-elaborated internal signal, so a mismatch localizes to the first
+   corrupted node.
 
 3. :func:`symbolic_equivalence_report` is the **per-ALM symbolic fast
    path**: every re-elaborated LUT mask is compared truth-table-to-truth-
@@ -394,6 +397,24 @@ def symbolic_equivalence_report(src: Netlist,
 #: bit-parallel python-int evaluation; beyond this, lane simulation remains)
 EXHAUSTIVE_MAX_SUPPORT = 16
 
+#: narrowest support for which a residue cone is closed through the
+#: vectorized evaluator instead of python-int enumeration: the cone pair
+#: is extracted into standalone netlists (support signals -> PIs), lowered
+#: through the unified CircuitIR, and evaluated as ``2^W`` packed lanes.
+#: Measured on the host backend, python ints win at every width up to
+#: :data:`EXHAUSTIVE_MAX_SUPPORT` (0.6s vs 1.4s at W=16) because every
+#: cone has a unique shape, so the jit compile never amortizes — the
+#: default therefore disables the vector path; pass a lower
+#: ``vector_min_support`` where compiles amortize (repeated cone shapes,
+#: parallel backends).  The path is parity- and corruption-tested either
+#: way (``tests/core/test_circuit_ir.py``).
+VECTOR_CONE_MIN_SUPPORT = EXHAUSTIVE_MAX_SUPPORT + 1
+
+#: signal count above which lane simulation routes through the fused JAX
+#: evaluator by default (``use_jax="auto"``) — big re-elaborations are
+#: where the python-int walk dominates equivalence wall time
+VECTOR_SIM_MIN_SIGNALS = 4000
+
 
 def _eval_cone(net: Netlist, targets, var_pat: dict[int, int], mask: int):
     """Bit-parallel evaluation of the cones of ``targets``, treating
@@ -452,6 +473,139 @@ def _eval_cone(net: Netlist, targets, var_pat: dict[int, int], mask: int):
     return {t: ev(t) for t in targets}
 
 
+def _packed_lanes(value: int, n_words: int):
+    """A python int's low ``32 * n_words`` bits as uint32 lane words
+    (little-endian 32-bit chunks) — the evaluator's vector layout."""
+    import numpy as np
+
+    return np.array([(value >> (32 * w)) & 0xFFFFFFFF
+                     for w in range(n_words)], dtype=np.uint32)
+
+
+def _lane_word_mask(n_bits: int, n_words: int):
+    """Per-word mask selecting the low ``n_bits`` of an ``n_words``-word
+    lane vector (the final word may be partial)."""
+    import numpy as np
+
+    mask = np.full(n_words, 0xFFFFFFFF, dtype=np.uint32)
+    rem = n_bits - 32 * (n_words - 1)
+    if rem < 32:
+        mask[-1] = (1 << rem) - 1
+    return mask
+
+
+def _extract_cone_netlist(net: Netlist, targets, support):
+    """Extract the cone of ``targets`` over the cut ``support`` into a
+    standalone :class:`Netlist` whose PIs are the support signals.
+
+    Mirrors :func:`_eval_cone`'s closure semantics exactly: raises
+    ``KeyError`` when a cone leaf is neither a constant, a support
+    variable nor a driven signal, and when the chosen support is not a
+    cut (an emitted node writes a support signal).  Returns
+    ``(mini, sig_map)`` where ``sig_map`` maps original to mini signals.
+    """
+    mini = Netlist(f"{net.name}.cone")
+    pis = mini.add_pi_bus("cut", max(len(support), 1))
+    smap: dict[int, int] = {CONST0: CONST0, CONST1: CONST1}
+    for s, p in zip(support, pis):
+        smap[s] = p
+    support_set = set(support)
+    chain_depth: dict[int, int] = {}   # emitted ripple depth per chain
+
+    def emit_chain(ci: int, hi: int) -> None:
+        ch = net.chains[ci]
+        if hi <= chain_depth.get(ci, -1):
+            return
+        a = [ev(ch.a[b]) for b in range(hi + 1)]
+        b_ = [ev(ch.b[b]) for b in range(hi + 1)]
+        cin = ev(ch.cin)
+        full = hi == len(ch.sums) - 1
+        sums, cout = mini.add_chain(a, b_, cin=cin,
+                                    want_cout=full and ch.cout is not None)
+        for b in range(hi + 1):
+            s = ch.sums[b]
+            if s in support_set:
+                raise KeyError(s)      # support is not a cut
+            smap[s] = sums[b]
+        if cout is not None:
+            if ch.cout in support_set:
+                raise KeyError(ch.cout)
+            smap[ch.cout] = cout
+        chain_depth[ci] = hi
+
+    def ev(s: int) -> int:
+        got = smap.get(s)
+        if got is not None:
+            return got
+        drv = net.driver[s]            # KeyError -> undriven leaf
+        if drv[0] == "lut":
+            # support LUT outputs are pre-seeded into smap (returned as
+            # PIs above), so the cut property holds trivially here — only
+            # chain-written support signals can break it (emit_chain)
+            i = drv[1]
+            ins = tuple(ev(q) for q in net.lut_inputs[i])
+            out = mini.add_lut(ins, net.lut_tt[i])
+            smap[s] = out
+            return out
+        if drv[0] in ("chain", "cout"):
+            ci = drv[1]
+            hi = (drv[2] if drv[0] == "chain"
+                  else len(net.chains[ci].sums) - 1)
+            emit_chain(ci, hi)
+            return smap[s]
+        raise KeyError(s)              # a PI outside the chosen support
+
+    # deepest-first: residue targets list a chain's sums in increasing
+    # bit order, so evaluating in reverse emits each chain once at its
+    # max needed depth instead of re-emitting ever-deeper prefixes
+    # (emit_chain's depth guard keeps any order correct, just slower)
+    for t in reversed(targets):
+        ev(t)
+    mapped = [smap[t] for t in targets]
+    mini.set_po_bus("cone", mapped)
+    return mini, smap
+
+
+def _vector_close_cone(src: Netlist, re_elab: "ReElaboration",
+                       support, outs) -> list:
+    """Close one residue cone through the unified vectorized evaluator:
+    both sides' cones are extracted into standalone netlists (support
+    signals become PIs), lowered via the content-cached CircuitIR, and
+    evaluated bit-parallel over all ``2^W`` assignments as packed uint32
+    lanes.  Returns the mismatching output signals (source side).
+
+    Raises ``KeyError`` exactly where the python-int enumeration would
+    (leaf outside the support / support not a cut) — callers treat that
+    as "unclosed" and fall back.
+    """
+    import numpy as np
+
+    from .eval_jax import eval_netlist_jax
+    from .netlist import tt_var
+
+    sig_map, phys = re_elab.sig_map, re_elab.phys
+    W = len(support)
+    n_words = max(1, (1 << W) // 32)
+
+    def lanes_for(mini):
+        return {pi: (_packed_lanes(tt_var(j, W), n_words) if j < W
+                     else np.zeros(n_words, dtype=np.uint32))
+                for j, pi in enumerate(mini.pis)}
+
+    mini_s, map_s = _extract_cone_netlist(src, outs, support)
+    mini_p, map_p = _extract_cone_netlist(
+        phys, [sig_map[o] for o in outs], [sig_map[s] for s in support])
+    vals_s = np.asarray(eval_netlist_jax(mini_s, lanes_for(mini_s), n_words))
+    vals_p = np.asarray(eval_netlist_jax(mini_p, lanes_for(mini_p), n_words))
+    mask = _lane_word_mask(1 << W, n_words)
+    bad = []
+    for o in outs:
+        d = (vals_s[map_s[o]] ^ vals_p[map_p[sig_map[o]]]) & mask
+        if d.any():
+            bad.append(o)
+    return bad
+
+
 def _residue_node_spec(src: Netlist, entry):
     """(support signals, output signals) of one symbolic-fallback entry."""
     if entry[0] == "lut":
@@ -473,24 +627,29 @@ def _residue_node_spec(src: Netlist, entry):
 
 def exhaustive_residue_report(src: Netlist, re_elab: ReElaboration,
                               residue,
-                              max_support: int = EXHAUSTIVE_MAX_SUPPORT
-                              ) -> dict:
+                              max_support: int = EXHAUSTIVE_MAX_SUPPORT,
+                              vector_min_support: int =
+                              VECTOR_CONE_MIN_SUPPORT) -> dict:
     """Close symbolic-fallback cones by full truth-table enumeration.
 
     Each residue entry (a ``symbolic_equivalence_report`` ``fallback``
     item) is re-checked over *every* assignment of its source-side
-    support: support signals become free variables with
-    ``tt_var``-style bit patterns over ``2^W`` lanes, the source node and
-    its physical counterpart cone are both evaluated bit-parallel, and
-    the outputs are compared — an exhaustive proof, not a sample.  Cones
-    wider than ``max_support``, or whose physical cone reaches a leaf
-    outside the mapped support, stay open (``unclosed``) and fall back to
-    lane simulation exactly as before.
+    support — an exhaustive proof, not a sample.  Narrow cones evaluate
+    bit-parallel over one python int (:func:`_eval_cone`); cones with
+    ``>= vector_min_support`` support inputs run through the unified
+    vectorized evaluator instead (:func:`_vector_close_cone`: both cones
+    extracted into standalone netlists with the support as PIs, lowered
+    via the shared CircuitIR, ``2^W`` assignments as packed uint32
+    lanes), falling back to python ints if extraction cannot close the
+    cone.  Cones wider than ``max_support``, or whose physical cone
+    reaches a leaf outside the mapped support, stay open (``unclosed``)
+    and fall back to lane simulation exactly as before.
     """
     from .netlist import tt_var
 
     sig_map, phys = re_elab.sig_map, re_elab.phys
     proven = 0
+    vector_cones = 0
     unclosed: list = []
     mismatches: list[dict] = []
     for entry in residue:
@@ -500,17 +659,27 @@ def exhaustive_residue_report(src: Netlist, re_elab: ReElaboration,
                 or any(o not in sig_map for o in outs)):
             unclosed.append(entry)
             continue
-        mask = (1 << (1 << W)) - 1
-        pats = {s: tt_var(j, W) for j, s in enumerate(support)}
-        try:
-            want = _eval_cone(src, outs, pats, mask)
-            got = _eval_cone(
-                phys, [sig_map[o] for o in outs],
-                {sig_map[s]: p for s, p in pats.items()}, mask)
-        except KeyError:
-            unclosed.append(entry)
-            continue
-        bad = [o for o in outs if want[o] != got[sig_map[o]]]
+        bad = None
+        if W >= vector_min_support:
+            try:
+                bad = _vector_close_cone(src, re_elab, support, outs)
+                vector_cones += 1
+            except (KeyError, ImportError):
+                # extraction could not close the cone, or no jax on this
+                # host — the python-int path handles both
+                bad = None
+        if bad is None:
+            mask = (1 << (1 << W)) - 1
+            pats = {s: tt_var(j, W) for j, s in enumerate(support)}
+            try:
+                want = _eval_cone(src, outs, pats, mask)
+                got = _eval_cone(
+                    phys, [sig_map[o] for o in outs],
+                    {sig_map[s]: p for s, p in pats.items()}, mask)
+            except KeyError:
+                unclosed.append(entry)
+                continue
+            bad = [o for o in outs if want[o] != got[sig_map[o]]]
         if bad:
             mismatches.append({"node": entry, "signal": bad[0],
                                "phys_signal": sig_map[bad[0]],
@@ -520,6 +689,7 @@ def exhaustive_residue_report(src: Netlist, re_elab: ReElaboration,
     return {
         "method": "exhaustive",
         "proven_cones": proven,
+        "vector_cones": vector_cones,
         "unclosed": unclosed,
         "mismatches": mismatches,
         "max_support": max_support,
@@ -531,20 +701,39 @@ def exhaustive_residue_report(src: Netlist, re_elab: ReElaboration,
 # ---------------------------------------------------------------------------
 
 
+def _resolve_use_jax(use_jax, src: Netlist, phys: Netlist) -> bool:
+    """``use_jax="auto"`` routes lane simulation through the fused
+    vectorized evaluator (one CircuitIR lowering per side, shared with
+    every other consumer) once the circuit pair is big enough for the
+    dispatch/compile overhead to pay off; booleans force either path."""
+    if use_jax != "auto":
+        return bool(use_jax)
+    if src.n_signals + phys.n_signals < VECTOR_SIM_MIN_SIGNALS:
+        return False
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return False
+    return True
+
+
 def equivalence_report(src: Netlist, re_elab: ReElaboration,
                        n_vectors: int = 256, seed: int = 0,
-                       use_jax: bool = False) -> dict:
+                       use_jax: bool | str = "auto") -> dict:
     """Random-vector equivalence proof over ``n_vectors`` lanes.
 
     Compares every primary output *and* every mapped internal signal, so a
     failure names the first corrupted source signal.  ``use_jax`` routes
     both sides through the fused JAX engine (same lanes, uint32 words);
     otherwise the bit-parallel python oracle runs on arbitrary-width ints.
+    The default ``"auto"`` picks the vectorized engine for large circuit
+    pairs (>= :data:`VECTOR_SIM_MIN_SIGNALS` combined signals).
     """
     import random
 
     rng = random.Random(seed)
     phys, sig_map = re_elab.phys, re_elab.sig_map
+    use_jax = _resolve_use_jax(use_jax, src, phys)
     pi_vals = {s: rng.getrandbits(n_vectors) for s in src.pis}
     phys_pi_vals = {sig_map[s]: v for s, v in pi_vals.items()}
 
@@ -564,9 +753,7 @@ def equivalence_report(src: Netlist, re_elab: ReElaboration,
         n_words = (n_vectors + 31) // 32
 
         def lanes(vals):
-            return {s: np.array([(v >> (32 * w)) & 0xFFFFFFFF
-                                 for w in range(n_words)], dtype=np.uint32)
-                    for s, v in vals.items()}
+            return {s: _packed_lanes(v, n_words) for s, v in vals.items()}
 
         gv = np.asarray(eval_netlist_jax(src, lanes(pi_vals), n_words))
         pv = np.asarray(eval_netlist_jax(phys, lanes(phys_pi_vals), n_words))
@@ -574,10 +761,7 @@ def equivalence_report(src: Netlist, re_elab: ReElaboration,
         # are reconstructed only for the (<= 4 reported) mismatching rows
         idx_src = np.array(sorted(sig_map), dtype=np.int64)
         idx_phys = np.array([sig_map[s] for s in idx_src], dtype=np.int64)
-        word_mask = np.full(n_words, 0xFFFFFFFF, dtype=np.uint32)
-        rem = n_vectors - 32 * (n_words - 1)
-        if rem < 32:
-            word_mask[-1] = (1 << rem) - 1
+        word_mask = _lane_word_mask(n_vectors, n_words)
         diff_words = (gv[idx_src] ^ pv[idx_phys]) & word_mask[None, :]
         bad_rows = np.nonzero(diff_words.any(axis=1))[0]
         row_of = {int(s): r for r, s in enumerate(idx_src)}
@@ -615,7 +799,7 @@ def equivalence_report(src: Netlist, re_elab: ReElaboration,
 
 def assert_equivalent(src: Netlist, re_elab: ReElaboration,
                       n_vectors: int = 256, seed: int = 0,
-                      use_jax: bool = False) -> dict:
+                      use_jax: bool | str = "auto") -> dict:
     rep = equivalence_report(src, re_elab, n_vectors=n_vectors, seed=seed,
                              use_jax=use_jax)
     if not rep["equivalent"]:
@@ -627,7 +811,8 @@ def assert_equivalent(src: Netlist, re_elab: ReElaboration,
 
 
 def check_pack_equivalence(net: Netlist, arch: ArchParams, seed: int = 0,
-                           n_vectors: int = 256, use_jax: bool = False,
+                           n_vectors: int = 256,
+                           use_jax: bool | str = "auto",
                            method: str = "auto", **pack_kwargs) -> dict:
     """Pack ``net`` under ``arch``, re-elaborate, and prove equivalence.
 
@@ -681,7 +866,7 @@ def check_pack_equivalence(net: Netlist, arch: ArchParams, seed: int = 0,
 
 
 def verify_all_archs(net: Netlist, seed: int = 0, n_vectors: int = 256,
-                     use_jax: bool = False,
+                     use_jax: bool | str = "auto",
                      method: str = "auto") -> dict[str, dict]:
     """The apples-to-apples gate: prove pack equivalence under every arch."""
     return {name: check_pack_equivalence(net, arch, seed=seed,

@@ -2,16 +2,19 @@
 
 Width-bucketed multi-scan engine
 --------------------------------
-The netlist is levelized once (compile time) into a :class:`FusedPlan`.
-Instead of padding every level to one worst-case ``[L, M_max, 6]`` envelope
-(a circuit with one wide level then wastes rows on every other level), the
-level sequence is partitioned into at most ``max_buckets`` *contiguous*
-segments — width buckets — by a small dynamic program that minimizes the
-total padded volume.  Each bucket is padded only to its own envelope
-``[l_b, M_b, 6]`` / ``[l_b, C_b, B_b]`` and evaluated by its own
-``lax.scan``; the scans run back-to-back inside a **single jit**, so the
-one-program property of the fused engine is preserved while the padding
-waste drops to the per-bucket optimum:
+The netlist is lowered once (per content digest) to the unified columnar
+:class:`~repro.core.circuit_ir.CircuitIR` — the same functional lowering
+that feeds the timing stack and the equivalence lanes — and compiled here
+into a :class:`FusedPlan`.  Instead of padding every level to one
+worst-case ``[L, M_max, 6]`` envelope (a circuit with one wide level then
+wastes rows on every other level), the level sequence is partitioned into
+at most ``max_buckets`` *contiguous* segments — width buckets — by the
+shared padded-volume DP (:func:`repro.core.plan.segment_levels`).  Each
+bucket is padded only to its own envelope ``[l_b, M_b, 6]`` /
+``[l_b, C_b, B_b]`` and evaluated by its own ``lax.scan``; the scans run
+back-to-back inside a **single jit**, so the one-program property of the
+fused engine is preserved while the padding waste drops to the per-bucket
+optimum:
 
 * a scan step gathers the level's LUT input lanes from the signal-value
   buffer, runs one fused ``lut_eval6`` kernel call, and scatters the
@@ -25,20 +28,18 @@ waste drops to the per-bucket optimum:
 Suite-scale batched evaluation
 ------------------------------
 :func:`eval_netlists_batched_jax` evaluates many circuits per device
-program.  Plans are clustered by *compatible envelopes* (agglomerative
-merging on the padded plan volume **plus a signal-count term** — members
-pad their value buffers to the group's largest circuit, so the merge cost
-also charges the extra value-buffer rows; one giant circuit no longer
-drags small groupmates' buffers up), capped at ``max_groups`` groups, so
-a whole benchmark suite compiles into a handful of vmapped jit programs
-instead of either one-per-circuit or one worst-case envelope covering
-everything.  Within a group the bucket boundaries are recomputed on the
+program.  Plans are clustered by *compatible envelopes*
+(:func:`repro.core.plan.group_by_envelope` — agglomerative merging on the
+padded plan volume plus a signal-count term), capped at ``max_groups``
+groups, so a whole benchmark suite compiles into a handful of vmapped jit
+programs.  Within a group the bucket boundaries are recomputed on the
 group's combined per-level width profile, members are padded to the group
 envelope, and one ``vmap``-ed multi-scan evaluates the group.
 
-Plans and grouped device tensors are cached by netlist content digest
-(:func:`netlist_digest`), so repeated benchmark figures reuse both the
-levelization work and — because shapes repeat — the jit compile cache.
+Plans and grouped device tensors are cached by netlist content digest in
+the shared registry (:mod:`repro.core.plan` — ``eval_plans`` /
+``eval_groups``), alongside the functional IRs; one
+:func:`repro.core.plan.clear_caches` invalidates everything.
 
 The value buffer is donated to the jit (``donate_argnums``), so evaluation
 reuses it in place.  The seed per-level dispatcher (one kernel launch per
@@ -49,7 +50,6 @@ baseline the perf trajectory measures against — and the Python
 from __future__ import annotations
 
 import functools
-from collections import defaultdict
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -57,16 +57,16 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from . import plan as _planner
+from .circuit_ir import CircuitIR, levelize, lower_netlist_ir
 from .netlist import CONST0, CONST1, Netlist
+from .plan import segment_levels
 
 DEFAULT_MAX_BUCKETS = 3
 DEFAULT_MAX_GROUPS = 4
 
-_PLAN_CACHE_CAP = 64
-_PLAN_CACHE: dict[tuple, "FusedPlan"] = {}
-_ROWS_CACHE: dict[str, tuple] = {}
-_GROUP_CACHE_CAP = 16
-_GROUP_CACHE: dict[tuple, tuple] = {}
+_PLAN_CACHE = _planner.register_cache("eval_plans", cap=64)
+_GROUP_CACHE = _planner.register_cache("eval_groups", cap=16)
 
 
 def netlist_digest(net: Netlist) -> str:
@@ -76,136 +76,12 @@ def netlist_digest(net: Netlist) -> str:
     return net.content_digest()
 
 
-def _cache_put(cache: dict, cap: int, key, value):
-    if len(cache) >= cap:
-        cache.pop(next(iter(cache)))
-    cache[key] = value
-
-
 def clear_plan_caches() -> None:
-    _PLAN_CACHE.clear()
-    _ROWS_CACHE.clear()
-    _GROUP_CACHE.clear()
-
-
-# ---------------------------------------------------------------------------
-# levelization
-# ---------------------------------------------------------------------------
-
-
-def _levelize(net: Netlist):
-    """Group nodes by topological level (inputs strictly below)."""
-    order = net.topo_order()
-    sig_level: dict[int, int] = {s: 0 for s in net.pis}
-    sig_level[CONST0] = 0
-    sig_level[CONST1] = 0
-    by_level_luts: dict[int, list[int]] = defaultdict(list)
-    by_level_chains: dict[int, list[int]] = defaultdict(list)
-    for nd in order:
-        lv = 0
-        for s in net.node_inputs(nd):
-            lv = max(lv, sig_level.get(s, 0))
-        lv += 1
-        for s in net.node_outputs(nd):
-            sig_level[s] = lv
-        if nd[0] == "lut":
-            by_level_luts[lv].append(nd[1])
-        else:
-            by_level_chains[lv].append(nd[1])
-    return by_level_luts, by_level_chains
-
-
-def _tt_words(tt: int, k: int) -> tuple[int, int]:
-    """Replicate a k-input table into a 64-entry mask, split lo/hi uint32."""
-    full = 0
-    for r in range(1 << (6 - k)):
-        full |= tt << (r * (1 << k))
-    full &= (1 << 64) - 1
-    return full & 0xFFFFFFFF, full >> 32
-
-
-def _level_rows(net: Netlist):
-    """Raw (unpadded) per-level node rows plus the level width profiles.
-
-    Returns ``(lut_rows, chain_rows, m, c, b)`` where ``lut_rows[t]`` is a
-    list of ``(sig_ins, tt_lo, tt_hi, out)`` and ``chain_rows[t]`` a list of
-    ``(a, b, cin, sums, cout, last)``; ``m/c/b[t]`` are the level's LUT
-    count, chain count and widest chain.
-    """
-    by_luts, by_chains = _levelize(net)
-    levels = sorted(set(by_luts) | set(by_chains))
-    lut_rows, chain_rows = [], []
-    for lv in levels:
-        lr = []
-        for i in by_luts.get(lv, ()):
-            sig_ins = net.lut_inputs[i]
-            lo, hi = _tt_words(net.lut_tt[i], len(sig_ins))
-            lr.append((sig_ins, lo, hi, net.lut_out[i]))
-        cr = []
-        for ci in by_chains.get(lv, ()):
-            ch = net.chains[ci]
-            cr.append((ch.a, ch.b, ch.cin, ch.sums, ch.cout,
-                       len(ch.sums) - 1))
-        lut_rows.append(lr)
-        chain_rows.append(cr)
-    m = [len(lr) for lr in lut_rows]
-    c = [len(cr) for cr in chain_rows]
-    b = [max((len(r[3]) for r in cr), default=0) for cr in chain_rows]
-    return lut_rows, chain_rows, m, c, b
-
-
-def _level_rows_cached(net: Netlist, digest: str | None = None):
-    """Content-cached :func:`_level_rows` — plan building and group
-    building both need the raw rows; levelize once per circuit.  The
-    cached rows are treated as immutable by every consumer."""
-    key = digest if digest is not None else netlist_digest(net)
-    hit = _ROWS_CACHE.get(key)
-    if hit is None:
-        hit = _level_rows(net)
-        _cache_put(_ROWS_CACHE, _PLAN_CACHE_CAP, key, hit)
-    return hit
-
-
-def _segment_levels(m, c, b, max_buckets: int) -> list[tuple[int, int]]:
-    """Partition levels into <= ``max_buckets`` contiguous segments.
-
-    Minimizes the padded row volume ``sum_seg len(seg) * (M_seg + C_seg *
-    B_seg)`` by dynamic programming; L is tens at most, so the O(K L^2)
-    cost is negligible next to levelization.
-    """
-    L = len(m)
-    if L <= 1:
-        return [(0, L)] if L else [(0, 0)]
-    K = min(max_buckets, L)
-
-    def seg_cost(i, j):  # cost of segment [i, j)
-        mm = max(m[i:j])
-        cc = max(c[i:j])
-        bb = max(b[i:j])
-        return (j - i) * (mm + cc * bb)
-
-    INF = float("inf")
-    # dp[k][j]: min cost of first j levels using exactly k segments
-    dp = [[INF] * (L + 1) for _ in range(K + 1)]
-    back = [[0] * (L + 1) for _ in range(K + 1)]
-    dp[0][0] = 0
-    for k in range(1, K + 1):
-        for j in range(k, L + 1):
-            for i in range(k - 1, j):
-                if dp[k - 1][i] == INF:
-                    continue
-                cost = dp[k - 1][i] + seg_cost(i, j)
-                if cost < dp[k][j]:
-                    dp[k][j] = cost
-                    back[k][j] = i
-    best_k = min(range(1, K + 1), key=lambda k: dp[k][L])
-    bounds = []
-    j = L
-    for k in range(best_k, 0, -1):
-        i = back[k][j]
-        bounds.append((i, j))
-        j = i
-    return bounds[::-1]
+    """Deprecated alias of :func:`repro.core.plan.clear_caches` — the
+    unified registry clears *every* lowering/planning cache (functional
+    IRs, eval plans, grouped tensors, sweep IR templates), where this
+    name historically left the sweep-side caches live."""
+    _planner.clear_caches()
 
 
 # ---------------------------------------------------------------------------
@@ -314,10 +190,10 @@ class FusedPlan:
         return self._dev
 
 
-def _build_bucket(lut_rows, chain_rows, M: int, C: int, B: int,
-                  sink: int) -> PlanBucket:
-    """Pad a run of levels' raw rows to the bucket envelope [l, M, C, B]."""
-    l = max(len(lut_rows), 1)
+def _bucket_from_ir(ir: CircuitIR, i: int, j: int, M: int, C: int, B: int,
+                    sink: int) -> PlanBucket:
+    """Pad IR levels ``[i, j)`` to the bucket envelope ``[l, M, C, B]``."""
+    l = max(j - i, 1)
     has_luts = M > 0
     has_chains = C > 0
     lut_ins = np.full((l, max(M, 1), 6), CONST0, dtype=np.int32)
@@ -330,21 +206,28 @@ def _build_bucket(lut_rows, chain_rows, M: int, C: int, B: int,
     ch_sums = np.full((l, max(C, 1), max(B, 1)), sink, dtype=np.int32)
     ch_cout = np.full((l, max(C, 1)), sink, dtype=np.int32)
     ch_last = np.zeros((l, max(C, 1)), dtype=np.int32)
-    for t, (lr, cr) in enumerate(zip(lut_rows, chain_rows)):
-        for r, (sig_ins, lo, hi, out) in enumerate(lr):
-            lut_ins[t, r, :len(sig_ins)] = sig_ins
-            lut_tt_lo[t, r] = lo
-            lut_tt_hi[t, r] = hi
-            lut_out[t, r] = out
-        for r, (a, b, cin, sums, cout, last) in enumerate(cr):
-            n = len(sums)
-            ch_a[t, r, :n] = a
-            ch_b[t, r, :n] = b
-            ch_cin[t, r] = cin
-            ch_sums[t, r, :n] = sums
-            ch_last[t, r] = last
-            if cout is not None:
-                ch_cout[t, r] = cout
+    for t in range(i, min(j, ir.n_levels)):
+        r = t - i
+        ll, cl = ir.lut_levels[t], ir.chain_levels[t]
+        m = ll.out.shape[0]
+        if m:
+            lut_ins[r, :m] = ll.ins
+            lut_tt_lo[r, :m] = ll.tt_lo
+            lut_tt_hi[r, :m] = ll.tt_hi
+            lut_out[r, :m] = ll.out
+        c = cl.cout.shape[0]
+        if c:
+            bb = cl.a_sig.shape[1]
+            ch_a[r, :c, :bb] = cl.a_sig
+            ch_b[r, :c, :bb] = cl.b_sig
+            ch_cin[r, :c] = cl.cin_sig
+            s = cl.sums.copy()
+            s[s < 0] = sink
+            ch_sums[r, :c, :bb] = s
+            co = cl.cout.copy()
+            co[co < 0] = sink
+            ch_cout[r, :c] = co
+            ch_last[r, :c] = cl.last
     return PlanBucket(n_levels=l, has_luts=has_luts, has_chains=has_chains,
                       lut_ins=lut_ins, lut_tt_lo=lut_tt_lo,
                       lut_tt_hi=lut_tt_hi, lut_out=lut_out, ch_a=ch_a,
@@ -352,41 +235,50 @@ def _build_bucket(lut_rows, chain_rows, M: int, C: int, B: int,
                       ch_cout=ch_cout, ch_last=ch_last)
 
 
-def _plan_from_rows(lut_rows, chain_rows, bounds, n_signals: int,
-                    sink: int, envelopes=None) -> FusedPlan:
-    buckets = []
-    for bi, (i, j) in enumerate(bounds):
-        lr, cr = lut_rows[i:j], chain_rows[i:j]
-        if envelopes is not None:
-            M, C, B = envelopes[bi]
-        else:
-            M = max((len(x) for x in lr), default=0)
-            C = max((len(x) for x in cr), default=0)
-            B = max((len(r[3]) for x in cr for r in x), default=0)
-        buckets.append(_build_bucket(lr, cr, M, C, B, sink))
+def plan_from_ir(ir: CircuitIR,
+                 max_buckets: int = DEFAULT_MAX_BUCKETS,
+                 n_signals: int | None = None,
+                 bounds=None, envelopes=None) -> FusedPlan:
+    """Compile a :class:`CircuitIR` (functional or packed — only the
+    functional columns are read) into width-bucketed level tensors.
+
+    This is the evaluator's half of the one-lowering contract: the same
+    IR object that the vectorized timing analyzer consumes drives the
+    fused evaluation plan, with no re-levelization.  Pass ``bounds`` /
+    ``envelopes`` to pad to a shared group layout (suite batching).
+    """
+    m, c, b = ir.level_profile()
+    if not m:
+        m, c, b = [0], [0], [0]
+    if bounds is None:
+        bounds = segment_levels(m, c, b, max_buckets)
+    if envelopes is None:
+        envelopes = _planner.bucket_envelopes(m, c, b, bounds)
+    if n_signals is None:
+        n_signals = ir.n_signals
+    sink = n_signals
+    buckets = tuple(_bucket_from_ir(ir, i, j, M, C, B, sink)
+                    for (i, j), (M, C, B) in zip(bounds, envelopes))
     n_levels = sum(max(j - i, 1) for i, j in bounds) if bounds else 1
     return FusedPlan(
-        n_signals=n_signals, n_levels=n_levels, buckets=tuple(buckets),
-        real_luts=sum(len(x) for x in lut_rows),
-        real_chain_bits=sum(len(r[3]) for x in chain_rows for r in x))
+        n_signals=n_signals, n_levels=n_levels, buckets=buckets,
+        real_luts=int(sum(lv.out.shape[0] for lv in ir.lut_levels)),
+        real_chain_bits=int(sum((lv.sums >= 0).sum()
+                                for lv in ir.chain_levels)))
 
 
 def plan_netlist(net: Netlist,
                  max_buckets: int = DEFAULT_MAX_BUCKETS) -> FusedPlan:
-    """Compile a netlist into width-bucketed level tensors (content-cached)."""
+    """Compile a netlist into width-bucketed level tensors (content-cached,
+    via the content-cached functional :class:`CircuitIR`)."""
     digest = netlist_digest(net)
     key = (digest, max_buckets)
     cached = _PLAN_CACHE.get(key)
     if cached is not None:
         return cached
-    lut_rows, chain_rows, m, c, b = _level_rows_cached(net, digest)
-    if not lut_rows:  # no logic at all: one all-padding level
-        lut_rows, chain_rows = [[]], [[]]
-        m, c, b = [0], [0], [0]
-    bounds = _segment_levels(m, c, b, max_buckets)
-    plan = _plan_from_rows(lut_rows, chain_rows, bounds, net.n_signals,
-                           sink=net.n_signals)
-    _cache_put(_PLAN_CACHE, _PLAN_CACHE_CAP, key, plan)
+    ir = lower_netlist_ir(net, digest=digest)
+    plan = plan_from_ir(ir, max_buckets=max_buckets)
+    _PLAN_CACHE.put(key, plan)
     return plan
 
 
@@ -483,61 +375,18 @@ def eval_netlist_jax(net: Netlist, pi_lanes: dict[int, np.ndarray],
 # ---------------------------------------------------------------------------
 
 
-def group_plans_by_envelope(plans: list[FusedPlan],
-                            max_groups: int = DEFAULT_MAX_GROUPS,
+def group_plans_by_envelope(plans, max_groups: int = DEFAULT_MAX_GROUPS,
                             signal_weight: float = 1.0) -> list[list[int]]:
-    """Cluster plans into <= ``max_groups`` compatible-envelope groups.
-
-    Agglomerative: start one group per plan, repeatedly merge the pair
-    whose combined layout costs least.  Each resulting group compiles to
-    exactly one vmapped jit program.
-
-    The merge cost has two terms, both in "rows of N lane words":
-
-    * the padded *plan* volume ``n * L * (M + C * B)`` of the combined
-      worst-case envelope (the index tensors every scan step reads);
-    * the padded *value-buffer* volume ``n * max(n_signals)`` weighted by
-      ``signal_weight`` — every member's value buffer is padded to the
-      group's largest circuit, so co-locating one giant circuit with
-      small ones used to make the small members pay the giant's buffer
-      rows on every call even when the envelopes merged cheaply.
-    """
-    groups = [[i] for i in range(len(plans))]
-    envs = [list(p.envelope) for p in plans]
-    nsig = [p.n_signals for p in plans]
-
-    def vol(env, n):
-        L, M, C, B = env
-        return n * L * (M + C * B)
-
-    def cost_of(env, ns, n):
-        return vol(env, n) + signal_weight * n * ns
-
-    def merged(e1, e2):
-        return [max(a, b) for a, b in zip(e1, e2)]
-
-    while len(groups) > max(max_groups, 1):
-        best = None
-        for i in range(len(groups)):
-            for j in range(i + 1, len(groups)):
-                me = merged(envs[i], envs[j])
-                mns = max(nsig[i], nsig[j])
-                ni, nj = len(groups[i]), len(groups[j])
-                cost = (cost_of(me, mns, ni + nj)
-                        - cost_of(envs[i], nsig[i], ni)
-                        - cost_of(envs[j], nsig[j], nj))
-                if best is None or cost < best[0]:
-                    best = (cost, i, j, me, mns)
-        _, i, j, me, mns = best
-        groups[i] = groups[i] + groups[j]
-        envs[i] = me
-        nsig[i] = mns
-        del groups[j], envs[j], nsig[j]
-    return groups
+    """Cluster plans (or any ``.envelope`` / ``.n_signals`` carriers, e.g.
+    :class:`CircuitIR`) into <= ``max_groups`` compatible-envelope groups
+    — delegated to the shared planner
+    (:func:`repro.core.plan.group_by_envelope`, which the timing sweep
+    uses too)."""
+    return _planner.group_by_envelope(plans, max_groups=max_groups,
+                                      signal_weight=signal_weight)
 
 
-def grouping_padded_value_rows(plans: list[FusedPlan],
-                               groups: list[list[int]]) -> dict:
+def grouping_padded_value_rows(plans, groups: list[list[int]]) -> dict:
     """Value-buffer padding accounting for a grouping: every member is
     padded to its group's largest ``n_signals``."""
     real = sum(p.n_signals for p in plans)
@@ -546,23 +395,21 @@ def grouping_padded_value_rows(plans: list[FusedPlan],
             "waste": 1.0 - real / max(padded, 1)}
 
 
-def _group_level_rows(nets: list[Netlist]):
-    """Per-member raw rows aligned to the group's level count + profiles."""
-    rows = [_level_rows_cached(net) for net in nets]
-    L = max((len(r[0]) for r in rows), default=0)
+def group_layout(irs, max_buckets: int = DEFAULT_MAX_BUCKETS):
+    """Shared padded layout of one envelope group: combined width profile,
+    bucket bounds, envelopes and the per-member padded row volume.  Used
+    by the group builder below and by the flow-level grouped-vs-
+    per-circuit cost model (:func:`repro.core.flow.eval_mode_cost_model`)
+    without building any device tensors."""
+    L = max((ir.n_levels for ir in irs), default=0)
     if L == 0:
         L = 1
-        rows = [([[]], [[]], [0], [0], [0]) for _ in nets]
-    aligned = []
-    for lr, cr, m, c, b in rows:
-        pad = L - len(lr)
-        aligned.append((lr + [[] for _ in range(pad)],
-                        cr + [[] for _ in range(pad)]))
-    m = [max(len(a[0][t]) for a in aligned) for t in range(L)]
-    c = [max(len(a[1][t]) for a in aligned) for t in range(L)]
-    b = [max((len(r[3]) for a in aligned for r in a[1][t]), default=0)
-         for t in range(L)]
-    return aligned, m, c, b
+    m, c, b = _planner.combined_profile([ir.level_profile() for ir in irs],
+                                        L)
+    bounds = segment_levels(m, c, b, max_buckets)
+    envelopes = _planner.bucket_envelopes(m, c, b, bounds)
+    return {"bounds": bounds, "envelopes": envelopes,
+            "rows_per_member": _planner.padded_rows(bounds, envelopes)}
 
 
 def _build_group(nets: list[Netlist], max_buckets: int):
@@ -572,15 +419,14 @@ def _build_group(nets: list[Netlist], max_buckets: int):
     and every member is padded to the group envelope; each member's sink
     rows point at the shared ``n_sig`` row.
     """
+    irs = [lower_netlist_ir(net) for net in nets]
     n_sig = max(net.n_signals for net in nets)
-    aligned, m, c, b = _group_level_rows(nets)
-    bounds = _segment_levels(m, c, b, max_buckets)
-    envelopes = [(max(m[i:j], default=0), max(c[i:j], default=0),
-                  max(b[i:j], default=0)) for i, j in bounds]
+    layout = group_layout(irs, max_buckets=max_buckets)
+    bounds, envelopes = layout["bounds"], layout["envelopes"]
     member_plans = [
-        _plan_from_rows(lr, cr, bounds, n_sig, sink=n_sig,
-                        envelopes=envelopes)
-        for lr, cr in aligned]
+        plan_from_ir(ir, n_signals=n_sig, bounds=bounds,
+                     envelopes=envelopes)
+        for ir in irs]
     flags = tuple(
         (any(p.buckets[bi].has_luts for p in member_plans),
          any(p.buckets[bi].has_chains for p in member_plans))
@@ -600,7 +446,7 @@ def get_group_program(nets: list[Netlist],
     cached = _GROUP_CACHE.get(key)
     if cached is None:
         cached = _build_group(nets, max_buckets)
-        _cache_put(_GROUP_CACHE, _GROUP_CACHE_CAP, key, cached)
+        _GROUP_CACHE.put(key, cached)
     return cached
 
 
@@ -641,12 +487,18 @@ class SuiteProgram:
 
 def prepare_suite_program(nets: list[Netlist],
                           max_groups: int = DEFAULT_MAX_GROUPS,
-                          max_buckets: int = DEFAULT_MAX_BUCKETS
+                          max_buckets: int = DEFAULT_MAX_BUCKETS,
+                          plans: list[FusedPlan] | None = None,
+                          groups: list[list[int]] | None = None
                           ) -> SuiteProgram:
     """Cluster a suite into <= ``max_groups`` compatible-envelope groups and
-    build (or fetch from the content cache) each group's stacked tensors."""
-    plans = [plan_netlist(net, max_buckets=max_buckets) for net in nets]
-    groups = group_plans_by_envelope(plans, max_groups=max_groups)
+    build (or fetch from the content cache) each group's stacked tensors.
+    Pass precomputed ``plans``/``groups`` (e.g. from a cost-model pass) to
+    skip re-planning and the O(n^2) agglomerative clustering."""
+    if plans is None:
+        plans = [plan_netlist(net, max_buckets=max_buckets) for net in nets]
+    if groups is None:
+        groups = group_plans_by_envelope(plans, max_groups=max_groups)
     programs = [get_group_program([nets[i] for i in members],
                                   max_buckets=max_buckets)
                 for members in groups]
@@ -706,7 +558,7 @@ def eval_netlist_jax_levels(net: Netlist, pi_lanes: dict[int, np.ndarray],
     """
     from repro.kernels import ops
 
-    by_luts, by_chains = _levelize(net)
+    by_luts, by_chains, _ = levelize(net)
     levels = sorted(set(by_luts) | set(by_chains))
 
     vals = jnp.zeros((net.n_signals, n_lane_words), dtype=jnp.uint32)

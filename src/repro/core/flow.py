@@ -237,22 +237,159 @@ def prepare_suite(nets: list[Netlist],
                                  max_buckets=max_buckets)
 
 
+#: padded-row-equivalents charged per program dispatch in the warm-path
+#: cost model below — a program launch (value-buffer init + PI fill,
+#: argument pytree flattening, dispatch, blocking result sync) costs
+#: roughly what streaming this many padded rows through a scan step does.
+#: Calibration: back-solving the measured warm walls of the 17-circuit
+#: suite (``experiments/perf/suite_eval_grouped.json``) across two
+#: recordings gives an implied dispatch cost anywhere from ~3k to ~20k
+#: rows — the two paths sit within the host's run-to-run noise band and
+#: the measured winner flips between recordings.  The constant is set at
+#: the low end of that bracket deliberately: when the margin is inside
+#: noise, a serial host should prefer the padding-free per-circuit
+#: layout, and grouped should win only when envelope compatibility makes
+#: the padding small relative to the saved dispatches.
+EVAL_DISPATCH_ROW_COST = 4096
+
+#: padded-row-equivalents charged per program COMPILE when the caller has
+#: not declared the jit cache warm (``warm=False``, the default): the
+#: recorded cold suite walls (``suite_eval_grouped.json``:
+#: ``t_suite_per_circuit_s`` - ``t_suite_grouped_s`` over the compile-
+#: count delta) imply ~3-4 s per program compile, ~10^7 rows at the
+#: measured ~0.25 us/row.  This is what makes one-shot cold callers pick
+#: grouped (few compiles) exactly as the pre-cost-model default did.
+EVAL_COMPILE_ROW_COST = 1 << 24
+
+
+def eval_mode_cost_model(nets: list[Netlist], plans=None, groups=None,
+                         max_groups: int = DEFAULT_MAX_GROUPS,
+                         max_buckets: int = DEFAULT_MAX_BUCKETS,
+                         backend: str | None = None,
+                         warm: bool = False) -> dict:
+    """Backend-aware cost model: grouped vs per-circuit eval.
+
+    Grouped evaluation trades program count (one compile + one dispatch
+    per envelope group instead of one per circuit) for padded volume
+    (every member pads to the group envelope).  On a serial host backend
+    (``cpu``) the vmapped group axis executes sequentially, so the model
+    charges the full ``rows_per_member * len(group)``; on parallel
+    backends (``gpu``/``tpu``) the group axis maps to real parallelism
+    and a group costs one member's padded rows.  Both sides are charged
+    :data:`EVAL_DISPATCH_ROW_COST` rows per program, plus
+    :data:`EVAL_COMPILE_ROW_COST` per program unless ``warm=True``
+    (caller vouches the jit cache is hot, e.g. a steady-state loop) —
+    cold one-shot calls therefore keep the compile-count-minimizing
+    grouped layout, and only amortized loops flip to the padding-free
+    per-circuit one.  All terms come from the unified
+    :class:`~repro.core.circuit_ir.CircuitIR` profiles — no device
+    tensors are built.  (ROADMAP "warm-path grouped eval" item.)
+    """
+    from .circuit_ir import lower_netlist_ir
+    from .eval_jax import group_layout, group_plans_by_envelope
+
+    if plans is None:
+        plans = [plan_netlist(n, max_buckets=max_buckets) for n in nets]
+    if groups is None:
+        groups = group_plans_by_envelope(plans, max_groups=max_groups)
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    parallel = backend in ("gpu", "tpu")
+    irs = [lower_netlist_ir(n) for n in nets]
+    single_rows = sum(p.padded_lut_rows + p.padded_chain_bits for p in plans)
+    grouped_rows = 0
+    for g in groups:
+        layout = group_layout([irs[i] for i in g], max_buckets=max_buckets)
+        grouped_rows += layout["rows_per_member"] * (1 if parallel
+                                                     else len(g))
+    per_program = EVAL_DISPATCH_ROW_COST + (0 if warm
+                                            else EVAL_COMPILE_ROW_COST)
+    cost_grouped = grouped_rows + per_program * len(groups)
+    cost_single = single_rows + per_program * len(nets)
+    return {
+        "backend": backend,
+        "parallel": parallel,
+        "warm": warm,
+        "n_programs_grouped": len(groups),
+        "n_programs_per_circuit": len(nets),
+        "padded_rows_grouped": int(grouped_rows),
+        "padded_rows_per_circuit": int(single_rows),
+        "dispatch_row_cost": EVAL_DISPATCH_ROW_COST,
+        "compile_row_cost": 0 if warm else EVAL_COMPILE_ROW_COST,
+        "cost_grouped": int(cost_grouped),
+        "cost_per_circuit": int(cost_single),
+        "pick": "grouped" if cost_grouped <= cost_single else "per_circuit",
+    }
+
+
 def evaluate_suite(nets: list[Netlist],
                    pi_lanes_list: list[dict[int, np.ndarray]],
                    n_lane_words: int, use_pallas: bool = True,
                    max_groups: int = DEFAULT_MAX_GROUPS,
                    max_buckets: int = DEFAULT_MAX_BUCKETS,
-                   program: SuiteProgram | None = None
-                   ) -> tuple[list[np.ndarray], dict]:
-    """Whole-suite evaluation as <= ``max_groups`` vmapped jit programs.
+                   program: SuiteProgram | None = None,
+                   mode: str = "auto",
+                   warm: bool = False) -> tuple[list[np.ndarray], dict]:
+    """Whole-suite evaluation as <= ``max_groups`` vmapped jit programs —
+    or per-circuit fused programs, whichever the backend-aware cost model
+    predicts cheaper (``mode="auto"``; force with ``"grouped"`` /
+    ``"per_circuit"``; a prepared ``program`` implies grouped).  Pass
+    ``warm=True`` from steady-state loops whose jit compiles are already
+    amortized — a cold one-shot call (the default assumption) charges
+    compile count and keeps the old always-grouped behavior.
 
     Returns ``(per-circuit vals arrays, stats)`` where stats records the
-    envelope groups, their bucket shapes, and padded-row counts.
+    envelope groups, their bucket shapes, padded-row counts, the chosen
+    ``mode`` and (in auto) the ``cost_model`` record — both paths are
+    bit-identical, so the choice is purely a throughput matter.
     """
-    return eval_netlists_batched_jax(
-        nets, pi_lanes_list, n_lane_words, use_pallas=use_pallas,
-        max_groups=max_groups, max_buckets=max_buckets, return_stats=True,
-        program=program)
+    if program is not None:
+        outs, stats = eval_netlists_batched_jax(
+            nets, pi_lanes_list, n_lane_words, use_pallas=use_pallas,
+            return_stats=True, program=program)
+        stats = dict(stats, mode="grouped")
+        return outs, stats
+    if mode not in ("auto", "grouped", "per_circuit"):
+        raise ValueError(f"unknown evaluate_suite mode {mode!r}")
+    from .eval_jax import group_plans_by_envelope
+
+    # plans are registry-cached; the O(n^2) agglomerative grouping runs
+    # at most ONCE and only when a branch actually needs it (a forced
+    # per-circuit call never pays for clustering)
+    plans = [plan_netlist(n, max_buckets=max_buckets) for n in nets]
+    model = None
+    chosen = mode
+    groups = None
+    if mode == "auto":
+        groups = group_plans_by_envelope(plans, max_groups=max_groups)
+        model = eval_mode_cost_model(nets, plans=plans, groups=groups,
+                                     max_buckets=max_buckets, warm=warm)
+        chosen = model["pick"]
+    if chosen == "grouped":
+        if groups is None:
+            groups = group_plans_by_envelope(plans, max_groups=max_groups)
+        program = prepare_suite_program(nets, max_buckets=max_buckets,
+                                        plans=plans, groups=groups)
+        outs, stats = eval_netlists_batched_jax(
+            nets, pi_lanes_list, n_lane_words, use_pallas=use_pallas,
+            return_stats=True, program=program)
+        stats = dict(stats)
+    else:
+        outs = [evaluate_netlist(n, ln, n_lane_words,
+                                 use_pallas=use_pallas, plan=pl)
+                for n, ln, pl in zip(nets, pi_lanes_list, plans)]
+        # the per-circuit path runs one program per circuit — report
+        # that as the group count regardless of how this branch was
+        # reached (the cost model's candidate clustering, when auto
+        # computed one, is in stats["cost_model"])
+        stats = {"n_groups": len(nets), "groups": [],
+                 "n_programs": len(nets)}
+    stats["mode"] = chosen
+    if model is not None:
+        stats["cost_model"] = model
+    return outs, stats
 
 
 def oracle_check(net: Netlist, pi_lanes: dict[int, np.ndarray],

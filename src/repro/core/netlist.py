@@ -47,6 +47,18 @@ def tt_eval(tt: int, assignment: int) -> int:
     return (tt >> assignment) & 1
 
 
+def tt_words64(tt: int, k: int) -> tuple[int, int]:
+    """Replicate a ``k``-input table into a 64-entry mask, split into
+    (lo, hi) uint32 words — the evaluator's per-row LUT payload.  The
+    replication makes every pin beyond ``k`` a don't-care, so padded pin
+    slots may hold any signal (the lowering pads with CONST0)."""
+    full = 0
+    for r in range(1 << (6 - k)):
+        full |= tt << (r * (1 << k))
+    full &= (1 << 64) - 1
+    return full & 0xFFFFFFFF, full >> 32
+
+
 def tt_from_fn(fn, k: int) -> int:
     out = 0
     for m in range(1 << k):
@@ -313,6 +325,17 @@ class Netlist:
                                     for k, v in self.pos.items()))
                        )).encode())
         return h.hexdigest()
+
+    def lower_ir(self):
+        """The functional columnar :class:`~repro.core.circuit_ir.CircuitIR`
+        of this netlist (levelized node rows with truth-table words, signal
+        kind/level columns, fanin CSR topology — no placement columns).
+        Content-cached in the shared registry: this is the single
+        levelization that the fused evaluator, the equivalence lanes and
+        every packed lowering of this circuit consume."""
+        from .circuit_ir import lower_netlist_ir
+
+        return lower_netlist_ir(self)
 
     # -- stats --------------------------------------------------------------
     @property

@@ -1,537 +1,31 @@
-"""Columnar pack IR: a PackedCircuit lowered to flat numpy arrays.
+"""Columnar pack IR — compatibility facade over the unified CircuitIR.
 
-``pack()`` produces a Python object graph (ALMs, halves, dict site maps)
-that is pleasant to mutate during packing and miserable to analyze at
-suite scale — the seed timing analyzer re-walked those dicts per signal,
-per arch, per seed.  :func:`lower_pack_ir` flattens one pack into a
-:class:`PackIR`: dense integer/float columns that three consumers share —
+Historically this module owned the packed lowering (per-signal columns,
+fanin CSR with 27 edge delay classes, per-ALM mode columns, levelized
+node tables).  PR 5 unified that substrate with the evaluator's level
+tensors into :mod:`repro.core.circuit_ir`: one **functional lowering**
+per netlist content digest (levelization + truth-table words + CSR
+topology, shared by eval, timing and equivalence) plus one vectorized
+**placement patch** per (digest, structural class).  ``PackIR`` is now
+an alias of :class:`~repro.core.circuit_ir.CircuitIR`; the names below
+re-export so existing imports (timing, sweeps, tests) keep working.
 
-* the vectorized static-timing analyzer (:mod:`repro.core.timing_vec`),
-  which turns the levelized node tables into gather/max/scan programs;
-* the architecture design-space sweep (:mod:`repro.core.sweep`), which
-  re-times one PackIR under many delay tables (grid rows of
-  :func:`repro.core.alm.arch_grid`) without touching Python objects;
-* the benchmark flow (:mod:`repro.core.flow`), whose ``pack_and_analyze``
-  routes every figure driver through the IR.
-
-Column layout
--------------
-Per signal (length ``n_signals``):
-
-``sig_site``
-    producing ALM index; ``-1`` for PIs/constants, ``-2`` unplaced.
-``sig_lb``
-    LB of the producing ALM (``-1`` when none) — routing an edge is
-    *local* iff producer LB == consumer LB and both are real.
-``sig_kind``
-    one of :data:`K_CONST` … :data:`K_COUT`.
-``sig_level``
-    topological level of the producing node (PIs/consts = 0).
-
-Fanin CSR (timing edges, excluding the intra-chain carry recurrence —
-that dependency is captured by the chain tables instead):
-
-``fanin_ptr [S+1]`` / ``fanin_sig [E]`` / ``fanin_cls [E]``
-    for signal ``s``, its timing fanins are
-    ``fanin_sig[fanin_ptr[s]:fanin_ptr[s+1]]`` with per-edge delay
-    classes (below).
-
-Per ALM (length ``n_alms``): ``alm_lb``, ``alm_is_arith``,
-``alm_feed [A, 2]`` (per half: 0 = no FA, 1 = LUT-path feed, 2 = Z feed),
-``alm_hosted [A, 2]`` (hosted LUT index or -1), ``alm_lut6`` (-1 or the
-spanned 6-LUT index).
-
-Levelized node tables (the executor's view): ``lut_levels`` /
-``chain_levels`` hold, per topological level, exact-size (unpadded) row
-arrays; executors pad/stack them as their batching needs dictate.
-
-Edge delay classes
-------------------
-An edge's delay is the sum of three components — routing
-(none / local / global), LB input pin (none / A–H / Z) and adder path
-(none / A–H→adder / Z→adder) — encoded as ``route * 9 + pin * 3 + path``
-(27 classes).  The per-arch component table is built by
-:func:`repro.core.timing_vec.delay_components`; classes are structural
-(decided at pack time), components are per delay row, which is exactly
-the split that makes arch-grid batching a gather.  Class 0 is the null
-edge (constants / padding): all components zero, gathered from signal 0
-(CONST0, arrival 0.0), so padded rows are exact no-ops given the model
-invariant that all delays are non-negative.
-
-Node delay classes (``NDC_*``): absorbed LUTs add nothing (their delay
-is folded into the A–H→adder path); placed LUTs add
-``lut_delay(k) + t_alm_out + t_out_mux_extra``.
+See ``repro/core/circuit_ir.py`` for the column layout, the edge/node
+delay-class encoding and the cache-registry invalidation rules.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import TYPE_CHECKING
+from .circuit_ir import (  # noqa: F401 — re-exported public surface
+    CircuitIR, ChainLevelRows, LutLevelRows,
+    K_CONST, K_PI, K_LUT, K_LUT_ABS, K_SUM, K_COUT,
+    ROUTE_NULL, ROUTE_LOCAL, ROUTE_GLOBAL,
+    PIN_NULL, PIN_AH, PIN_Z,
+    PATH_NULL, PATH_AH, PATH_Z,
+    N_EDGE_CLASSES,
+    NDC_ABSORBED, NDC_LUT4, NDC_LUT5, NDC_LUT6, N_NODE_CLASSES,
+    edge_class, lower_pack_ir, lower_pack_ir_incremental,
+)
 
-import numpy as np
-
-from .netlist import CONST1, Netlist
-
-if TYPE_CHECKING:  # pragma: no cover - import cycle guard (packing lazily
-    from .packing import PackedCircuit  # imports this module via lower_ir)
-
-# signal kinds
-K_CONST, K_PI, K_LUT, K_LUT_ABS, K_SUM, K_COUT = range(6)
-
-# edge-class components
-ROUTE_NULL, ROUTE_LOCAL, ROUTE_GLOBAL = 0, 1, 2
-PIN_NULL, PIN_AH, PIN_Z = 0, 1, 2
-PATH_NULL, PATH_AH, PATH_Z = 0, 1, 2
-N_EDGE_CLASSES = 27
-
-# node delay classes for LUT rows
-NDC_ABSORBED, NDC_LUT4, NDC_LUT5, NDC_LUT6 = range(4)
-N_NODE_CLASSES = 4
-
-
-def edge_class(route: int, pin: int, path: int) -> int:
-    return route * 9 + pin * 3 + path
-
-
-@dataclass(frozen=True)
-class LutLevelRows:
-    """Unpadded LUT rows of one topological level."""
-
-    ins: np.ndarray       # [M, 6] int32 fanin signals (CONST0-padded pins)
-    cls: np.ndarray       # [M, 6] int32 edge classes (0 on padded pins)
-    ndc: np.ndarray       # [M] int32 node delay class
-    out: np.ndarray       # [M] int32 output signal
-
-
-@dataclass(frozen=True)
-class ChainLevelRows:
-    """Unpadded chain rows of one topological level (row width = level's
-    widest chain; shorter chains pad bits with null ops and ``sums`` -1)."""
-
-    a_sig: np.ndarray     # [C, B] int32
-    a_cls: np.ndarray     # [C, B] int32
-    b_sig: np.ndarray     # [C, B] int32
-    b_cls: np.ndarray     # [C, B] int32
-    cin_sig: np.ndarray   # [C] int32
-    cin_cls: np.ndarray   # [C] int32
-    sums: np.ndarray      # [C, B] int32 (-1 on padded bits)
-    cout: np.ndarray      # [C] int32 (-1 when the chain has no cout)
-    last: np.ndarray      # [C] int32 index of the last real bit
-
-
-@dataclass(frozen=True)
-class PackIR:
-    name: str
-    #: content digest of the source netlist — the incremental-lowering
-    #: template guard (same-shaped but different circuits must not patch
-    #: each other's IRs)
-    net_digest: str
-    arch_name: str
-    structural_key: tuple
-    n_signals: int
-    # per-signal columns
-    sig_site: np.ndarray
-    sig_lb: np.ndarray
-    sig_kind: np.ndarray
-    sig_level: np.ndarray
-    # fanin CSR (timing edges)
-    fanin_ptr: np.ndarray
-    fanin_sig: np.ndarray
-    fanin_cls: np.ndarray
-    # per-ALM columns
-    alm_lb: np.ndarray
-    alm_is_arith: np.ndarray
-    alm_feed: np.ndarray
-    alm_hosted: np.ndarray
-    alm_lut6: np.ndarray
-    # levelized node tables (index 0 = first computing level)
-    lut_levels: tuple[LutLevelRows, ...]
-    chain_levels: tuple[ChainLevelRows, ...]
-    # primary outputs + scalar stats
-    po_sig: np.ndarray
-    n_alms: int
-    n_lbs: int
-    n_luts: int
-    n_adders: int
-    concurrent_luts: int
-
-    @property
-    def n_levels(self) -> int:
-        return len(self.lut_levels)
-
-    def level_profile(self):
-        """Per-level (lut rows, chain rows, widest chain) — the width
-        profile bucketing/batching decisions consume."""
-        m = [lv.out.shape[0] for lv in self.lut_levels]
-        c = [lv.cout.shape[0] for lv in self.chain_levels]
-        b = [lv.a_sig.shape[1] if lv.cout.shape[0] else 0
-             for lv in self.chain_levels]
-        return m, c, b
-
-
-def _levelize(net: Netlist):
-    """Nodes grouped by topological level (a node's level is one past its
-    deepest input).  Mirrors the evaluator's levelization; kept local so
-    the timing stack stays importable without jax."""
-    sig_level: dict[int, int] = {s: 0 for s in net.pis}
-    sig_level[0] = 0
-    sig_level[1] = 0
-    by_luts: dict[int, list[int]] = {}
-    by_chains: dict[int, list[int]] = {}
-    for nd in net.topo_order():
-        lv = 0
-        for s in net.node_inputs(nd):
-            lv = max(lv, sig_level.get(s, 0))
-        lv += 1
-        for s in net.node_outputs(nd):
-            sig_level[s] = lv
-        if nd[0] == "lut":
-            by_luts.setdefault(lv, []).append(nd[1])
-        else:
-            by_chains.setdefault(lv, []).append(nd[1])
-    return by_luts, by_chains, sig_level
-
-
-def _placement_columns(packed: "PackedCircuit") -> dict:
-    """The placement-derived columns both lowering paths share: per-
-    signal site/LB, the per-ALM mode columns, and the chain-bit feed
-    views (the `(ci, bi) -> (feed, absorbed)` map, the absorbed-LUT set
-    and the per-sum-signal Z-feed flags).  Single source of truth —
-    :func:`lower_pack_ir_incremental` must patch exactly what this
-    builds."""
-    net = packed.net
-    S = net.n_signals
-
-    sig_site = np.full(S, -1, dtype=np.int32)
-    for li, out in enumerate(net.lut_out):
-        sig_site[out] = packed.lut_site.get(li, -2)
-    for ci, ch in enumerate(net.chains):
-        for bi, s in enumerate(ch.sums):
-            sig_site[s] = packed.chain_site.get((ci, bi), -2)
-        if ch.cout is not None:
-            sig_site[ch.cout] = packed.chain_site.get((ci, len(ch.sums) - 1),
-                                                      -2)
-
-    alm_lb_arr = np.asarray(packed.alm_lb, dtype=np.int32) \
-        if packed.alm_lb else np.zeros(0, dtype=np.int32)
-    sig_lb = np.full(S, -1, dtype=np.int32)
-    placed = sig_site >= 0
-    sig_lb[placed] = alm_lb_arr[sig_site[placed]]
-
-    A = len(packed.alms)
-    alm_is_arith = np.zeros(A, dtype=bool)
-    alm_feed = np.zeros((A, 2), dtype=np.int32)
-    alm_hosted = np.full((A, 2), -1, dtype=np.int32)
-    alm_lut6 = np.full(A, -1, dtype=np.int32)
-    feed: dict[tuple[int, int], tuple[str, list[int]]] = {}
-    absorbed_all: set[int] = set()
-    z_of_sum = np.zeros(S, dtype=bool)
-    for ai, alm in enumerate(packed.alms):
-        alm_is_arith[ai] = alm.is_arith
-        if alm.lut6 is not None:
-            alm_lut6[ai] = alm.lut6
-        for hi, h in enumerate(alm.halves):
-            if h.fa is not None:
-                alm_feed[ai, hi] = 2 if h.fa_feed == "z" else 1
-                feed[h.fa] = (h.fa_feed, h.absorbed)
-                absorbed_all.update(h.absorbed)
-                if h.fa_feed == "z":
-                    ci, bi = h.fa
-                    z_of_sum[net.chains[ci].sums[bi]] = True
-            if h.hosted_lut is not None:
-                alm_hosted[ai, hi] = h.hosted_lut
-
-    return {"sig_site": sig_site, "sig_lb": sig_lb, "alm_lb": alm_lb_arr,
-            "alm_is_arith": alm_is_arith, "alm_feed": alm_feed,
-            "alm_hosted": alm_hosted, "alm_lut6": alm_lut6,
-            "feed": feed, "absorbed_all": absorbed_all,
-            "z_of_sum": z_of_sum}
-
-
-def lower_pack_ir(packed: "PackedCircuit") -> PackIR:
-    """Flatten a :class:`~repro.core.packing.PackedCircuit` into columns."""
-    net = packed.net
-    arch = packed.arch
-    S = net.n_signals
-
-    cols = _placement_columns(packed)
-    sig_site, sig_lb, alm_lb_arr = (cols["sig_site"], cols["sig_lb"],
-                                    cols["alm_lb"])
-    feed, absorbed_all = cols["feed"], cols["absorbed_all"]
-
-    sig_kind = np.full(S, K_PI, dtype=np.int32)
-    sig_kind[: min(2, S)] = K_CONST
-    for out in net.lut_out:
-        sig_kind[out] = K_LUT
-    for ch in net.chains:
-        for s in ch.sums:
-            sig_kind[s] = K_SUM
-        if ch.cout is not None:
-            sig_kind[ch.cout] = K_COUT
-    for li in absorbed_all:
-        sig_kind[net.lut_out[li]] = K_LUT_ABS
-
-    def lb_of_site(ai: int) -> int:
-        return int(alm_lb_arr[ai]) if ai >= 0 else -1
-
-    def route_cls(s: int, dst_lb: int) -> int:
-        src_lb = lb_of_site(int(sig_site[s]))
-        if src_lb == dst_lb and src_lb >= 0:
-            return ROUTE_LOCAL
-        return ROUTE_GLOBAL
-
-    by_luts, by_chains, sig_level_map = _levelize(net)
-    sig_level = np.zeros(S, dtype=np.int32)
-    for s, lv in sig_level_map.items():
-        sig_level[s] = lv
-    levels = sorted(set(by_luts) | set(by_chains))
-    level_index = {lv: i for i, lv in enumerate(levels)}
-    L = len(levels)
-
-    # fanin CSR accumulators
-    csr_sig: list[list[int]] = [[] for _ in range(S)]
-    csr_cls: list[list[int]] = [[] for _ in range(S)]
-
-    lut_levels: list[LutLevelRows] = []
-    chain_levels: list[ChainLevelRows] = []
-    for _ in range(L):
-        lut_levels.append(None)    # type: ignore[arg-type]
-        chain_levels.append(None)  # type: ignore[arg-type]
-
-    for lv in levels:
-        t = level_index[lv]
-        # ---- LUT rows ----
-        ids = [i for i in by_luts.get(lv, ())
-               if packed.lut_site.get(i) is not None]
-        M = len(ids)
-        ins = np.zeros((M, 6), dtype=np.int32)
-        cls = np.zeros((M, 6), dtype=np.int32)
-        ndc = np.zeros(M, dtype=np.int32)
-        out = np.zeros(M, dtype=np.int32)
-        for r, li in enumerate(ids):
-            osig = net.lut_out[li]
-            out[r] = osig
-            dst_lb = lb_of_site(packed.lut_site[li])
-            k = len(net.lut_inputs[li])
-            if li in absorbed_all:
-                ndc[r] = NDC_ABSORBED
-            elif k <= 4:
-                ndc[r] = NDC_LUT4
-            elif k == 5:
-                ndc[r] = NDC_LUT5
-            else:
-                ndc[r] = NDC_LUT6
-            for j, q in enumerate(net.lut_inputs[li]):
-                if q <= CONST1:
-                    continue
-                ins[r, j] = q
-                cls[r, j] = edge_class(route_cls(q, dst_lb), PIN_AH,
-                                       PATH_NULL)
-                csr_sig[osig].append(q)
-                csr_cls[osig].append(int(cls[r, j]))
-        lut_levels[t] = LutLevelRows(ins=ins, cls=cls, ndc=ndc, out=out)
-
-        # ---- chain rows ----
-        cids = by_chains.get(lv, ())
-        C = len(cids)
-        B = max((len(net.chains[ci].sums) for ci in cids), default=0)
-        a_sig = np.zeros((C, max(B, 1)), dtype=np.int32)
-        a_cls = np.zeros((C, max(B, 1)), dtype=np.int32)
-        b_sig = np.zeros((C, max(B, 1)), dtype=np.int32)
-        b_cls = np.zeros((C, max(B, 1)), dtype=np.int32)
-        cin_sig = np.zeros(C, dtype=np.int32)
-        cin_cls = np.zeros(C, dtype=np.int32)
-        sums = np.full((C, max(B, 1)), -1, dtype=np.int32)
-        cout = np.full(C, -1, dtype=np.int32)
-        last = np.zeros(C, dtype=np.int32)
-        for r, ci in enumerate(cids):
-            ch = net.chains[ci]
-            n = len(ch.sums)
-            last[r] = n - 1
-            if ch.cin > CONST1:
-                ai0 = packed.chain_site.get((ci, 0), -2)
-                cin_sig[r] = ch.cin
-                cin_cls[r] = edge_class(route_cls(ch.cin, lb_of_site(ai0)),
-                                        PIN_AH, PATH_AH)
-            for bi in range(n):
-                ai = packed.chain_site.get((ci, bi), -2)
-                dst_lb = lb_of_site(ai)
-                fkind, absorbed = feed.get((ci, bi), ("lut", []))
-                absorbed_outs = {net.lut_out[l] for l in absorbed}
-                for op_sig, op_cls, s in ((a_sig, a_cls, ch.a[bi]),
-                                          (b_sig, b_cls, ch.b[bi])):
-                    if s <= CONST1:
-                        continue
-                    op_sig[r, bi] = s
-                    if s in absorbed_outs:
-                        # operand computed in the half's own LUTs — no
-                        # routing hop, only the folded A-H adder path
-                        c = edge_class(ROUTE_NULL, PIN_NULL, PATH_AH)
-                    elif fkind == "z":
-                        c = edge_class(route_cls(s, dst_lb), PIN_Z, PATH_Z)
-                    else:
-                        c = edge_class(route_cls(s, dst_lb), PIN_AH, PATH_AH)
-                    op_cls[r, bi] = c
-                sums[r, bi] = ch.sums[bi]
-                edges = [(ch.a[bi], int(a_cls[r, bi])),
-                         (ch.b[bi], int(b_cls[r, bi]))]
-                if bi == 0 and ch.cin > CONST1:
-                    edges.append((ch.cin, int(cin_cls[r])))
-                for q, c in edges:
-                    if q > CONST1:
-                        csr_sig[ch.sums[bi]].append(q)
-                        csr_cls[ch.sums[bi]].append(c)
-            if ch.cout is not None:
-                cout[r] = ch.cout
-        chain_levels[t] = ChainLevelRows(
-            a_sig=a_sig, a_cls=a_cls, b_sig=b_sig, b_cls=b_cls,
-            cin_sig=cin_sig, cin_cls=cin_cls, sums=sums, cout=cout,
-            last=last)
-
-    fanin_ptr = np.zeros(S + 1, dtype=np.int32)
-    for s in range(S):
-        fanin_ptr[s + 1] = fanin_ptr[s] + len(csr_sig[s])
-    fanin_sig = np.array([q for lst in csr_sig for q in lst], dtype=np.int32)
-    fanin_cls = np.array([c for lst in csr_cls for c in lst], dtype=np.int32)
-
-    po_sig = np.array(sorted({s for bus in net.pos.values() for s in bus}),
-                      dtype=np.int32)
-
-    return PackIR(
-        name=net.name, net_digest=net.content_digest(),
-        arch_name=arch.name,
-        structural_key=arch.structural_key(),
-        n_signals=S,
-        sig_site=sig_site, sig_lb=sig_lb, sig_kind=sig_kind,
-        sig_level=sig_level,
-        fanin_ptr=fanin_ptr, fanin_sig=fanin_sig, fanin_cls=fanin_cls,
-        alm_lb=alm_lb_arr, alm_is_arith=cols["alm_is_arith"],
-        alm_feed=cols["alm_feed"], alm_hosted=cols["alm_hosted"],
-        alm_lut6=cols["alm_lut6"],
-        lut_levels=tuple(lut_levels), chain_levels=tuple(chain_levels),
-        po_sig=po_sig,
-        n_alms=packed.n_alms, n_lbs=packed.n_lbs, n_luts=net.n_luts,
-        n_adders=net.n_adders, concurrent_luts=packed.concurrent_luts,
-    )
-
-
-#: the unique class of an absorbed chain operand (no route, no pin, the
-#: folded A-H adder path) — structural, never produced by any other edge
-_CLS_ABSORBED = edge_class(ROUTE_NULL, PIN_NULL, PATH_AH)
-
-
-def lower_pack_ir_incremental(packed: "PackedCircuit",
-                              template: PackIR) -> PackIR:
-    """Re-lower a pack by patching a sibling class's PackIR.
-
-    ``template`` must be a full lowering of a pack of the *same netlist
-    and prefix* (any structural class — typically the first class of a
-    sweep).  Clustering can only move atoms between ALMs/LBs and flip
-    chain-bit feeds, so the netlist-shaped columns (signal kinds/levels,
-    level tables' signals, fanin CSR topology, primary outputs) are
-    reused verbatim and only the placement-derived columns are
-    recomputed: per-signal site/LB, per-ALM mode columns, and every edge
-    delay class (routing locality, A-H vs Z pin, adder path).  The
-    result is array-for-array identical to :func:`lower_pack_ir` — the
-    parity tests compare every column.
-    """
-    net = packed.net
-    arch = packed.arch
-    S = net.n_signals
-    if template.net_digest != net.content_digest():
-        raise ValueError(
-            f"template PackIR {template.name!r} is not a lowering of "
-            f"netlist {net.name!r} — incremental patching needs a sibling "
-            f"structural class of the same circuit (content digests "
-            f"differ)")
-
-    # --- placement-derived columns (shared builder with the full path) -----
-    cols = _placement_columns(packed)
-    sig_lb = cols["sig_lb"]
-    z_of_sum = cols["z_of_sum"]
-
-    # --- patch edge classes level by level ---------------------------------
-    cls_lut_local = edge_class(ROUTE_LOCAL, PIN_AH, PATH_NULL)
-    cls_lut_global = edge_class(ROUTE_GLOBAL, PIN_AH, PATH_NULL)
-    fanin_cls = np.zeros_like(template.fanin_cls)
-    ptr = template.fanin_ptr
-
-    def op_route(src_lb: np.ndarray, dst_lb: np.ndarray) -> np.ndarray:
-        return np.where((src_lb == dst_lb) & (src_lb >= 0),
-                        ROUTE_LOCAL, ROUTE_GLOBAL)
-
-    lut_levels: list[LutLevelRows] = []
-    chain_levels: list[ChainLevelRows] = []
-    for ll, cl in zip(template.lut_levels, template.chain_levels):
-        # ---- LUT rows: route locality is the only class variable ----
-        mask = ll.ins > CONST1
-        dst = sig_lb[ll.out][:, None]
-        local = (sig_lb[ll.ins] == dst) & (sig_lb[ll.ins] >= 0)
-        cls = np.where(mask, np.where(local, cls_lut_local, cls_lut_global),
-                       0).astype(np.int32)
-        lut_levels.append(LutLevelRows(ins=ll.ins, cls=cls, ndc=ll.ndc,
-                                       out=ll.out))
-        if mask.any():
-            offs = np.cumsum(mask, axis=1) - 1
-            slots = ptr[ll.out][:, None] + offs
-            fanin_cls[slots[mask]] = cls[mask]
-
-        # ---- chain rows: absorbed mask is structural (read from the
-        # template), feed kind and routing are placement-derived ----
-        C = cl.cout.shape[0]
-        if C:
-            sums_safe = np.clip(cl.sums, 0, None)
-            dst = np.where(cl.sums >= 0, sig_lb[sums_safe], -1)
-            feed_z = z_of_sum[sums_safe] & (cl.sums >= 0)
-
-            def patch_ops(op_sig, op_cls_tpl):
-                m = op_sig > CONST1
-                absorbed = op_cls_tpl == _CLS_ABSORBED
-                route = op_route(sig_lb[op_sig], dst)
-                c_z = route * 9 + PIN_Z * 3 + PATH_Z
-                c_ah = route * 9 + PIN_AH * 3 + PATH_AH
-                c = np.where(absorbed, _CLS_ABSORBED,
-                             np.where(feed_z, c_z, c_ah))
-                return np.where(m, c, 0).astype(np.int32), m
-
-            a_cls, amask = patch_ops(cl.a_sig, cl.a_cls)
-            b_cls, bmask = patch_ops(cl.b_sig, cl.b_cls)
-            cmask = cl.cin_sig > CONST1
-            route0 = op_route(sig_lb[cl.cin_sig], dst[:, 0])
-            cin_cls = np.where(cmask, route0 * 9 + PIN_AH * 3 + PATH_AH,
-                               0).astype(np.int32)
-            # CSR order per sum: a-edge, b-edge, then cin on bit 0
-            base = ptr[sums_safe]
-            if amask.any():
-                fanin_cls[base[amask]] = a_cls[amask]
-            slots_b = base + amask.astype(np.int32)
-            if bmask.any():
-                fanin_cls[slots_b[bmask]] = b_cls[bmask]
-            slot_c = base[:, 0] + amask[:, 0].astype(np.int32) \
-                + bmask[:, 0].astype(np.int32)
-            if cmask.any():
-                fanin_cls[slot_c[cmask]] = cin_cls[cmask]
-            chain_levels.append(ChainLevelRows(
-                a_sig=cl.a_sig, a_cls=a_cls, b_sig=cl.b_sig, b_cls=b_cls,
-                cin_sig=cl.cin_sig, cin_cls=cin_cls, sums=cl.sums,
-                cout=cl.cout, last=cl.last))
-        else:
-            chain_levels.append(cl)
-
-    return PackIR(
-        name=net.name, net_digest=template.net_digest,
-        arch_name=arch.name,
-        structural_key=arch.structural_key(),
-        n_signals=S,
-        sig_site=cols["sig_site"], sig_lb=sig_lb,
-        sig_kind=template.sig_kind,
-        sig_level=template.sig_level,
-        fanin_ptr=template.fanin_ptr, fanin_sig=template.fanin_sig,
-        fanin_cls=fanin_cls,
-        alm_lb=cols["alm_lb"], alm_is_arith=cols["alm_is_arith"],
-        alm_feed=cols["alm_feed"], alm_hosted=cols["alm_hosted"],
-        alm_lut6=cols["alm_lut6"],
-        lut_levels=tuple(lut_levels), chain_levels=tuple(chain_levels),
-        po_sig=template.po_sig,
-        n_alms=packed.n_alms, n_lbs=packed.n_lbs, n_luts=net.n_luts,
-        n_adders=net.n_adders, concurrent_luts=packed.concurrent_luts,
-    )
+#: the packed lowering's result type — one dataclass serves eval, timing
+#: and equivalence now; kept under the old name for its many importers
+PackIR = CircuitIR

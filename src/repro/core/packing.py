@@ -30,14 +30,14 @@ proves functional equivalence against the source over random vector lanes —
 run ``check_pack_equivalence(net, arch)`` before trusting any area number.
 
 Every pack is also *lowerable*: :meth:`PackedCircuit.lower_ir` flattens the
-object graph into the columnar :class:`~repro.core.pack_ir.PackIR` (per-
+object graph into the unified :class:`~repro.core.circuit_ir.CircuitIR` (per-
 signal site/LB/kind columns, fanin CSR with timing edge classes, per-ALM
 mode columns, levelized node tables) — the shared substrate of the
 vectorized timing analyzer (:mod:`repro.core.timing_vec`), the architecture
 design-space sweep engine (:mod:`repro.core.sweep`) and the benchmark flow
 (:mod:`repro.core.flow`).  Only ``ArchParams.structural_key()`` fields steer
 this module; delay parameters never do, which is what lets a sweep reuse one
-pack (and one PackIR) across every delay row of a structural class.
+pack (and one CircuitIR) across every delay row of a structural class.
 """
 from __future__ import annotations
 
@@ -130,7 +130,7 @@ class PackedCircuit:
     _ir: object | None = field(default=None, repr=False, compare=False)
 
     def lower_ir(self, cache: bool = True, template: object | None = None):
-        """Lower to the columnar :class:`~repro.core.pack_ir.PackIR` (flat
+        """Lower to the unified :class:`~repro.core.circuit_ir.CircuitIR` (flat
         per-signal / per-ALM / per-level arrays — the substrate the
         vectorized timing analyzer and the arch-sweep engine consume).
         The IR is cached on the packed circuit; it is immutable, so any
@@ -144,7 +144,8 @@ class PackedCircuit:
         output to a fresh lowering, at a fraction of the cost — this is
         what a cluster-geometry sweep pays per structural class."""
         if self._ir is None or not cache:
-            from .pack_ir import lower_pack_ir, lower_pack_ir_incremental
+            from .circuit_ir import (lower_pack_ir,
+                                     lower_pack_ir_incremental)
 
             ir = (lower_pack_ir_incremental(self, template)
                   if template is not None else lower_pack_ir(self))

@@ -26,20 +26,30 @@ A sweep over the cluster-geometry axes therefore costs::
 
 instead of ``n_circuits x n_classes`` full packs, and the lowering side
 pairs with it: :meth:`PackedCircuit.lower_ir` accepts a ``template``
-PackIR from any sibling class and patches only the columns clustering
+CircuitIR from any sibling class and patches only the columns clustering
 can change (sites, LBs, edge delay classes, ALM modes) instead of
 re-levelizing the whole netlist (see
-:func:`repro.core.pack_ir.lower_pack_ir_incremental`).
+:func:`repro.core.circuit_ir.lower_pack_ir_incremental`; since PR 5 the
+fresh path shares the same patch over the content-cached functional IR,
+so fresh and template lowering are identical by construction).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
+from . import plan as _planner
 from .alm import ArchParams
 from .netlist import CONST1, Netlist
 from .packing import (ALM, LAST_PACK_DEBUG, ClusterPlan, Half, PackedCircuit,
                       _build_cluster_plan, _cluster, _fanout_counts,
                       _pair_luts)
+
+#: first fully-lowered CircuitIR per (netlist digest, seed) — the template
+#: sibling structural classes patch instead of re-lowering.  Lives in the
+#: shared registry (not on the prefix object) so one
+#: :func:`repro.core.plan.clear_caches` provably forces re-lowering and a
+#: prefix at another seed can never serve a stale template.
+_TEMPLATE_CACHE = _planner.register_cache("ir_template", cap=256)
 
 
 @dataclass
@@ -59,9 +69,27 @@ class PackPrefix:
     singles6: list[int]
     singles5: list[int]
     plan: ClusterPlan
-    #: first fully-lowered PackIR of this prefix (any structural class) —
-    #: the template sibling classes patch instead of re-lowering
-    ir_template: object | None = field(default=None, repr=False)
+
+    def _template_key(self) -> tuple:
+        key = self.__dict__.get("_tpl_key")
+        if key is None:
+            key = (self.net.content_digest(), self.seed)
+            self.__dict__["_tpl_key"] = key
+        return key
+
+    @property
+    def ir_template(self):
+        """First fully-lowered :class:`~repro.core.circuit_ir.CircuitIR`
+        of this prefix (any structural class) — registry-backed, keyed by
+        (netlist content digest, seed)."""
+        return _TEMPLATE_CACHE.get(self._template_key())
+
+    @ir_template.setter
+    def ir_template(self, ir) -> None:
+        if ir is None:
+            _TEMPLATE_CACHE.pop(self._template_key())
+        else:
+            _TEMPLATE_CACHE.put(self._template_key(), ir)
 
 
 def pack_prefix(net: Netlist, seed: int = 0) -> PackPrefix:

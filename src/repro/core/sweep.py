@@ -6,7 +6,7 @@ With :func:`repro.core.alm.make_arch` the DD design space is two integers
 (bypass width x AddMux crossbar fan-in, plus the 6-LUT flag) — and because
 delays never steer the packer, every grid point of a *structural class*
 (:meth:`ArchParams.structural_key`) shares one ``pack()`` and one
-:class:`~repro.core.pack_ir.PackIR`.  A sweep therefore costs:
+:class:`~repro.core.circuit_ir.CircuitIR`.  A sweep therefore costs:
 
     packs:   n_circuits x n_structural_classes      (Python, the slow part)
     timing:  one jit program per class — circuits stacked on one ``vmap``
@@ -65,20 +65,15 @@ def _flatten(nets) -> tuple[list[str], list[Netlist]]:
 
 
 def _envelope_groups(irs, max_groups: int) -> list[list[int]]:
-    """Cluster IRs into <= ``max_groups`` compatible-envelope groups (the
-    evaluator's agglomerative grouping, fed with timing-level envelopes) —
-    one small circuit must not pad to the suite's widest member."""
-    from .eval_jax import group_plans_by_envelope
+    """Cluster IRs into <= ``max_groups`` compatible-envelope groups —
+    the same shared planner the evaluator uses
+    (:func:`repro.core.plan.group_by_envelope`; a :class:`CircuitIR`
+    exposes ``.envelope`` / ``.n_signals`` directly, so the old adapter
+    shim is gone) — one small circuit must not pad to the suite's widest
+    member."""
+    from .plan import group_by_envelope
 
-    class _Env:
-        def __init__(self, ir):
-            m, c, b = ir.level_profile()
-            self.envelope = (ir.n_levels, max(m, default=0),
-                             max(c, default=0), max(b, default=0))
-            self.n_signals = ir.n_signals
-
-    return group_plans_by_envelope([_Env(ir) for ir in irs],
-                                   max_groups=max_groups)
+    return group_by_envelope(irs, max_groups=max_groups)
 
 
 def sweep_suite(nets, archs: Sequence[ArchParams], seed: int = 0,
@@ -98,7 +93,9 @@ def sweep_suite(nets, archs: Sequence[ArchParams], seed: int = 0,
     ``n_circuits x n_classes`` full packs.  Lowering is incremental too:
     the first class lowers each circuit fully, sibling classes patch that
     template's placement-derived columns
-    (:func:`repro.core.pack_ir.lower_pack_ir_incremental`).
+    (:func:`repro.core.circuit_ir.lower_pack_ir_incremental`; fresh
+    lowering shares the same placement patch over the content-cached
+    functional IR, so levelization runs once per circuit digest).
 
     Timing runs as <= ``max_groups`` batched jit programs per class
     (circuits clustered by envelope compatibility so small members do not

@@ -1,8 +1,9 @@
-"""Vectorized static timing over the columnar PackIR.
+"""Vectorized static timing over the unified columnar CircuitIR.
 
 The Python oracle (:func:`repro.core.timing.analyze_oracle`) walks dicts
 signal-by-signal; this module executes the same levelized longest-path
-recurrence as array programs over :class:`~repro.core.pack_ir.PackIR`:
+recurrence as array programs over :class:`~repro.core.circuit_ir.CircuitIR`
+(the same lowering the fused evaluator and the equivalence lanes read):
 
 * **numpy backend** — one gather/max per level, ragged (unpadded) level
   tables, zero compile cost.  This is what ``timing.analyze`` uses for
@@ -27,7 +28,7 @@ delays are non-negative: padded slots gather signal 0 (CONST0, arrival
 ``default=0.0`` reductions exactly.
 
 Delay tables are data, not structure: an edge stores a *class* (0..26,
-see :mod:`repro.core.pack_ir`), the per-arch component table is built
+see :mod:`repro.core.circuit_ir`), the per-arch component table is built
 here by :func:`delay_components` from ``ArchParams.delay_table()`` rows.
 Batching across architectures is therefore just a leading axis on the
 component tables — no retrace, no repack.
@@ -40,8 +41,9 @@ from typing import Sequence
 import numpy as np
 
 from .alm import ArchParams, DELAY_FIELDS
-from .pack_ir import (N_EDGE_CLASSES, N_NODE_CLASSES, NDC_ABSORBED, NDC_LUT4,
-                      NDC_LUT5, NDC_LUT6, PackIR)
+from .circuit_ir import (N_EDGE_CLASSES, N_NODE_CLASSES, NDC_ABSORBED,
+                         NDC_LUT4, NDC_LUT5, NDC_LUT6, CircuitIR)
+from .plan import bucket_envelopes, combined_profile, segment_levels
 
 _IDX = {f: i for i, f in enumerate(DELAY_FIELDS)}
 
@@ -89,7 +91,7 @@ def delay_components(tables: np.ndarray) -> dict[str, np.ndarray]:
 # ---------------------------------------------------------------------------
 
 
-def arrival_times_numpy(ir: PackIR, comps: dict[str, np.ndarray]
+def arrival_times_numpy(ir: CircuitIR, comps: dict[str, np.ndarray]
                         ) -> np.ndarray:
     """Arrival time per signal, float64, oracle-identical."""
     edge, lutc = comps["edge"], comps["lut"]
@@ -127,13 +129,13 @@ def arrival_times_numpy(ir: PackIR, comps: dict[str, np.ndarray]
     return arr
 
 
-def critical_path_numpy(ir: PackIR, comps: dict[str, np.ndarray]) -> float:
+def critical_path_numpy(ir: CircuitIR, comps: dict[str, np.ndarray]) -> float:
     arr = arrival_times_numpy(ir, comps)
     cp = float(arr[ir.po_sig].max()) if ir.po_sig.size else 0.0
     return max(cp, 1.0)
 
 
-def metrics_from_cp(ir: PackIR, arch: ArchParams, cp: float) -> dict:
+def metrics_from_cp(ir: CircuitIR, arch: ArchParams, cp: float) -> dict:
     """The :func:`repro.core.timing.analyze` record for one (IR, arch, cp).
 
     ``n_alms``/``n_lbs``/``concurrent_luts`` come from the IR (structure);
@@ -155,7 +157,7 @@ def metrics_from_cp(ir: PackIR, arch: ArchParams, cp: float) -> dict:
     }
 
 
-def analyze_ir(ir: PackIR, arch: ArchParams, backend: str = "numpy") -> dict:
+def analyze_ir(ir: CircuitIR, arch: ArchParams, backend: str = "numpy") -> dict:
     """Vectorized :func:`repro.core.timing.analyze` over a lowered pack."""
     if backend == "numpy":
         comps = delay_components(arch.delay_table())
@@ -173,7 +175,7 @@ def analyze_ir(ir: PackIR, arch: ArchParams, backend: str = "numpy") -> dict:
 # ---------------------------------------------------------------------------
 
 
-def _pad_levels(ir: PackIR, L: int, bounds, envelopes, sink: int):
+def _pad_levels(ir: CircuitIR, L: int, bounds, envelopes, sink: int):
     """Pad one member's ragged level tables to the bucketed group envelope;
     returns per-bucket 13-tuples of [l, ...] arrays (the scan xs)."""
     out = []
@@ -308,35 +310,23 @@ class SuiteTimingProgram:
             return np.asarray(cps, dtype=np.float64)
 
 
-def build_suite_timing_program(irs: Sequence[PackIR],
+def build_suite_timing_program(irs: Sequence[CircuitIR],
                                max_buckets: int = 3) -> SuiteTimingProgram:
-    """Stack many circuits' PackIRs into one width-bucketed timing program.
+    """Stack many circuits' CircuitIRs into one width-bucketed timing program.
 
     Levels are aligned to the longest member, the combined width profile
     is segmented by the evaluator's padded-volume DP, and every member is
     padded to the bucket envelopes with null rows (sink-scattering,
     zero-gathering).  One program serves the whole suite."""
-    from .eval_jax import _segment_levels  # pure-python DP (lazy: jax import)
-
     import jax.numpy as jnp
 
     if not irs:
         raise ValueError("empty IR list")
     L = max(ir.n_levels for ir in irs)
-    profiles = [ir.level_profile() for ir in irs]
-
-    def col(t, sel):
-        return max((p[sel][t] if t < len(p[sel]) else 0 for p in profiles),
-                   default=0)
-
-    if L == 0:
-        L = 1
-    m = [col(t, 0) for t in range(L)]
-    c = [col(t, 1) for t in range(L)]
-    b = [col(t, 2) for t in range(L)]
-    bounds = _segment_levels(m, c, b, max_buckets)
-    envelopes = [(max(m[i:j], default=0), max(c[i:j], default=0),
-                  max(b[i:j], default=0)) for i, j in bounds]
+    m, c, b = combined_profile([ir.level_profile() for ir in irs], L)
+    L = max(L, 1)
+    bounds = segment_levels(m, c, b, max_buckets)
+    envelopes = bucket_envelopes(m, c, b, bounds)
     n_sig = max(ir.n_signals for ir in irs)
     sink = n_sig
     members = [_pad_levels(ir, L, bounds, envelopes, sink) for ir in irs]
