@@ -1,0 +1,231 @@
+"""Placement-aware design-space sweep — the routed ADP frontier.
+
+The packing-only frontier (``benchmarks/sweep_frontier.py``) asks what
+the DD grid looks like when routing is free; this driver re-places and
+re-times the full Kratos + Koios + VTR suite across the arch grid with
+the wire-tier fabric model on (:mod:`repro.core.place`): every circuit
+is grid-placed once per *placement key* (structural class x grid
+aspect), every grid point's delay row — including the wire-tier profile
+— is then pure data for the batched timing programs.  The question the
+paper never measured: does DD5's density survive real wire delay?
+
+Two gates, both green in ``scripts/check.sh --smoke``:
+
+* **placed oracle parity** — every (circuit, grid point) record is
+  bit-identical to :func:`repro.core.timing.analyze_placed_oracle`, the
+  per-signal Python walk with the same placement;
+* **placement reuse >= 2x** — supplying the grid's placements from the
+  registry cache (one analytic solve per placement key, shared by every
+  wire-delay row of the class) must beat solving a fresh placement at
+  every grid point by >= 2x wall clock (min-of-N on the gated side,
+  ``benchmarks/common.min_of_n``).
+
+Records ``experiments/perf/placed_sweep.json`` — the placement-aware
+frontier that supersedes the packing-only one for routing-pressure
+questions (the packing-only file remains the placement-free reference).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core.alm import arch_grid
+from repro.core.packing import pack
+from repro.core.place import PLACE_COUNTS, place_ir, placement_for
+from repro.core.sweep import _flatten, adp_frontier, sweep_suite
+from repro.core.timing import analyze_placed_oracle
+
+from .common import Timer, emit, min_of_n, suites
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "perf")
+
+#: wire-tier delay profiles (ps): the zero row keeps every placement-free
+#: pin reproducible; the routed row is an apicula-like hierarchy — a
+#: 2-hop wire is cheaper than two 1-hop wires (no intermediate switch),
+#: long wires span the grid at a fixed cost
+WIRE_PROFILES = ((0.0, 0.0, 0.0), (25.0, 40.0, 120.0))
+
+
+def _smoke_suites():
+    from repro.core.circuits import kratos_gemm, vtr_mixed
+
+    return {"smoke": [kratos_gemm(m=5, n=5, width=5, sparsity=0.5),
+                      vtr_mixed(logic_nodes=150, adders=2)]}
+
+
+def _grid(smoke: bool):
+    if smoke:
+        # 2 structural classes x 2 wire profiles = 4 points, 2 placement
+        # keys — the smallest grid where reuse vs per-point is a real 2x
+        return [a for a in arch_grid(wire_delays=WIRE_PROFILES)
+                if a.name in ("b0", "b0_w25", "b2_f10", "b2_f10_w25")]
+    return arch_grid(wire_delays=WIRE_PROFILES)
+
+
+def placement_reuse_gate(nets, grid, packs, seed: int = 0,
+                         smoke: bool = False) -> dict:
+    """The >= 2x warm gate: registry-cached placements (one solve per
+    circuit x placement key) vs a fresh analytic solve at every
+    (circuit, grid point).
+
+    The cached side is what ``sweep_suite(place=True)`` actually pays
+    per warm sweep; min-of-N because container noise only inflates it.
+    The per-point baseline runs once — its noise can only overstate the
+    baseline, never flake the gate.
+    """
+    _, flat = _flatten(nets)
+    digests = [n.content_digest() for n in flat]
+    irs = {}
+    for g in range(len(flat)):
+        for arch in grid:
+            key = (g, arch.structural_key())
+            if key not in irs:
+                irs[key] = packs[(digests[g], arch.structural_key(),
+                                  seed)].lower_ir()
+
+    def reuse_pass():
+        for g in range(len(flat)):
+            for arch in grid:
+                placement_for(irs[(g, arch.structural_key())], arch, seed)
+
+    # warm the registry cache (the cold solves were already paid by the
+    # placed sweep; this makes the measurement independent of call order)
+    reuse_pass()
+    solved0 = PLACE_COUNTS["analytic"]
+    t_reuse, _ = min_of_n(reuse_pass, n=3)
+    assert PLACE_COUNTS["analytic"] == solved0, \
+        "reuse pass must be pure cache hits"
+
+    t0 = time.perf_counter()
+    n_per_point = 0
+    for g in range(len(flat)):
+        for arch in grid:
+            place_ir(irs[(g, arch.structural_key())], arch, seed)
+            n_per_point += 1
+    t_per_point = time.perf_counter() - t0
+
+    n_keys = len({(g, a.placement_key()) for g in range(len(flat))
+                  for a in grid})
+    speedup = t_per_point / max(t_reuse, 1e-9)
+    return {
+        "n_placements_per_point": n_per_point,
+        "n_placements_reused": n_keys,
+        "t_place_per_point_s": t_per_point,
+        "t_place_reuse_s": t_reuse,
+        "speedup_reuse": speedup,
+        "pass_gate": speedup >= 2.0,
+    }
+
+
+def run(smoke: bool = False, verbose: bool = True, seed: int = 0,
+        write_json: bool = True) -> dict:
+    nets = _smoke_suites() if smoke else suites("wallace")
+    grid = _grid(smoke)
+
+    packs: dict = {}
+    programs: dict = {}
+    t0 = time.perf_counter()
+    res = sweep_suite(nets, grid, seed=seed, packs=packs, programs=programs,
+                      place=True)
+    t_cold = time.perf_counter() - t0
+    t_warm, res_warm = min_of_n(
+        lambda: sweep_suite(nets, grid, seed=seed, packs=packs,
+                            programs=programs, place=True),
+        n=3, sample=lambda r, elapsed: elapsed - r.wall["pack_s"])
+
+    # gate (a): every grid point bit-identical to the placed Python
+    # oracle under the same registry-cached placement
+    _, flat = _flatten(nets)
+    digests = [n.content_digest() for n in flat]
+    t0 = time.perf_counter()
+    match = True
+    for g in range(len(flat)):
+        for k, arch in enumerate(grid):
+            p = pack(flat[g], arch, seed=seed)
+            pl = placement_for(p.lower_ir(), arch, seed)
+            want = analyze_placed_oracle(p, pl)
+            for r in (res, res_warm):
+                got = r.records[g][k]
+                if (want["critical_path_ps"] != got["critical_path_ps"]
+                        or want["area_mwta"] != got["area_mwta"]):
+                    match = False
+    t_oracle = time.perf_counter() - t0
+
+    # gate (b): placement reuse across wire-delay rows of a class
+    reuse = placement_reuse_gate(nets, grid, packs, seed=seed, smoke=smoke)
+
+    frontier = adp_frontier(res, baseline="b0")
+    # wire-delay sensitivity: same structural point with/without the
+    # routed-wire profile (the question the packing-only frontier can't ask)
+    by_name = {row["arch"]: row for row in frontier}
+    wire_cost = {
+        name: by_name[f"{name}_w25"]["critical_path_ps"]
+        / by_name[name]["critical_path_ps"]
+        for name in ("b2_f5", "b2_f10", "b2_f20", "b2_f10_l6")
+        if name in by_name and f"{name}_w25" in by_name
+    }
+
+    rec = {
+        "tag": "placed_sweep",
+        "smoke": smoke,
+        "n_circuits": len(flat),
+        "n_grid_points": len(grid),
+        "grid": [{"name": a.name, "bypass_inputs": a.bypass_inputs,
+                  "addmux_fanin": a.addmux_fanin, "lut6": a.concurrent_6lut,
+                  "wire_delays": (a.t_wire_hop1, a.t_wire_hop2,
+                                  a.t_wire_long)} for a in grid],
+        "wire_profiles": [list(w) for w in WIRE_PROFILES],
+        "n_structural_classes": res.n_classes,
+        "t_placed_cold_s": t_cold,
+        "t_placed_warm_s": t_warm,
+        "t_oracle_s": t_oracle,
+        "wall_cold": res.wall,
+        "wall_warm": res_warm.wall,
+        "oracle_match": bool(match),
+        "placement_reuse": reuse,
+        "frontier_vs_b0": frontier,
+        "wire_cpd_ratio": wire_cost,
+        "pass_gate": bool(match) and reuse["pass_gate"],
+    }
+    if write_json and not smoke:
+        os.makedirs(OUT, exist_ok=True)
+        with open(os.path.join(OUT, "placed_sweep.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        for row in frontier:
+            emit(f"place/frontier/{row['arch']}", 0,
+                 f"area={row['area_mwta']:.3f};"
+                 f"cpd={row['critical_path_ps']:.3f};adp={row['adp']:.3f}")
+        emit("place/sweep", 0,
+             f"points={len(grid)};classes={res.n_classes};"
+             f"cold={t_cold:.2f}s;warm={t_warm:.2f}s;"
+             f"oracle_match={match}")
+        emit("place/reuse", 0,
+             f"per_point={reuse['t_place_per_point_s']:.3f}s;"
+             f"reused={reuse['t_place_reuse_s']:.3f}s;"
+             f"speedup={reuse['speedup_reuse']:.1f}x;"
+             f"gate={reuse['pass_gate']}")
+    return rec
+
+
+def main():
+    with Timer() as t:
+        rec = run()
+    best = rec["frontier_vs_b0"][0] if rec["frontier_vs_b0"] else {}
+    emit("place_sweep", t.us,
+         f"points={rec['n_grid_points']};"
+         f"classes={rec['n_structural_classes']};"
+         f"best_adp={best.get('arch', '')}={best.get('adp', 0):.3f};"
+         f"reuse={rec['placement_reuse']['speedup_reuse']:.1f}x;"
+         f"oracle_match={rec['oracle_match']};gate={rec['pass_gate']}")
+    return rec
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--smoke" in sys.argv[1:]:
+        rec = run(smoke=True)
+        sys.exit(0 if rec["pass_gate"] else 1)
+    main()

@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV lines.  Sections:
   beyond — beyond-paper sparsity/width ablations
   sweep — arch-grid ADP frontier (bypass width x AddMux population),
           batched PackIR timing, oracle-gated
+  place — placement-aware ADP frontier (grid placer + wire-tier delays),
+          gated on placed-oracle bit-identity and >= 2x placement reuse
   kernels — Pallas kernel microbenchmarks (interpret mode on CPU)
   roofline — reads dry-run artifacts if present (see launch/dryrun.py)
 
@@ -26,8 +28,10 @@ in the noise; see ``experiments/perf/timing_sweep.json`` for the
 suite-scale sweep numbers).
 
 ``--smoke`` is the fast-tier CI entrypoint (also ``scripts/check.sh``):
-runs ``pytest -m "not slow"`` plus a 2-point arch-grid sweep gated on
-oracle bit-identity, and exits non-zero on any failure.
+runs ``pytest -m "not slow"``, a 2-point arch-grid sweep gated on oracle
+bit-identity, the IR-parity step, and a 2-circuit placement gate (placed
+sweep bit-identical to the placed oracle + >= 2x placement reuse), and
+exits non-zero on any failure.
 """
 from __future__ import annotations
 
@@ -43,6 +47,7 @@ SECTIONS = [
     ("table4", "table4_e2e"),
     ("beyond", "beyond_paper"),
     ("sweep", "sweep_frontier"),
+    ("place", "place_sweep"),
     ("kernels", "kernels"),
     ("roofline", "roofline"),
 ]
@@ -96,7 +101,9 @@ def smoke() -> int:
     """Fast-tier check: ``pytest -m "not slow"`` + a 2-point arch-grid
     sweep proven bit-identical to the timing oracle + the IR-parity step
     (two circuits lowered ONCE each; eval and timing both proven against
-    their oracles from the same CircuitIR object)."""
+    their oracles from the same CircuitIR object) + the 2-circuit
+    placement gate (placed sweep bit-identical to the placed oracle,
+    placement reuse >= 2x vs place-per-point)."""
     import os
     import subprocess
 
@@ -129,11 +136,23 @@ def smoke() -> int:
         print(f"smoke_ir_parity,,failed({type(e).__name__}: {e})",
               file=sys.stderr)
         ir_ok = False
-    ok = tests.returncode == 0 and sweep_ok and ir_ok
+    print("== smoke: 2-circuit placement parity + reuse gate ==",
+          flush=True)
+    try:
+        from .place_sweep import run as place_run
+
+        prec = place_run(smoke=True)
+        place_ok = prec["pass_gate"]
+    except Exception as e:  # noqa: BLE001
+        print(f"smoke_place,,failed({type(e).__name__}: {e})",
+              file=sys.stderr)
+        place_ok = False
+    ok = tests.returncode == 0 and sweep_ok and ir_ok and place_ok
     print(f"smoke,,{'ok' if ok else 'failed'}"
           f"(tests={'ok' if tests.returncode == 0 else 'fail'};"
           f"sweep={'ok' if sweep_ok else 'fail'};"
-          f"ir_parity={'ok' if ir_ok else 'fail'})")
+          f"ir_parity={'ok' if ir_ok else 'fail'};"
+          f"place={'ok' if place_ok else 'fail'})")
     return 0 if ok else 1
 
 

@@ -53,6 +53,7 @@ DELAY_FIELDS = (
     "t_lbin_to_ah", "t_lbin_to_z", "t_ah_to_adder", "t_z_to_adder",
     "t_lut4", "t_lut5", "t_lut6", "t_carry", "t_sum_out", "t_alm_out",
     "t_out_mux_extra", "t_route_global", "t_route_local",
+    "t_wire_hop1", "t_wire_hop2", "t_wire_long",
 )
 
 
@@ -100,6 +101,16 @@ class ArchParams:
     t_out_mux_extra: float = 0.0  # DD6 output-mux penalty
     t_route_global: float = 620.0
     t_route_local: float = 160.0
+    # routed-fabric model (see repro.core.place): the LB grid the placer
+    # legalizes onto and the tiered wire hierarchy an inter-LB edge rides
+    # (tile-local / 1-hop / 2-hop / long wires, apicula-style).  Wire-tier
+    # delays default to ZERO so the placement-free timing numbers are
+    # reproduced bit-for-bit; a routed-fabric grid point sets them.
+    grid_aspect: float = 1.0      # W/H aspect of the LB placement grid
+    channel_width: int = 400      # routing tracks per channel (Fig. 8 proxy)
+    t_wire_hop1: float = 0.0      # extra ps for a 1-hop inter-LB route
+    t_wire_hop2: float = 0.0      # extra ps for a 2-hop route
+    t_wire_long: float = 0.0      # extra ps for a long-wire (>2 hop) route
 
     @property
     def input_budget(self) -> int:
@@ -135,6 +146,15 @@ class ArchParams:
                 self.alms_per_lb, self.lb_inputs, self.ext_pin_util,
                 self.direct_link_inputs, self.lb_outputs, self.z_sources,
                 self.z_local_free)
+
+    def placement_key(self) -> tuple:
+        """The placement-affecting fields: the structural key (it decides
+        the pack, hence the LB graph) plus the grid geometry.  Wire-tier
+        delays and ``channel_width`` are deliberately absent — the
+        analytic placer minimizes wirelength, not timing, so every delay
+        row of a class shares one placement (the sweep engine's
+        place-once-retime-many contract)."""
+        return self.structural_key() + (self.grid_aspect,)
 
 
 _FIELD_DEFAULTS = {f.name: f.default for f in fields(ArchParams)}
@@ -209,21 +229,26 @@ def make_arch(name: str, bypass_inputs: int = 0, addmux_fanin: int = 10,
 
 def arch_grid(bypass_inputs=(0, 2), addmux_fanin=(5, 10, 20),
               lut6=(False, True), alms_per_lb=(10,), lb_inputs=(60,),
-              ext_pin_util=(0.9,)) -> list[ArchParams]:
+              ext_pin_util=(0.9,),
+              wire_delays=((0.0, 0.0, 0.0),)) -> list[ArchParams]:
     """The DD design-space grid: bypass width x crossbar population x
     6-LUT concurrency, crossed with the **structural cluster-geometry
     axes** the paper holds fixed at the Stratix-10-like point —
     ``alms_per_lb`` (LB capacity), ``lb_inputs`` (crossbar input pins)
-    and ``ext_pin_util`` (usable-pin fraction).  Geometry axes default to
-    singleton canonical values, so the historical 7-point grid is
-    unchanged; widening any of them multiplies the grid (and, because
-    the geometry knobs are all pack-affecting, the structural classes —
-    the incremental repacker in :mod:`repro.core.repack` is what keeps
-    that affordable).  Infeasible corners (lut6 without full bypass) and
-    redundant baseline fan-in points are dropped; the canonical
-    baseline/DD5/DD6 rows appear under grid names (``b0``, ``b2_f10``,
-    ``b2_f10_l6``) with identical parameters; non-canonical geometry
-    points carry ``_a<alms>``/``_i<inputs>``/``_u<util%>`` suffixes."""
+    and ``ext_pin_util`` (usable-pin fraction) — and with the
+    **routed-fabric axis** ``wire_delays``: ``(t_wire_hop1, t_wire_hop2,
+    t_wire_long)`` tier triples the placement-aware timing path consumes
+    (non-structural: every triple of a class shares one pack AND one
+    placement).  All extra axes default to singleton canonical values, so
+    the historical 7-point grid is unchanged; widening any of them
+    multiplies the grid (the incremental repacker in
+    :mod:`repro.core.repack` and the placement cache in
+    :mod:`repro.core.place` are what keep that affordable).  Infeasible
+    corners (lut6 without full bypass) and redundant baseline fan-in
+    points are dropped; the canonical baseline/DD5/DD6 rows appear under
+    grid names (``b0``, ``b2_f10``, ``b2_f10_l6``) with identical
+    parameters; non-canonical points carry
+    ``_a<alms>``/``_i<inputs>``/``_u<util%>``/``_w<hop1>`` suffixes."""
     grid: list[ArchParams] = []
     seen: set[tuple] = set()
     for b in bypass_inputs:
@@ -235,20 +260,25 @@ def arch_grid(bypass_inputs=(0, 2), addmux_fanin=(5, 10, 20),
                 for apl in alms_per_lb:
                     for li in lb_inputs:
                         for u in ext_pin_util:
-                            name = (f"b{b}" + (f"_f{f}" if b else "")
-                                    + ("_l6" if l6 else "")
-                                    + (f"_a{apl}" if apl != 10 else "")
-                                    + (f"_i{li}" if li != 60 else "")
-                                    + (f"_u{round(u * 100)}" if u != 0.9
-                                       else ""))
-                            key = (b, f if b else 10, l6, apl, li, u)
-                            if key in seen:
-                                continue
-                            seen.add(key)
-                            grid.append(make_arch(
-                                name, bypass_inputs=b, addmux_fanin=f,
-                                lut6=l6, alms_per_lb=apl, lb_inputs=li,
-                                ext_pin_util=u))
+                            for wd in wire_delays:
+                                w1, w2, wl = wd
+                                name = (f"b{b}" + (f"_f{f}" if b else "")
+                                        + ("_l6" if l6 else "")
+                                        + (f"_a{apl}" if apl != 10 else "")
+                                        + (f"_i{li}" if li != 60 else "")
+                                        + (f"_u{round(u * 100)}" if u != 0.9
+                                           else "")
+                                        + (f"_w{round(w1)}" if any(wd)
+                                           else ""))
+                                key = (b, f if b else 10, l6, apl, li, u, wd)
+                                if key in seen:
+                                    continue
+                                seen.add(key)
+                                grid.append(make_arch(
+                                    name, bypass_inputs=b, addmux_fanin=f,
+                                    lut6=l6, alms_per_lb=apl, lb_inputs=li,
+                                    ext_pin_util=u, t_wire_hop1=w1,
+                                    t_wire_hop2=w2, t_wire_long=wl))
     return grid
 
 

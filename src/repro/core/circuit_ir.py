@@ -101,6 +101,14 @@ PIN_NULL, PIN_AH, PIN_Z = 0, 1, 2
 PATH_NULL, PATH_AH, PATH_Z = 0, 1, 2
 N_EDGE_CLASSES = 27
 
+# wire tiers of a placed inter-LB edge (repro.core.place): tier 0 is the
+# null/tile-local wire (zero delay — also every edge of an unplaced IR),
+# 1-hop and 2-hop wires carry Manhattan-distance-1/-2 routes, and any
+# longer route rides one long wire (the 8-hop spans of the apicula-style
+# hierarchy cover the grids the suites legalize onto).
+TIER_NONE, TIER_HOP1, TIER_HOP2, TIER_LONG = range(4)
+N_WIRE_TIERS = 4
+
 # node delay classes for LUT rows
 NDC_ABSORBED, NDC_LUT4, NDC_LUT5, NDC_LUT6 = range(4)
 N_NODE_CLASSES = 4
@@ -143,6 +151,7 @@ class LutLevelRows:
     tt_hi: np.ndarray     # [M] uint32 high word
     cls: np.ndarray       # [M, 6] int32 edge classes (0 on const/padded pins;
     #                       all-zero in functional IRs)
+    hop: np.ndarray       # [M, 6] int32 wire tier (0 in unplaced IRs)
     ndc: np.ndarray       # [M] int32 node delay class
     out: np.ndarray       # [M] int32 output signal
 
@@ -154,10 +163,13 @@ class ChainLevelRows:
 
     a_sig: np.ndarray     # [C, B] int32 (consts kept verbatim)
     a_cls: np.ndarray     # [C, B] int32
+    a_hop: np.ndarray     # [C, B] int32 wire tier (0 in unplaced IRs)
     b_sig: np.ndarray     # [C, B] int32
     b_cls: np.ndarray     # [C, B] int32
+    b_hop: np.ndarray     # [C, B] int32
     cin_sig: np.ndarray   # [C] int32 (the chain's real cin, consts included)
     cin_cls: np.ndarray   # [C] int32
+    cin_hop: np.ndarray   # [C] int32
     sums: np.ndarray      # [C, B] int32 (-1 on padded bits)
     cout: np.ndarray      # [C] int32 (-1 when the chain has no cout)
     last: np.ndarray      # [C] int32 index of the last real bit
@@ -185,10 +197,15 @@ class CircuitIR:
     sig_lb: np.ndarray
     sig_kind: np.ndarray
     sig_level: np.ndarray
+    # per-signal placement columns: grid coordinates of the producing LB
+    # (-1 for PIs/constants and in unplaced IRs; see apply_placement)
+    sig_x: np.ndarray
+    sig_y: np.ndarray
     # fanin CSR (timing edges)
     fanin_ptr: np.ndarray
     fanin_sig: np.ndarray
     fanin_cls: np.ndarray
+    fanin_hop: np.ndarray
     # per-ALM columns
     alm_lb: np.ndarray
     alm_is_arith: np.ndarray
@@ -205,6 +222,14 @@ class CircuitIR:
     n_luts: int
     n_adders: int
     concurrent_luts: int
+    # placement metadata (0 / None until apply_placement fills the grid)
+    grid_w: int = 0
+    grid_h: int = 0
+    placement_seed: int | None = None
+
+    @property
+    def placed(self) -> bool:
+        return self.grid_w > 0
 
     @property
     def n_levels(self) -> int:
@@ -322,7 +347,8 @@ def _lower_functional(net: Netlist, digest: str) -> CircuitIR:
                     csr_sig[osig].append(q)
         lut_levels.append(LutLevelRows(
             ins=ins, tt_lo=tt_lo, tt_hi=tt_hi,
-            cls=np.zeros((M, 6), dtype=np.int32), ndc=ndc, out=out))
+            cls=np.zeros((M, 6), dtype=np.int32),
+            hop=np.zeros((M, 6), dtype=np.int32), ndc=ndc, out=out))
 
         # ---- chain rows ----
         cids = by_chains.get(lv, ())
@@ -352,8 +378,11 @@ def _lower_functional(net: Netlist, digest: str) -> CircuitIR:
                     csr_sig[ch.sums[0]].append(ch.cin)
         chain_levels.append(ChainLevelRows(
             a_sig=a_sig, a_cls=np.zeros_like(a_sig),
+            a_hop=np.zeros_like(a_sig),
             b_sig=b_sig, b_cls=np.zeros_like(b_sig),
+            b_hop=np.zeros_like(b_sig),
             cin_sig=cin_sig, cin_cls=np.zeros_like(cin_sig),
+            cin_hop=np.zeros_like(cin_sig),
             sums=sums, cout=cout, last=last))
 
     fanin_ptr = np.zeros(S + 1, dtype=np.int32)
@@ -372,8 +401,11 @@ def _lower_functional(net: Netlist, digest: str) -> CircuitIR:
         sig_site=np.full(S, -1, dtype=np.int32),
         sig_lb=np.full(S, -1, dtype=np.int32),
         sig_kind=sig_kind, sig_level=sig_level,
+        sig_x=np.full(S, -1, dtype=np.int32),
+        sig_y=np.full(S, -1, dtype=np.int32),
         fanin_ptr=fanin_ptr, fanin_sig=fanin_sig,
         fanin_cls=np.zeros_like(fanin_sig),
+        fanin_hop=np.zeros_like(fanin_sig),
         alm_lb=empty_i32, alm_is_arith=np.zeros(0, dtype=bool),
         alm_feed=np.zeros((0, 2), dtype=np.int32),
         alm_hosted=np.zeros((0, 2), dtype=np.int32),
@@ -497,7 +529,8 @@ def _patch_placement(base: CircuitIR, packed: "PackedCircuit") -> CircuitIR:
         ndc = np.where(absorbed_sig[ll.out], NDC_ABSORBED,
                        ll.ndc).astype(np.int32)
         lut_levels.append(LutLevelRows(ins=ll.ins, tt_lo=ll.tt_lo,
-                                       tt_hi=ll.tt_hi, cls=cls, ndc=ndc,
+                                       tt_hi=ll.tt_hi, cls=cls,
+                                       hop=np.zeros_like(cls), ndc=ndc,
                                        out=ll.out))
         if mask.any():
             offs = np.cumsum(mask, axis=1) - 1
@@ -545,14 +578,19 @@ def _patch_placement(base: CircuitIR, packed: "PackedCircuit") -> CircuitIR:
             if cmask.any():
                 fanin_cls[slot_c[cmask]] = cin_cls[cmask]
             chain_levels.append(ChainLevelRows(
-                a_sig=cl.a_sig, a_cls=a_cls, b_sig=cl.b_sig, b_cls=b_cls,
-                cin_sig=cl.cin_sig, cin_cls=cin_cls, sums=cl.sums,
+                a_sig=cl.a_sig, a_cls=a_cls, a_hop=np.zeros_like(a_cls),
+                b_sig=cl.b_sig, b_cls=b_cls, b_hop=np.zeros_like(b_cls),
+                cin_sig=cl.cin_sig, cin_cls=cin_cls,
+                cin_hop=np.zeros_like(cin_cls), sums=cl.sums,
                 cout=cl.cout, last=cl.last))
         else:
             chain_levels.append(ChainLevelRows(
                 a_sig=cl.a_sig, a_cls=np.zeros_like(cl.a_cls),
+                a_hop=np.zeros_like(cl.a_cls),
                 b_sig=cl.b_sig, b_cls=np.zeros_like(cl.b_cls),
+                b_hop=np.zeros_like(cl.b_cls),
                 cin_sig=cl.cin_sig, cin_cls=np.zeros_like(cl.cin_cls),
+                cin_hop=np.zeros_like(cl.cin_cls),
                 sums=cl.sums, cout=cl.cout, last=cl.last))
 
     return CircuitIR(
@@ -562,8 +600,11 @@ def _patch_placement(base: CircuitIR, packed: "PackedCircuit") -> CircuitIR:
         n_signals=S,
         sig_site=cols["sig_site"], sig_lb=sig_lb,
         sig_kind=sig_kind, sig_level=base.sig_level,
+        sig_x=np.full(S, -1, dtype=np.int32),
+        sig_y=np.full(S, -1, dtype=np.int32),
         fanin_ptr=base.fanin_ptr, fanin_sig=base.fanin_sig,
         fanin_cls=fanin_cls,
+        fanin_hop=np.zeros_like(fanin_cls),
         alm_lb=cols["alm_lb"], alm_is_arith=cols["alm_is_arith"],
         alm_feed=cols["alm_feed"], alm_hosted=cols["alm_hosted"],
         alm_lut6=cols["alm_lut6"],
@@ -605,3 +646,111 @@ def lower_pack_ir_incremental(packed: "PackedCircuit",
             f"digests differ)")
     LOWER_COUNTS["placement_incremental"] += 1
     return _patch_placement(template, packed)
+
+
+# ---------------------------------------------------------------------------
+# grid-placement patch (per (digest, placement key, seed))
+# ---------------------------------------------------------------------------
+
+
+def apply_placement(ir: CircuitIR, placement) -> CircuitIR:
+    """Fill the grid-placement columns of a packed :class:`CircuitIR`.
+
+    ``placement`` is a :class:`repro.core.place.GridPlacement` (anything
+    with ``lb_x``/``lb_y``/``grid_w``/``grid_h``/``seed`` works) of the
+    same pack — one slot per LB.  A third, orthogonal patch stage on top
+    of the functional lowering and the placement-derived edge classes:
+    it rewrites only the wire-tier columns (``hop`` per level-table pin,
+    ``fanin_hop`` per CSR edge) and the per-signal grid coordinates.
+
+    Wire tiers follow the Manhattan distance between the producing and
+    consuming LB slots: same LB (or an absorbed operand, or a PI/constant
+    source — nothing to route through the fabric grid) → :data:`TIER_NONE`
+    (zero delay), distance 1 → :data:`TIER_HOP1`, distance 2 →
+    :data:`TIER_HOP2`, anything farther rides one long wire
+    (:data:`TIER_LONG`).  Tier delays are per-arch *data*
+    (``t_wire_hop1/2``/``t_wire_long`` rows of the delay table), so every
+    delay row of a structural class shares this one placed IR; at the
+    all-zero default tier delays the placed timing path is bit-identical
+    to the unplaced one.
+    """
+    import dataclasses
+
+    if ir.arch_name is None:
+        raise ValueError(
+            f"{ir.name}: cannot place a functional IR — placement needs "
+            f"the packed LB columns (lower the pack first)")
+    lb_x = np.asarray(placement.lb_x, dtype=np.int32)
+    lb_y = np.asarray(placement.lb_y, dtype=np.int32)
+    if lb_x.shape[0] != ir.n_lbs:
+        raise ValueError(
+            f"{ir.name}: placement has {lb_x.shape[0]} LB slots but the "
+            f"IR packs {ir.n_lbs} LBs — not a placement of this pack")
+
+    sig_lb = ir.sig_lb
+    S = ir.n_signals
+    sig_x = np.full(S, -1, dtype=np.int32)
+    sig_y = np.full(S, -1, dtype=np.int32)
+    placed = sig_lb >= 0
+    if lb_x.size:
+        sig_x[placed] = lb_x[sig_lb[placed]]
+        sig_y[placed] = lb_y[sig_lb[placed]]
+
+    def tiers(op_sig, dst_lb):
+        src_lb = sig_lb[op_sig]
+        routed = (src_lb >= 0) & (dst_lb >= 0) & (src_lb != dst_lb)
+        if not lb_x.size:
+            return np.zeros(op_sig.shape, dtype=np.int32)
+        sl = np.clip(src_lb, 0, None)
+        dl = np.clip(dst_lb, 0, None)
+        d = np.abs(lb_x[sl] - lb_x[dl]) + np.abs(lb_y[sl] - lb_y[dl])
+        t = np.where(d <= 1, TIER_HOP1,
+                     np.where(d == 2, TIER_HOP2, TIER_LONG))
+        return np.where(routed, t, TIER_NONE).astype(np.int32)
+
+    fanin_hop = np.zeros_like(ir.fanin_hop)
+    ptr = ir.fanin_ptr
+    lut_levels: list[LutLevelRows] = []
+    chain_levels: list[ChainLevelRows] = []
+    for ll, cl in zip(ir.lut_levels, ir.chain_levels):
+        mask = ll.ins > CONST1
+        hop = np.where(mask, tiers(ll.ins, sig_lb[ll.out][:, None]),
+                       0).astype(np.int32)
+        lut_levels.append(dataclasses.replace(ll, hop=hop))
+        if mask.any():
+            offs = np.cumsum(mask, axis=1) - 1
+            slots = ptr[ll.out][:, None] + offs
+            fanin_hop[slots[mask]] = hop[mask]
+
+        C = cl.cout.shape[0]
+        if C:
+            sums_safe = np.clip(cl.sums, 0, None)
+            dst = np.where(cl.sums >= 0, sig_lb[sums_safe], -1)
+            amask = cl.a_sig > CONST1
+            bmask = cl.b_sig > CONST1
+            cmask = cl.cin_sig > CONST1
+            a_hop = np.where(amask, tiers(cl.a_sig, dst), 0).astype(np.int32)
+            b_hop = np.where(bmask, tiers(cl.b_sig, dst), 0).astype(np.int32)
+            cin_hop = np.where(cmask, tiers(cl.cin_sig, dst[:, 0]),
+                               0).astype(np.int32)
+            chain_levels.append(dataclasses.replace(
+                cl, a_hop=a_hop, b_hop=b_hop, cin_hop=cin_hop))
+            # CSR order per sum: a-edge, b-edge, then cin on bit 0
+            base_slots = ptr[sums_safe]
+            if amask.any():
+                fanin_hop[base_slots[amask]] = a_hop[amask]
+            slots_b = base_slots + amask.astype(np.int32)
+            if bmask.any():
+                fanin_hop[slots_b[bmask]] = b_hop[bmask]
+            slot_c = base_slots[:, 0] + amask[:, 0].astype(np.int32) \
+                + bmask[:, 0].astype(np.int32)
+            if cmask.any():
+                fanin_hop[slot_c[cmask]] = cin_hop[cmask]
+        else:
+            chain_levels.append(cl)
+
+    return dataclasses.replace(
+        ir, sig_x=sig_x, sig_y=sig_y, fanin_hop=fanin_hop,
+        lut_levels=tuple(lut_levels), chain_levels=tuple(chain_levels),
+        grid_w=int(placement.grid_w), grid_h=int(placement.grid_h),
+        placement_seed=int(placement.seed))

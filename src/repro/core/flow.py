@@ -131,7 +131,8 @@ def sweep_architectures(suites_or_nets, archs=None, seed: int = 0,
                         packs: dict | None = None,
                         programs: dict | None = None,
                         prefixes: dict | None = None,
-                        grid_axes: dict | None = None):
+                        grid_axes: dict | None = None,
+                        place: bool = False):
     """Design-space sweep over an architecture grid (see
     :func:`repro.core.sweep.sweep_suite`).  ``archs`` defaults to the
     full bypass-width x crossbar-population grid; pass any list of
@@ -145,7 +146,10 @@ def sweep_architectures(suites_or_nets, archs=None, seed: int = 0,
     forwarded verbatim: a flow caller can now both match a direct
     ``sweep_suite`` configuration and hit a ``programs`` cache warmed
     with a non-default grouping.  ``packs``/``programs``/``prefixes``
-    are the caller-owned content-keyed caches of ``sweep_suite``."""
+    are the caller-owned content-keyed caches of ``sweep_suite``.
+    ``place=True`` grid-places every circuit and includes the wire-tier
+    delay term (placements registry-cached per placement key; see
+    :mod:`repro.core.place`)."""
     from .alm import arch_grid
     from .sweep import sweep_suite
 
@@ -155,7 +159,8 @@ def sweep_architectures(suites_or_nets, archs=None, seed: int = 0,
         raise ValueError("pass either archs or grid_axes, not both")
     return sweep_suite(suites_or_nets, archs, seed=seed, backend=backend,
                        max_buckets=max_buckets, max_groups=max_groups,
-                       packs=packs, programs=programs, prefixes=prefixes)
+                       packs=packs, programs=programs, prefixes=prefixes,
+                       place=place)
 
 
 def sweep_frontier(result, baseline: str | None = None):

@@ -33,7 +33,10 @@ here (:func:`register_cache`) and are cleared together by ONE
   :class:`FusedPlan` and stacked group tensors;
 * ``ir_template`` — the sweep engine's per-(circuit digest, seed)
   template IR that sibling structural classes patch
-  (:attr:`repro.core.repack.PackPrefix.ir_template`).
+  (:attr:`repro.core.repack.PackPrefix.ir_template`);
+* ``placement`` — grid placements per (circuit digest, arch placement
+  key, seed) (:func:`repro.core.place.placement_for`) — shared by every
+  wire-delay row of a structural class x grid aspect.
 
 Invalidation rule: every key starts with a netlist *content digest*
 (:meth:`~repro.core.netlist.Netlist.content_digest`), so structural edits

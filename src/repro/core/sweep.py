@@ -80,7 +80,8 @@ def sweep_suite(nets, archs: Sequence[ArchParams], seed: int = 0,
                 max_buckets: int = 3, max_groups: int = 4,
                 backend: str = "jax", packs: dict | None = None,
                 programs: dict | None = None,
-                prefixes: dict | None = None) -> SweepResult:
+                prefixes: dict | None = None,
+                place: bool = False) -> SweepResult:
     """Pack + re-time ``nets`` under every arch of the grid.
 
     ``nets`` is a list of netlists or a ``{suite_name: [netlists]}`` dict.
@@ -111,6 +112,17 @@ def sweep_suite(nets, archs: Sequence[ArchParams], seed: int = 0,
     serves wrong entries — when reused with a different list.  A warm
     sweep then pays only the batched executions — delay tables are data,
     not shapes.
+
+    ``place=True`` additionally grid-places every circuit and times the
+    placed IRs (wire-tier delays included).  Placements are registry-
+    cached per ``(circuit digest, arch placement key, seed)`` — the
+    placement key is the structural key + grid aspect, *not* the delay
+    row — so all wire-delay rows of a class share one placement: a grid
+    crossing many wire profiles pays ``n_circuits x n_classes x
+    n_aspects`` placements, not one per point (the reuse
+    ``benchmarks/place_sweep.py`` gates at >= 2x).  Within a class,
+    rows are subgrouped by grid aspect (aspect reshapes the grid, hence
+    the hop columns) and each subgroup runs as its own batched program.
     """
     from .repack import pack_prefix, repack
 
@@ -119,7 +131,7 @@ def sweep_suite(nets, archs: Sequence[ArchParams], seed: int = 0,
     classes = group_archs_by_structure(archs)
     records: list[list[dict | None]] = [[None] * len(archs) for _ in flat]
     wall = {"pack_s": 0.0, "prefix_s": 0.0, "recluster_s": 0.0,
-            "lower_s": 0.0, "build_s": 0.0, "timing_s": 0.0}
+            "lower_s": 0.0, "place_s": 0.0, "build_s": 0.0, "timing_s": 0.0}
     if packs is None:
         packs = {}
     if programs is None:
@@ -163,47 +175,75 @@ def sweep_suite(nets, archs: Sequence[ArchParams], seed: int = 0,
             all_irs[c].append(ir)
         wall["lower_s"] += time.perf_counter() - t0
     # --- phase 2: batched timing, class-outer ---------------------------
+    # With placement, a class's rows are further subgrouped by grid
+    # aspect: aspect reshapes the slot grid (hence every hop column) but
+    # wire delays stay pure data, so one placed program per (class,
+    # aspect) re-times all of that subgroup's delay rows.
     for c, idx_list in enumerate(classes):
         skey = skeys[c]
         irs = all_irs[c]
-        tables = np.stack([archs[i].delay_table() for i in idx_list])
-        if backend == "jax":
-            t0 = time.perf_counter()
-            progs = programs.get(
-                (suite_key, skey, seed, max_buckets, max_groups))
-            if progs is None:
-                groups = _envelope_groups(irs, max_groups)
-                progs = [(members,
-                          build_suite_timing_program(
-                              [irs[i] for i in members],
-                              max_buckets=max_buckets))
-                         for members in groups]
-                programs[(suite_key, skey, seed, max_buckets,
-                          max_groups)] = progs
-            wall["build_s"] += time.perf_counter() - t0
-            t0 = time.perf_counter()
-            cps = np.zeros((len(irs), len(idx_list)))
-            for members, prog in progs:
-                gcps = prog.run(tables)
-                for row, gi in enumerate(members):
-                    cps[gi] = gcps[row]
-            wall["timing_s"] += time.perf_counter() - t0
-        elif backend == "numpy":
-            t0 = time.perf_counter()
-            cps = np.zeros((len(irs), len(idx_list)))
-            for k in range(len(idx_list)):
-                comps = delay_components(tables[k])
-                for g, ir in enumerate(irs):
-                    cps[g, k] = critical_path_numpy(ir, comps)
-            wall["timing_s"] += time.perf_counter() - t0
+        if place:
+            by_aspect: dict[float, list[int]] = {}
+            for i in idx_list:
+                by_aspect.setdefault(archs[i].grid_aspect, []).append(i)
+            subgroups = list(by_aspect.values())
         else:
-            raise ValueError(f"unknown sweep backend {backend!r}")
-        for g, ir in enumerate(irs):
-            for k, ai in enumerate(idx_list):
-                rec = metrics_from_cp(ir, archs[ai], float(cps[g, k]))
-                rec["net"] = flat[g].name
-                rec["suite"] = suites[g]
-                records[g][ai] = rec
+            subgroups = [idx_list]
+        for sub_idx in subgroups:
+            if place:
+                from .circuit_ir import apply_placement
+                from .place import placement_for
+
+                rep = archs[sub_idx[0]]
+                pkey = rep.placement_key()
+                t0 = time.perf_counter()
+                use_irs = [apply_placement(
+                    ir, placement_for(ir, rep, seed)) for ir in irs]
+                wall["place_s"] += time.perf_counter() - t0
+            else:
+                pkey = None
+                use_irs = irs
+            tables = np.stack([archs[i].delay_table() for i in sub_idx])
+            if backend == "jax":
+                t0 = time.perf_counter()
+                # pkey last: positions of the pre-placement key elements
+                # (suite, skey, seed, buckets, groups) stay stable for
+                # callers/tests that probe grouping knobs by index.
+                prog_key = (suite_key, skey, seed, max_buckets,
+                            max_groups, pkey)
+                progs = programs.get(prog_key)
+                if progs is None:
+                    groups = _envelope_groups(use_irs, max_groups)
+                    progs = [(members,
+                              build_suite_timing_program(
+                                  [use_irs[i] for i in members],
+                                  max_buckets=max_buckets))
+                             for members in groups]
+                    programs[prog_key] = progs
+                wall["build_s"] += time.perf_counter() - t0
+                t0 = time.perf_counter()
+                cps = np.zeros((len(use_irs), len(sub_idx)))
+                for members, prog in progs:
+                    gcps = prog.run(tables)
+                    for row, gi in enumerate(members):
+                        cps[gi] = gcps[row]
+                wall["timing_s"] += time.perf_counter() - t0
+            elif backend == "numpy":
+                t0 = time.perf_counter()
+                cps = np.zeros((len(use_irs), len(sub_idx)))
+                for k in range(len(sub_idx)):
+                    comps = delay_components(tables[k])
+                    for g, ir in enumerate(use_irs):
+                        cps[g, k] = critical_path_numpy(ir, comps)
+                wall["timing_s"] += time.perf_counter() - t0
+            else:
+                raise ValueError(f"unknown sweep backend {backend!r}")
+            for g, ir in enumerate(use_irs):
+                for k, ai in enumerate(sub_idx):
+                    rec = metrics_from_cp(ir, archs[ai], float(cps[g, k]))
+                    rec["net"] = flat[g].name
+                    rec["suite"] = suites[g]
+                    records[g][ai] = rec
     record_timing_wall(wall["timing_s"] + wall["lower_s"] + wall["build_s"],
                        calls=len(flat) * len(archs))
     return SweepResult(
@@ -246,16 +286,27 @@ def adp_frontier(result: SweepResult, baseline: str | None = None,
 
 
 def oracle_parity(result: SweepResult, nets, archs: Sequence[ArchParams],
-                  seed: int = 0) -> bool:
+                  seed: int = 0, place: bool = False) -> bool:
     """Prove every sweep record's critical path bit-identical to the
     Python oracle (packing under the *actual* arch — structural-class
-    pack sharing is part of what this verifies)."""
-    from .timing import analyze_oracle
+    pack sharing is part of what this verifies).  With ``place=True``
+    the reference is :func:`repro.core.timing.analyze_placed_oracle`
+    under the registry-cached placement of each (circuit, placement key)
+    — the same placements the sweep consumed, so this also proves the
+    wire-tier gather against the per-edge Python walk."""
+    from .timing import analyze_oracle, analyze_placed_oracle
 
     _, flat = _flatten(nets)
     for g, net in enumerate(flat):
         for k, arch in enumerate(archs):
-            ro = analyze_oracle(pack(net, arch, seed=seed))
+            p = pack(net, arch, seed=seed)
+            if place:
+                from .place import placement_for
+
+                pl = placement_for(p.lower_ir(), arch, seed)
+                ro = analyze_placed_oracle(p, pl)
+            else:
+                ro = analyze_oracle(p)
             if ro["critical_path_ps"] != result.records[g][k][
                     "critical_path_ps"]:
                 return False

@@ -1,27 +1,34 @@
 """Static timing + area analysis over a packed circuit.
 
-Levelized longest-path analysis with the Table II path delays.  Routing is
-placement-free: an edge is *local* (same LB, through the local feedback +
-crossbar) or *global* (fixed inter-LB routing delay).  This is deliberately
-coarser than VPR's timing-driven router, but it is applied identically to
-baseline/DD5/DD6 so the architectural deltas (Z-path vs LUT-path adder feeds,
-DD6 output-mux penalty) dominate the comparison, as in the paper.
+Levelized longest-path analysis with the Table II path delays.  An edge
+is *local* (same LB, through the local feedback + crossbar) or *global*
+(fixed inter-LB routing delay); with a grid placement
+(:mod:`repro.core.place`) the global leg additionally pays a wire-tier
+delay derived from the Manhattan hop distance between the two LB slots
+(1-hop / 2-hop / long wires, zero by default so placement-free numbers
+are unchanged).  This is deliberately coarser than VPR's timing-driven
+router, but it is applied identically to baseline/DD5/DD6 so the
+architectural deltas (Z-path vs LUT-path adder feeds, DD6 output-mux
+penalty) dominate the comparison, as in the paper.
 
 Two implementations share this recurrence:
 
 * :func:`analyze_oracle` — the original per-signal Python walk, kept
-  verbatim as the ground truth;
+  verbatim as the ground truth; :func:`analyze_placed_oracle` is the
+  same walk with the placement-derived wire term, the ground truth for
+  placed timing;
 * the **vectorized analyzer** (:mod:`repro.core.timing_vec`) — the pack is
-  lowered once to the columnar :class:`~repro.core.pack_ir.PackIR` and the
-  arrival recurrence runs as levelized array programs (numpy per circuit,
-  or a ``lax.scan``/``vmap`` batched jit across circuits x architectures
-  for design-space sweeps).  It is bit-identical to the oracle — float64,
-  same addition association order, exact max — which tests assert.
+  lowered once to the columnar :class:`~repro.core.circuit_ir.CircuitIR`
+  and the arrival recurrence runs as levelized array programs (numpy per
+  circuit, or a ``lax.scan``/``vmap`` batched jit across circuits x
+  architectures for design-space sweeps).  It is bit-identical to the
+  oracle — float64, same addition association order, exact max — which
+  tests assert for both the unplaced and the placed paths.
 
 :func:`analyze` dispatches (``method="vector"`` default, ``"oracle"`` for
-the reference) and accounts every call's wall time in :data:`TIMING_WALL`
-so benchmark drivers can report how much of a figure was spent in static
-timing.
+the reference, optional ``placement=``) and accounts every call's wall
+time in :data:`TIMING_WALL` so benchmark drivers can report how much of
+a figure was spent in static timing.
 """
 from __future__ import annotations
 
@@ -100,26 +107,52 @@ class timing_section:
         record_timing_wall(s, self._scope["calls"])
 
 
-def analyze(packed: PackedCircuit, method: str = "vector") -> dict:
+def analyze(packed: PackedCircuit, method: str = "vector",
+            placement=None) -> dict:
     """Timing + area record for one packed circuit.
 
-    ``method="vector"`` lowers to PackIR and runs the numpy vectorized
+    ``method="vector"`` lowers to CircuitIR and runs the numpy vectorized
     analyzer (bit-identical to the oracle, no per-signal Python walk);
     ``method="oracle"`` runs the original reference implementation.
+    With ``placement`` (a :class:`repro.core.place.GridPlacement` of this
+    pack) the inter-LB wire-tier term is included on either path.
     """
     with timing_section(calls=1):
         if method == "oracle":
-            rec = analyze_oracle(packed)
+            rec = (analyze_oracle(packed) if placement is None
+                   else analyze_placed_oracle(packed, placement))
         elif method == "vector":
+            from .circuit_ir import apply_placement
             from .timing_vec import analyze_ir
 
-            rec = analyze_ir(packed.lower_ir(), packed.arch)
+            ir = packed.lower_ir()
+            if placement is not None:
+                ir = apply_placement(ir, placement)
+            rec = analyze_ir(ir, packed.arch)
         else:
             raise ValueError(f"unknown timing method {method!r}")
     return rec
 
 
-def analyze_oracle(packed: PackedCircuit) -> dict:
+def analyze_placed_oracle(packed: PackedCircuit, placement) -> dict:
+    """Ground-truth placed timing: :func:`analyze_oracle`'s walk with the
+    placement-derived wire-tier delay on every inter-LB edge.
+
+    Wire delay is added between the route and pin components (the
+    vectorized association order ``(((arrival + route) + wire) + pin) +
+    path``) and only when both endpoints are placed in *different* LBs —
+    PIs, constants and intra-LB / absorbed edges never touch the fabric
+    grid.  At all-zero wire-tier delays this is bit-identical to
+    :func:`analyze_oracle` (``x + 0.0 == x``), which tests pin.
+    """
+    if placement.n_lbs != packed.n_lbs:
+        raise ValueError(
+            f"{packed.net.name}: placement has {placement.n_lbs} LB slots "
+            f"but the pack has {packed.n_lbs} LBs")
+    return analyze_oracle(packed, placement)
+
+
+def analyze_oracle(packed: PackedCircuit, placement=None) -> dict:
     net = packed.net
     arch = packed.arch
 
@@ -155,6 +188,13 @@ def analyze_oracle(packed: PackedCircuit) -> dict:
             t += arch.t_route_local
         else:
             t += arch.t_route_global
+            if placement is not None and src_lb >= 0 and dst_lb >= 0:
+                d = (abs(int(placement.lb_x[src_lb])
+                         - int(placement.lb_x[dst_lb]))
+                     + abs(int(placement.lb_y[src_lb])
+                           - int(placement.lb_y[dst_lb])))
+                t += (arch.t_wire_hop1 if d <= 1 else
+                      arch.t_wire_hop2 if d == 2 else arch.t_wire_long)
         t += arch.t_lbin_to_z if pin == "z" else arch.t_lbin_to_ah
         return t
 
@@ -243,13 +283,21 @@ def analyze_oracle(packed: PackedCircuit) -> dict:
     }
 
 
-def channel_utilization(packed: PackedCircuit, channel_width: int = 400) -> list[float]:
+def channel_utilization(packed: PackedCircuit,
+                        channel_width: int | None = None) -> list[float]:
     """Per-LB routing-demand proxy for the Fig. 8 congestion histogram.
 
     Utilization of the channels around an LB is approximated by the number of
     distinct signals crossing its boundary (external inputs + consumed-
     elsewhere outputs) against the channel capacity serving one LB span.
+    ``channel_width`` defaults to the arch's routing capacity
+    (``ArchParams.channel_width``, 400 tracks on every canonical arch so
+    recorded fig8 numbers are reproducible); pass a value to override.
+    The placement-derived successor is
+    :func:`repro.core.place.channel_congestion`.
     """
+    if channel_width is None:
+        channel_width = packed.arch.channel_width
     net = packed.net
     util = []
     # signals consumed per LB + reverse index signal -> consuming LBs

@@ -20,12 +20,20 @@ Value identity
 --------------
 Both backends are **bit-identical** to the oracle (not merely close): all
 arithmetic is float64, additions compose in exactly the oracle's
-association order — ``((arrival + route) + pin) + path`` per edge,
-``((t_in + lut_delay) + t_alm_out) + t_out_mux_extra`` per node — and
-``max`` is exact in any order.  Padding exploits the model invariant that
-delays are non-negative: padded slots gather signal 0 (CONST0, arrival
-0.0) through the all-zero null edge class, reproducing the oracle's
-``default=0.0`` reductions exactly.
+association order — ``(((arrival + route) + wire) + pin) + path`` per
+edge, ``((t_in + lut_delay) + t_alm_out) + t_out_mux_extra`` per node —
+and ``max`` is exact in any order.  Padding exploits the model invariant
+that delays are non-negative: padded slots gather signal 0 (CONST0,
+arrival 0.0) through the all-zero null edge class and wire tier 0,
+reproducing the oracle's ``default=0.0`` reductions exactly.
+
+The *wire* term is the placement-derived inter-LB hop delay: each edge
+carries a wire tier (0..3, see ``TIER_*`` in :mod:`repro.core.circuit_ir`)
+gathered from a per-arch 4-entry component table.  Unplaced IRs carry
+tier 0 everywhere and tier 0's delay is identically 0.0, so — because
+``x + 0.0 == x`` exactly for every finite ``x >= 0`` — the placed path
+at zero wire-tier delay reproduces the placement-free timing bit for
+bit (the Fig-5/Table-III pins stay regression gates).
 
 Delay tables are data, not structure: an edge stores a *class* (0..26,
 see :mod:`repro.core.circuit_ir`), the per-arch component table is built
@@ -53,6 +61,9 @@ def delay_components(tables: np.ndarray) -> dict[str, np.ndarray]:
     component tables the executors gather from (leading axes preserved):
 
     * ``edge [..., 27, 3]`` — (route, pin, path) components per edge class;
+    * ``wire [..., 4]``     — inter-LB delay per wire tier (null/tile-local,
+      1-hop, 2-hop, long); tier 0 is identically 0.0 so unplaced edges
+      (and padding) add nothing;
     * ``lut  [..., 4, 3]``  — (lut_delay, t_alm_out, t_out_mux_extra) per
       node delay class (all-zero for absorbed LUTs);
     * ``chain [..., 3]``    — (t_sum_out, t_out_mux_extra, t_carry).
@@ -83,7 +94,9 @@ def delay_components(tables: np.ndarray) -> dict[str, np.ndarray]:
 
     chain = np.stack([g("t_sum_out"), g("t_out_mux_extra"), g("t_carry")],
                      axis=-1)
-    return {"edge": edge, "lut": lut, "chain": chain}
+    wire = np.stack([z, g("t_wire_hop1"), g("t_wire_hop2"),
+                     g("t_wire_long")], axis=-1)
+    return {"edge": edge, "wire": wire, "lut": lut, "chain": chain}
 
 
 # ---------------------------------------------------------------------------
@@ -94,7 +107,7 @@ def delay_components(tables: np.ndarray) -> dict[str, np.ndarray]:
 def arrival_times_numpy(ir: CircuitIR, comps: dict[str, np.ndarray]
                         ) -> np.ndarray:
     """Arrival time per signal, float64, oracle-identical."""
-    edge, lutc = comps["edge"], comps["lut"]
+    edge, wire, lutc = comps["edge"], comps["wire"], comps["lut"]
     t_sum, t_extra, t_carry = (float(comps["chain"][0]),
                                float(comps["chain"][1]),
                                float(comps["chain"][2]))
@@ -102,17 +115,21 @@ def arrival_times_numpy(ir: CircuitIR, comps: dict[str, np.ndarray]
     for ll, cl in zip(ir.lut_levels, ir.chain_levels):
         if ll.out.shape[0]:
             ec = edge[ll.cls]                          # [M, 6, 3]
-            t = ((arr[ll.ins] + ec[..., 0]) + ec[..., 1]) + ec[..., 2]
+            t = (((arr[ll.ins] + ec[..., 0]) + wire[ll.hop])
+                 + ec[..., 1]) + ec[..., 2]
             tin = t.max(axis=1)
             nc = lutc[ll.ndc]                          # [M, 3]
             arr[ll.out] = ((tin + nc[:, 0]) + nc[:, 1]) + nc[:, 2]
         C = cl.cout.shape[0]
         if C:
             ea, eb = edge[cl.a_cls], edge[cl.b_cls]
-            a_t = ((arr[cl.a_sig] + ea[..., 0]) + ea[..., 1]) + ea[..., 2]
-            b_t = ((arr[cl.b_sig] + eb[..., 0]) + eb[..., 1]) + eb[..., 2]
+            a_t = (((arr[cl.a_sig] + ea[..., 0]) + wire[cl.a_hop])
+                   + ea[..., 1]) + ea[..., 2]
+            b_t = (((arr[cl.b_sig] + eb[..., 0]) + wire[cl.b_hop])
+                   + eb[..., 1]) + eb[..., 2]
             ecin = edge[cl.cin_cls]
-            c = ((arr[cl.cin_sig] + ecin[:, 0]) + ecin[:, 1]) + ecin[:, 2]
+            c = (((arr[cl.cin_sig] + ecin[:, 0]) + wire[cl.cin_hop])
+                 + ecin[:, 1]) + ecin[:, 2]
             B = cl.a_sig.shape[1]
             carries = np.zeros((C, B), dtype=np.float64)
             for bi in range(B):
@@ -177,21 +194,27 @@ def analyze_ir(ir: CircuitIR, arch: ArchParams, backend: str = "numpy") -> dict:
 
 def _pad_levels(ir: CircuitIR, L: int, bounds, envelopes, sink: int):
     """Pad one member's ragged level tables to the bucketed group envelope;
-    returns per-bucket 13-tuples of [l, ...] arrays (the scan xs)."""
+    returns per-bucket 17-tuples of [l, ...] arrays (the scan xs).  The
+    wire-tier (hop) arrays ride at indices 13..16 so the flag probes on
+    indices 3/10/11 stay valid; padded slots keep tier 0 (zero delay)."""
     out = []
     for (i, j), (M, C, B) in zip(bounds, envelopes):
         l = max(j - i, 1)
         M1, C1, B1 = max(M, 1), max(C, 1), max(B, 1)
         l_ins = np.zeros((l, M1, 6), dtype=np.int32)
         l_cls = np.zeros((l, M1, 6), dtype=np.int32)
+        l_hop = np.zeros((l, M1, 6), dtype=np.int32)
         l_ndc = np.zeros((l, M1), dtype=np.int32)
         l_out = np.full((l, M1), sink, dtype=np.int32)
         a_sig = np.zeros((l, C1, B1), dtype=np.int32)
         a_cls = np.zeros((l, C1, B1), dtype=np.int32)
+        a_hop = np.zeros((l, C1, B1), dtype=np.int32)
         b_sig = np.zeros((l, C1, B1), dtype=np.int32)
         b_cls = np.zeros((l, C1, B1), dtype=np.int32)
+        b_hop = np.zeros((l, C1, B1), dtype=np.int32)
         cin_sig = np.zeros((l, C1), dtype=np.int32)
         cin_cls = np.zeros((l, C1), dtype=np.int32)
+        cin_hop = np.zeros((l, C1), dtype=np.int32)
         sums = np.full((l, C1, B1), sink, dtype=np.int32)
         cout = np.full((l, C1), sink, dtype=np.int32)
         last = np.zeros((l, C1), dtype=np.int32)
@@ -202,6 +225,7 @@ def _pad_levels(ir: CircuitIR, L: int, bounds, envelopes, sink: int):
             if m:
                 l_ins[r, :m] = ll.ins
                 l_cls[r, :m] = ll.cls
+                l_hop[r, :m] = ll.hop
                 l_ndc[r, :m] = ll.ndc
                 l_out[r, :m] = ll.out
             c = cl.cout.shape[0]
@@ -209,10 +233,13 @@ def _pad_levels(ir: CircuitIR, L: int, bounds, envelopes, sink: int):
                 bb = cl.a_sig.shape[1]
                 a_sig[r, :c, :bb] = cl.a_sig
                 a_cls[r, :c, :bb] = cl.a_cls
+                a_hop[r, :c, :bb] = cl.a_hop
                 b_sig[r, :c, :bb] = cl.b_sig
                 b_cls[r, :c, :bb] = cl.b_cls
+                b_hop[r, :c, :bb] = cl.b_hop
                 cin_sig[r, :c] = cl.cin_sig
                 cin_cls[r, :c] = cl.cin_cls
+                cin_hop[r, :c] = cl.cin_hop
                 s = cl.sums.copy()
                 s[s < 0] = sink
                 sums[r, :c, :bb] = s
@@ -221,7 +248,8 @@ def _pad_levels(ir: CircuitIR, L: int, bounds, envelopes, sink: int):
                 cout[r, :c] = co
                 last[r, :c] = cl.last
         out.append((l_ins, l_cls, l_ndc, l_out, a_sig, a_cls, b_sig, b_cls,
-                    cin_sig, cin_cls, sums, cout, last))
+                    cin_sig, cin_cls, sums, cout, last,
+                    l_hop, a_hop, b_hop, cin_hop))
     return out
 
 
@@ -253,22 +281,27 @@ class SuiteTimingProgram:
         flags = self.flags
         n_sig = self.n_sig
 
-        def body(arr, xs, *, hl, hc, edge, lutc, chainc):
+        def body(arr, xs, *, hl, hc, edge, wire, lutc, chainc):
             (l_ins, l_cls, l_ndc, l_out, a_sig, a_cls, b_sig, b_cls,
-             cin_sig, cin_cls, sums, cout, last) = xs
+             cin_sig, cin_cls, sums, cout, last,
+             l_hop, a_hop, b_hop, cin_hop) = xs
             if hl:
                 ec = edge[l_cls]
-                t = ((arr[l_ins] + ec[..., 0]) + ec[..., 1]) + ec[..., 2]
+                t = (((arr[l_ins] + ec[..., 0]) + wire[l_hop])
+                     + ec[..., 1]) + ec[..., 2]
                 tin = jnp.max(t, axis=1)
                 nc = lutc[l_ndc]
                 arr = arr.at[l_out].set(
                     ((tin + nc[:, 0]) + nc[:, 1]) + nc[:, 2])
             if hc:
                 ea, eb = edge[a_cls], edge[b_cls]
-                a_t = ((arr[a_sig] + ea[..., 0]) + ea[..., 1]) + ea[..., 2]
-                b_t = ((arr[b_sig] + eb[..., 0]) + eb[..., 1]) + eb[..., 2]
+                a_t = (((arr[a_sig] + ea[..., 0]) + wire[a_hop])
+                       + ea[..., 1]) + ea[..., 2]
+                b_t = (((arr[b_sig] + eb[..., 0]) + wire[b_hop])
+                       + eb[..., 1]) + eb[..., 2]
                 ecin = edge[cin_cls]
-                c0 = ((arr[cin_sig] + ecin[:, 0]) + ecin[:, 1]) + ecin[:, 2]
+                c0 = (((arr[cin_sig] + ecin[:, 0]) + wire[cin_hop])
+                      + ecin[:, 1]) + ecin[:, 2]
                 t_sum, t_extra, t_carry = chainc[0], chainc[1], chainc[2]
 
                 def ripple(c, ab):
@@ -285,16 +318,16 @@ class SuiteTimingProgram:
                 arr = arr.at[cout].set((cy_last + t_sum) + t_extra)
             return arr, None
 
-        def one(member_xs, po, edge, lutc, chainc):
+        def one(member_xs, po, edge, wire, lutc, chainc):
             arr = jnp.zeros(n_sig + 1, dtype=jnp.float64)
             for (hl, hc), xs in zip(flags, member_xs):
                 bk = functools.partial(body, hl=hl, hc=hc, edge=edge,
-                                       lutc=lutc, chainc=chainc)
+                                       wire=wire, lutc=lutc, chainc=chainc)
                 arr, _ = jax.lax.scan(bk, arr, xs)
             return jnp.maximum(jnp.max(arr[po]), 1.0)
 
-        inner = jax.vmap(one, in_axes=(None, None, 0, 0, 0))   # arch axis
-        outer = jax.vmap(inner, in_axes=(0, 0, None, None, None))  # circuits
+        inner = jax.vmap(one, in_axes=(None, None, 0, 0, 0, 0))  # arch axis
+        outer = jax.vmap(inner, in_axes=(0, 0, None, None, None, None))
         return jax.jit(outer)
 
     def run(self, delay_tables: np.ndarray) -> np.ndarray:
@@ -306,7 +339,7 @@ class SuiteTimingProgram:
             if self._jit is None:
                 self._jit = self._build_jit()
             cps = self._jit(self._tensors, self._po, comps["edge"],
-                            comps["lut"], comps["chain"])
+                            comps["wire"], comps["lut"], comps["chain"])
             return np.asarray(cps, dtype=np.float64)
 
 
@@ -332,7 +365,7 @@ def build_suite_timing_program(irs: Sequence[CircuitIR],
     members = [_pad_levels(ir, L, bounds, envelopes, sink) for ir in irs]
     tensors = tuple(
         tuple(jnp.asarray(np.stack([mb[bi][ai] for mb in members]))
-              for ai in range(13))
+              for ai in range(17))
         for bi in range(len(bounds)))
     P = max(max((ir.po_sig.size for ir in irs), default=1), 1)
     po = np.zeros((len(irs), P), dtype=np.int32)   # pad -> CONST0 (arr 0.0)
