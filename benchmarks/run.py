@@ -12,6 +12,9 @@ Prints ``name,us_per_call,derived`` CSV lines.  Sections:
           batched PackIR timing, oracle-gated
   place — placement-aware ADP frontier (grid placer + wire-tier delays),
           gated on placed-oracle bit-identity and >= 2x placement reuse
+  search — thousand-point successive-halving design-space search over
+          the full arch grid, gated on winner oracle parity +
+          equivalence and a >= 2x search-vs-dense cost ratio
   kernels — Pallas kernel microbenchmarks (interpret mode on CPU)
   roofline — reads dry-run artifacts if present (see launch/dryrun.py)
 
@@ -29,9 +32,11 @@ suite-scale sweep numbers).
 
 ``--smoke`` is the fast-tier CI entrypoint (also ``scripts/check.sh``):
 runs ``pytest -m "not slow"``, a 2-point arch-grid sweep gated on oracle
-bit-identity, the IR-parity step, and a 2-circuit placement gate (placed
-sweep bit-identical to the placed oracle + >= 2x placement reuse), and
-exits non-zero on any failure.
+bit-identity, the IR-parity step, a 2-circuit placement gate (placed
+sweep bit-identical to the placed oracle + >= 2x placement reuse), and a
+2-rung / 8-point / 2-circuit search smoke (winner oracle parity +
+equivalence, dense-vs-search cost ratio >= 1), and exits non-zero on any
+failure.
 """
 from __future__ import annotations
 
@@ -48,6 +53,7 @@ SECTIONS = [
     ("beyond", "beyond_paper"),
     ("sweep", "sweep_frontier"),
     ("place", "place_sweep"),
+    ("search", "search_frontier"),
     ("kernels", "kernels"),
     ("roofline", "roofline"),
 ]
@@ -103,7 +109,8 @@ def smoke() -> int:
     (two circuits lowered ONCE each; eval and timing both proven against
     their oracles from the same CircuitIR object) + the 2-circuit
     placement gate (placed sweep bit-identical to the placed oracle,
-    placement reuse >= 2x vs place-per-point)."""
+    placement reuse >= 2x vs place-per-point) + the 2-rung search smoke
+    (winner oracle parity + equivalence, dense-vs-search ratio >= 1)."""
     import os
     import subprocess
 
@@ -147,12 +154,24 @@ def smoke() -> int:
         print(f"smoke_place,,failed({type(e).__name__}: {e})",
               file=sys.stderr)
         place_ok = False
-    ok = tests.returncode == 0 and sweep_ok and ir_ok and place_ok
+    print("== smoke: 2-rung successive-halving search gate ==", flush=True)
+    try:
+        from .search_frontier import run as search_run
+
+        srec = search_run(smoke=True)
+        search_ok = srec["pass_gate"]
+    except Exception as e:  # noqa: BLE001
+        print(f"smoke_search,,failed({type(e).__name__}: {e})",
+              file=sys.stderr)
+        search_ok = False
+    ok = (tests.returncode == 0 and sweep_ok and ir_ok and place_ok
+          and search_ok)
     print(f"smoke,,{'ok' if ok else 'failed'}"
           f"(tests={'ok' if tests.returncode == 0 else 'fail'};"
           f"sweep={'ok' if sweep_ok else 'fail'};"
           f"ir_parity={'ok' if ir_ok else 'fail'};"
-          f"place={'ok' if place_ok else 'fail'})")
+          f"place={'ok' if place_ok else 'fail'};"
+          f"search={'ok' if search_ok else 'fail'})")
     return 0 if ok else 1
 
 

@@ -3,7 +3,9 @@
 # 2-point structural-axis (cluster-geometry) sweep, all gated on
 # timing-oracle bit-identity, + the IR-parity step (two circuits lowered
 # ONCE each; eval and timing proven against their oracles from the same
-# CircuitIR object, lowering counters asserting no duplicates).
+# CircuitIR object, lowering counters asserting no duplicates), + the
+# 2-rung / 8-point / 2-circuit successive-halving search smoke (winner
+# oracle parity + equivalence, dense-vs-search cost ratio >= 1).
 # Equivalent to `python -m benchmarks.run --smoke`; run the full tier-1
 # line (`python -m pytest -x -q`) before shipping.
 set -e

@@ -229,7 +229,7 @@ def make_arch(name: str, bypass_inputs: int = 0, addmux_fanin: int = 10,
 
 def arch_grid(bypass_inputs=(0, 2), addmux_fanin=(5, 10, 20),
               lut6=(False, True), alms_per_lb=(10,), lb_inputs=(60,),
-              ext_pin_util=(0.9,),
+              ext_pin_util=(0.9,), direct_link_inputs=(40,),
               wire_delays=((0.0, 0.0, 0.0),)) -> list[ArchParams]:
     """The DD design-space grid: bypass width x crossbar population x
     6-LUT concurrency, crossed with the **structural cluster-geometry
@@ -260,26 +260,80 @@ def arch_grid(bypass_inputs=(0, 2), addmux_fanin=(5, 10, 20),
                 for apl in alms_per_lb:
                     for li in lb_inputs:
                         for u in ext_pin_util:
-                            for wd in wire_delays:
-                                w1, w2, wl = wd
-                                name = (f"b{b}" + (f"_f{f}" if b else "")
-                                        + ("_l6" if l6 else "")
-                                        + (f"_a{apl}" if apl != 10 else "")
-                                        + (f"_i{li}" if li != 60 else "")
-                                        + (f"_u{round(u * 100)}" if u != 0.9
-                                           else "")
-                                        + (f"_w{round(w1)}" if any(wd)
-                                           else ""))
-                                key = (b, f if b else 10, l6, apl, li, u, wd)
-                                if key in seen:
-                                    continue
-                                seen.add(key)
-                                grid.append(make_arch(
-                                    name, bypass_inputs=b, addmux_fanin=f,
-                                    lut6=l6, alms_per_lb=apl, lb_inputs=li,
-                                    ext_pin_util=u, t_wire_hop1=w1,
-                                    t_wire_hop2=w2, t_wire_long=wl))
+                            for dli in direct_link_inputs:
+                                for wd in wire_delays:
+                                    w1, w2, wl = wd
+                                    name = (f"b{b}" + (f"_f{f}" if b else "")
+                                            + ("_l6" if l6 else "")
+                                            + (f"_a{apl}" if apl != 10
+                                               else "")
+                                            + (f"_i{li}" if li != 60 else "")
+                                            + (f"_u{round(u * 100)}"
+                                               if u != 0.9 else "")
+                                            + (f"_d{dli}" if dli != 40
+                                               else "")
+                                            + (f"_w{round(w1)}" if any(wd)
+                                               else ""))
+                                    key = (b, f if b else 10, l6, apl, li,
+                                           u, dli, wd)
+                                    if key in seen:
+                                        continue
+                                    seen.add(key)
+                                    grid.append(make_arch(
+                                        name, bypass_inputs=b,
+                                        addmux_fanin=f, lut6=l6,
+                                        alms_per_lb=apl, lb_inputs=li,
+                                        ext_pin_util=u,
+                                        direct_link_inputs=dli,
+                                        t_wire_hop1=w1, t_wire_hop2=w2,
+                                        t_wire_long=wl))
     return grid
+
+
+def full_arch_grid() -> list[ArchParams]:
+    """The *entire* DD design-space cross-product — every axis of
+    :func:`arch_grid` widened at once:
+
+    bypass (0/1/2) x AddMux fan-in (5/8/10/14/20) x 6-LUT concurrency x
+    ``alms_per_lb`` (6/8/10/12/14) x ``lb_inputs`` (40/48/60) x
+    ``ext_pin_util`` (0.7/0.8/0.9/1.0) x ``direct_link_inputs`` (20/40)
+    = **1920 grid points over 1200 structural classes**.  Fan-ins
+    10/14/20 saturate the ``z_sources`` budget, so they pack identically
+    and differ only in delay rows — every point is still a distinct
+    delay row (fan-in moves the Z-pin mux delay).  The wire-tier axis is
+    deliberately absent: without placement all wire rows time
+    identically, which would pad the point count without adding design
+    space.
+
+    This is the search space :mod:`repro.core.search` halves over —
+    dense-sweeping it costs ~1200 re-clusterings per circuit, which is
+    exactly what the successive-halving driver avoids.
+    """
+    return arch_grid(
+        bypass_inputs=(0, 1, 2),
+        addmux_fanin=(5, 8, 10, 14, 20),
+        lut6=(False, True),
+        alms_per_lb=(6, 8, 10, 12, 14),
+        lb_inputs=(40, 48, 60),
+        ext_pin_util=(0.7, 0.8, 0.9, 1.0),
+        direct_link_inputs=(20, 40))
+
+
+def subgrid(archs, n: int, must_include=("b0", "b2_f10")) -> list[ArchParams]:
+    """A deterministic ``n``-point slice of ``archs`` for dense-vs-search
+    cost comparisons: evenly strided over the grid order, with the named
+    canonical rows (baseline, DD5) forced in so ratios stay anchored."""
+    by_name = {a.name: a for a in archs}
+    picked: dict[str, ArchParams] = {}
+    for name in must_include:
+        if name in by_name:
+            picked[name] = by_name[name]
+    stride = max(1, len(archs) // max(n, 1))
+    for a in archs[::stride]:
+        if len(picked) >= n:
+            break
+        picked.setdefault(a.name, a)
+    return list(picked.values())
 
 
 def group_archs_by_structure(archs) -> list[list[int]]:

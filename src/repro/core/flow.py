@@ -170,6 +170,40 @@ def sweep_frontier(result, baseline: str | None = None):
     return adp_frontier(result, baseline=baseline)
 
 
+def search_design_space(suites_or_nets, archs=None, seed: int = 0,
+                        eta: int = 4, min_survivors: int = 8,
+                        allocation: str = "halving",
+                        budget: int | None = None,
+                        baseline: str | None = None,
+                        backend: str = "numpy", verify: bool = False,
+                        **search_kwargs):
+    """Pareto-aware successive-halving search over an arch grid (see
+    :func:`repro.core.search.search_archs`).  ``archs`` defaults to the
+    *full* design-space cross-product
+    (:func:`repro.core.alm.full_arch_grid`, ~2000 points) and
+    ``baseline`` to the grid's ``b0`` row when present.  ``verify=True``
+    additionally proves every Pareto winner oracle-bit-identical and
+    equivalence-gated (:func:`repro.core.search.verify_winners`) and
+    attaches the report as ``result.verify``."""
+    from .alm import full_arch_grid
+    from .search import search_archs, verify_winners
+    from .sweep import _flatten
+
+    if archs is None:
+        archs = full_arch_grid()
+    if baseline is None and any(a.name == "b0" for a in archs):
+        baseline = "b0"
+    _, nets = _flatten(suites_or_nets)
+    result = search_archs(nets, archs, seed=seed, eta=eta,
+                          min_survivors=min_survivors,
+                          allocation=allocation, budget=budget,
+                          baseline=baseline, backend=backend,
+                          **search_kwargs)
+    if verify:
+        result.verify = verify_winners(result, nets, archs, seed=seed)
+    return result
+
+
 def ratios_vs_baseline(per_arch: dict[str, dict], baseline: str = "baseline",
                        keys: Sequence[str] = ("area_mwta",
                                               "critical_path_ps", "adp")

@@ -46,11 +46,35 @@ from collections import defaultdict
 from dataclasses import dataclass, field
 from itertools import islice
 
+import numpy as np
+
 from .alm import ArchParams
 from .netlist import CONST0, CONST1, Netlist
 
 #: diagnostic counters from the most recent :func:`pack` call
 LAST_PACK_DEBUG: dict[str, int] = {}
+
+#: drive the greedy re-cluster replay through the vectorized
+#: ClusterPlan columns (numpy candidate-LB gathers, CSR frontier bumps,
+#: batched host-feasibility masks).  The scalar path is kept verbatim as
+#: the byte-identity reference — ``tests/core/test_repack.py`` proves
+#: both flags produce identical packs across the structural grid.
+VECTOR_CLUSTER = True
+
+#: sentinel padding value of the per-ALM A-H signal columns
+_SENT32 = np.int32(2**31 - 1)
+#: per-ALM A-H column capacity.  An ALM whose A-H set overflows the cap
+#: is decidable without the exact distinct count: ``|new_ah| >= ah_len -
+#: moved_cnt`` and ``moved_cnt <= 4`` (two convertible halves x two live
+#: operands), so ``ah_len > 12`` always fails the 8-pin check.
+_AH_CAP = 12
+#: below this many candidate ALMs the batched numpy mask costs more than
+#: the scalar scan; both are exact, so these thresholds are pure perf —
+#: profiled break-evens of numpy dispatch vs the tuned Python loops
+_MASK_MIN_ALMS = 24
+#: mean per-atom probe/neighbor list length above which a plan's replay
+#: uses the numpy CSR gathers instead of the scalar list walks
+_VEC_MIN_DEGREE = 48
 
 
 @dataclass(slots=True)
@@ -315,10 +339,22 @@ class _LBState:
         return len(self.alm_ids)
 
     def fits_inputs(self, new_in: set[int], new_z_ext: set[int]) -> bool:
-        tot_in = len((self.ext_in | new_in) - self.produced)
+        # membership counting instead of set algebra: add() keeps
+        # ext_in ∩ produced = ∅, so |(ext_in ∪ new_in) − produced| is
+        # |ext_in| plus the new signals not already external or local
+        ext_in, produced = self.ext_in, self.produced
+        tot_in = len(ext_in)
+        for s in new_in:
+            if s not in ext_in and s not in produced:
+                tot_in += 1
         if tot_in > self.arch.input_budget:
             return False
-        if len(self.z_ext | new_z_ext) > self.arch.z_sources:
+        z_ext = self.z_ext
+        tot_z = len(z_ext)
+        for s in new_z_ext:
+            if s not in z_ext:
+                tot_z += 1
+        if tot_z > self.arch.z_sources:
             return False
         return True
 
@@ -361,6 +397,66 @@ class ClusterPlan:
     #: skeleton) ALM of a consuming chain bit; (2, lut) — LB hosting a
     #: consuming LUT (dynamic).  Empty for chain runs.
     atom_cand_ops: list[list[tuple[int, int]]]
+
+    # --- vectorized replay columns (consumed when VECTOR_CLUSTER) --------
+    #: CSR image of ``atom_cand_ops`` — one gather resolves a whole probe
+    #: sequence instead of a Python loop per op
+    cand_ptr: np.ndarray | None = None
+    cand_code: np.ndarray | None = None
+    cand_payload: np.ndarray | None = None
+    #: CSR image of ``atom_neighbors`` for the batched frontier bump
+    nbr_ptr: np.ndarray | None = None
+    nbr_j: np.ndarray | None = None
+    nbr_cnt: np.ndarray | None = None
+    #: per LUT atom, its live A-H inputs sorted (int32; ``None`` for runs)
+    atom_ah_arr: list | None = None
+    #: per skeleton ALM: host-feasibility columns for the batched hosting
+    #: prefilter — free-half count, per hosted-LUT-count variant (1 or 2)
+    #: the max live-operand count over converted halves and the distinct
+    #: moved-signal count, the A-H set size and its sorted padded image.
+    #: Arch-invariant for the *unmutated* skeleton; ``_cluster`` copies
+    #: them and refreshes single rows as hosting mutates ALMs.
+    skel_fh: np.ndarray | None = None
+    skel_need: np.ndarray | None = None
+    skel_moved: np.ndarray | None = None
+    skel_ah_len: np.ndarray | None = None
+    skel_ah_pad: np.ndarray | None = None
+
+
+def _fill_host_cols(ai, alm, bit_live, ah_set, col_fh, col_need, col_moved,
+                    col_ah_len, col_ah_pad) -> None:
+    """(Re)compute one arith ALM's host-feasibility row.
+
+    Shares the half-selection logic of ``_cluster``'s ``free_halves_of``
+    (hostable halves, Z-free first, stable) so the columns predict the
+    scalar scan's decisions exactly.  A 6-LUT span zeroes the free-half
+    count — the scan prunes on that, covering the legacy ``lut6`` pop."""
+    fh = []
+    for h in alm.halves:
+        if h.hosted_lut is not None:
+            continue
+        if h.fa is None:
+            fh.append((h, False))
+        elif not h.absorbed:
+            fh.append((h, True))
+    fh.sort(key=lambda x: x[1])
+    col_fh[ai] = 0 if alm.lut6 is not None else len(fh)
+    for k in (1, 2):
+        conv_need = 0
+        moved: set[int] = set()
+        for h, needs_z in fh[:k]:
+            if needs_z:
+                live = bit_live[h.fa]
+                if len(live) > conv_need:
+                    conv_need = len(live)
+                moved.update(live)
+        col_need[ai, k - 1] = conv_need
+        col_moved[ai, k - 1] = len(moved)
+    col_ah_len[ai] = len(ah_set)
+    col_ah_pad[ai, :] = _SENT32
+    if len(ah_set) <= _AH_CAP:
+        srt = sorted(ah_set)
+        col_ah_pad[ai, : len(srt)] = srt
 
 
 def _build_cluster_plan(net, alms, chain_alm_runs, chain_site, pairs,
@@ -504,6 +600,37 @@ def _build_cluster_plan(net, alms, chain_alm_runs, chain_site, pairs,
                             ops.append((2, cons[1]))
         atom_cand_ops.append(ops)
 
+    # vectorized replay columns: CSR images of the probe/neighbor lists,
+    # per-atom sorted A-H arrays and the skeleton host-feasibility rows
+    n_atoms = len(atoms)
+    cand_ptr = np.zeros(n_atoms + 1, np.int64)
+    code_l: list[int] = []
+    pay_l: list[int] = []
+    for i, ops in enumerate(atom_cand_ops):
+        cand_ptr[i + 1] = cand_ptr[i] + len(ops)
+        for op, payload in ops:
+            code_l.append(op)
+            pay_l.append(payload)
+    nbr_ptr = np.zeros(n_atoms + 1, np.int64)
+    nj_l: list[int] = []
+    nc_l: list[int] = []
+    for i, nbrs in enumerate(atom_neighbors):
+        nbr_ptr[i + 1] = nbr_ptr[i] + len(nbrs)
+        for j, cnt in nbrs:
+            nj_l.append(j)
+            nc_l.append(cnt)
+    atom_ah_arr = [None if io is None else np.array(sorted(io[0]), np.int32)
+                   for io in atom_io]
+    n_skel = len(alms)
+    skel_fh = np.zeros(n_skel, np.int16)
+    skel_need = np.zeros((n_skel, 2), np.int16)
+    skel_moved = np.zeros((n_skel, 2), np.int16)
+    skel_ah_len = np.zeros(n_skel, np.int32)
+    skel_ah_pad = np.full((n_skel, _AH_CAP), _SENT32, np.int32)
+    for ai, alm in enumerate(alms):
+        _fill_host_cols(ai, alm, bit_live, skeleton_io[ai][0], skel_fh,
+                        skel_need, skel_moved, skel_ah_len, skel_ah_pad)
+
     # atom_sigs / sig2atoms / sig_consumers are construction scaffolding:
     # everything the clusterer replays is baked into the orders, the
     # neighbor counts and the probe sequences, so the retained plan (it
@@ -511,19 +638,70 @@ def _build_cluster_plan(net, alms, chain_alm_runs, chain_site, pairs,
     return ClusterPlan(atoms=atoms, run_order=run_order,
                        lut_order=lut_order, skeleton_io=skeleton_io,
                        atom_io=atom_io, atom_neighbors=atom_neighbors,
-                       bit_live=bit_live, atom_cand_ops=atom_cand_ops)
+                       bit_live=bit_live, atom_cand_ops=atom_cand_ops,
+                       cand_ptr=cand_ptr,
+                       cand_code=np.array(code_l, np.int8),
+                       cand_payload=np.array(pay_l, np.int64),
+                       nbr_ptr=nbr_ptr, nbr_j=np.array(nj_l, np.int64),
+                       nbr_cnt=np.array(nc_l, np.int64),
+                       atom_ah_arr=atom_ah_arr, skel_fh=skel_fh,
+                       skel_need=skel_need, skel_moved=skel_moved,
+                       skel_ah_len=skel_ah_len, skel_ah_pad=skel_ah_pad)
 
 
 def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
              chain_site, lut_site, allow_unrelated=True,
              strict_phases=(True, False), pull_runs=True):
     atoms = plan.atoms
+    n_atoms = len(atoms)
+    vector = VECTOR_CLUSTER and plan.cand_ptr is not None
+    # The numpy replay paths each clear a profiled break-even before they
+    # replace the tuned scalar loops (numpy dispatch loses below ~50
+    # elements): the CSR probe gather and the batched frontier bump
+    # engage per plan by mean list degree; the batched host mask engages
+    # per probe by candidate count (_MASK_MIN_ALMS).  Every path is exact
+    # — the A/B tests prove byte-identity in all four combinations.
+    vector_gather = (vector and plan.cand_payload.size
+                     >= _VEC_MIN_DEGREE * max(len(plan.lut_order), 1))
+    vector_bump = (vector
+                   and plan.nbr_j.size >= _VEC_MIN_DEGREE * n_atoms)
 
-    placed = [False] * len(atoms)
+    placed = (np.zeros(n_atoms, dtype=bool) if vector_bump
+              else [False] * n_atoms)
     lbs_state: list[_LBState] = []
     lb_list: list[LB] = []
     alm_lb: list[int] = [-1] * len(alms)
     concurrent = 0
+
+    if vector:
+        # runtime copies of the skeleton host-feasibility rows, refreshed
+        # per ALM (lazily) as hosting mutates it — the batched host mask
+        # gathers from these
+        n_skel = len(plan.skeleton_io)
+        col_fh = plan.skel_fh.copy()
+        col_need = plan.skel_need.copy()
+        col_moved = plan.skel_moved.copy()
+        col_ah_len = plan.skel_ah_len.copy()
+        col_ah_pad = plan.skel_ah_pad.copy()
+    if vector_gather:
+        # flat site/LB mirrors so a probe sequence resolves as one gather
+        cand_ptr, cand_code = plan.cand_ptr, plan.cand_code
+        cand_payload = plan.cand_payload
+        lut_site_arr = np.full(net.n_luts, -1, np.int64)
+        for _li, _ai in lut_site.items():
+            lut_site_arr[_li] = _ai
+        # capacity bound: clustering materializes at most one ALM per atom
+        alm_lb_arr = np.full(len(alms) + n_atoms + 1, -1, np.int64)
+
+    # host rows invalidated by a mutation, refreshed lazily on the next
+    # scan that reads them (mirrors the alm_io/free_halves discipline —
+    # an ALM hosted once and never rescanned costs nothing)
+    cols_dirty: set[int] = set()
+
+    def _refresh_host_cols(ai: int) -> None:
+        cols_dirty.discard(ai)
+        _fill_host_cols(ai, alms[ai], plan.bit_live, alm_io(ai)[0], col_fh,
+                        col_need, col_moved, col_ah_len, col_ah_pad)
 
     # (ah, z, prod) per ALM — seeded from the plan's arch-invariant
     # placement-time sets, recomputed lazily after a mutation (hosting,
@@ -547,7 +725,10 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
         lb_list.append(LB())
         return len(lbs_state) - 1
 
-    prod_site = [-1] * net.n_signals      # signal -> producing ALM (or -1)
+    # signal -> producing ALM (or -1); an ndarray when gathering so the
+    # probe gather can fancy-index it (scalar reads/writes are identical)
+    prod_site = (np.full(net.n_signals, -1, np.int64) if vector_gather
+                 else [-1] * net.n_signals)
     host_capacity_lbs: set[int] = set()
 
     def _has_free_half(alm: ALM) -> bool:
@@ -567,6 +748,8 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
         st.alm_ids.append(ai)
         lb_list[lb_idx].alms.append(ai)
         alm_lb[ai] = lb_idx
+        if vector_gather:
+            alm_lb_arr[ai] = lb_idx
         for s in prod:
             prod_site[s] = ai
         if _has_free_half(alms[ai]):
@@ -584,16 +767,19 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
 
     # --- concurrent hosting helpers (DD only) ------------------------------
     def host_in_arith(lut_list: list[int], lb_idx: int,
-                      strict_z: bool = False) -> bool:
+                      strict_z: bool = False, ok_mask=None) -> bool:
         """Try to host LUT(s) in free/convertible halves of arith ALMs.
 
         A pair is first attempted in one ALM (shared A-H pins), then split
         across two ALMs of the same LB.  With ``strict_z`` only placements
         that add no *new* external AddMux-crossbar source are accepted
         (operands local to the LB or already-routed Z signals).
+        ``ok_mask`` is the batched ALM-level prefilter and describes the
+        *whole* atom — the split replays per-LUT A-H sets after a state
+        commit, so it always runs the exact scan.
         """
         if len(lut_list) == 2:
-            if _host_in_one_alm(lut_list, lb_idx, strict_z):
+            if _host_in_one_alm(lut_list, lb_idx, strict_z, ok_mask):
                 return True
             st = lbs_state[lb_idx]
             # split: both halves must fit or neither (transactional)
@@ -603,7 +789,7 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
                     return True
                 _unhost(lut_list[0], lb_idx, snapshot)
             return False
-        return _host_in_one_alm(lut_list, lb_idx, strict_z)
+        return _host_in_one_alm(lut_list, lb_idx, strict_z, ok_mask)
 
     def _unhost(li: int, lb_idx: int, snapshot):
         nonlocal concurrent
@@ -618,6 +804,10 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
                     h.fa_feed = "lut"
                     concurrent -= 1
         st.ext_in, st.produced, st.z_ext = snapshot
+        if vector:
+            cols_dirty.add(ai)
+        if vector_gather:
+            lut_site_arr[li] = -1
         # the ALM regained hostable halves; restore it at its placement-
         # order slot if a scan pruned it while its halves were full
         if ai not in st.hostable:
@@ -645,8 +835,36 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
             free_halves_cache[ai] = fh
         return fh
 
+    def _host_mask(ids: list[int], k: int, atom_ah) -> dict:
+        """Batched image of the scan's per-ALM rejections (free halves,
+        bypass width, 8-pin budget) over every hostable ALM of the probed
+        LBs.  Exact: ``|new_ah| = |ah ∪ atom_ah| - |moved|`` because a
+        convertible half's live operands are always A-H-routed before
+        conversion (``moved ⊆ ah``); rows whose A-H set overflows
+        ``_AH_CAP`` reject unconditionally (see the cap's invariant)."""
+        if cols_dirty:
+            for ai in ids:
+                if ai in cols_dirty:
+                    _refresh_host_cols(ai)
+        cand = np.array(ids, np.int64)
+        fh = col_fh[cand]
+        need = col_need[cand, k - 1]
+        moved = col_moved[cand, k - 1].astype(np.int64)
+        lens = col_ah_len[cand].astype(np.int64)
+        mat = np.empty((cand.size, _AH_CAP + atom_ah.size), np.int32)
+        mat[:, :_AH_CAP] = col_ah_pad[cand]
+        if atom_ah.size:
+            mat[:, _AH_CAP:] = atom_ah
+        mat.sort(axis=1)
+        nonpad = mat != _SENT32
+        uniq = ((mat[:, 1:] != mat[:, :-1]) & nonpad[:, 1:]).sum(axis=1) \
+            + nonpad[:, 0]
+        new_ah = np.where(lens <= _AH_CAP, uniq, lens) - moved
+        rej = (fh < k) | (need > arch.bypass_inputs) | (new_ah > 8)
+        return dict(zip(ids, (~rej).tolist()))
+
     def _host_in_one_alm(lut_list: list[int], lb_idx: int,
-                         strict_z: bool = False) -> bool:
+                         strict_z: bool = False, ok_mask=None) -> bool:
         nonlocal concurrent
         if not (arch.concurrent and allow_unrelated):
             return False
@@ -666,6 +884,11 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
                 hostable.pop(i)       # filled up; prune (order preserved)
                 continue
             i += 1
+            if ok_mask is not None and not ok_mask.get(ai, True):
+                # the batched mask already proved an ALM-level rejection
+                # (free halves / bypass width / 8-pin budget) — skip the
+                # per-ALM set builds; survivors re-derive them below
+                continue
             if len(free_halves) < len(lut_list):
                 dbg["rej_nofree"] = dbg.get("rej_nofree", 0) + 1
                 continue
@@ -711,12 +934,16 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
             for li, (h, needs_z) in zip(lut_list, free_halves):
                 h.hosted_lut = li
                 lut_site[li] = ai
+                if vector_gather:
+                    lut_site_arr[li] = ai
                 if needs_z:
                     h.fa_feed = "z"
                 if h.fa is not None:
                     concurrent += 1
             new_prod = {net.lut_out[li] for li in lut_list}
             st.add(new_in, new_prod, z_ext)
+            if vector:
+                cols_dirty.add(ai)
             return True
         if not hostable:
             host_capacity_lbs.discard(lb_idx)
@@ -757,11 +984,15 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
             free_halves_cache.pop(ai, None)
             alm.lut6 = li
             lut_site[li] = ai
+            if vector_gather:
+                lut_site_arr[li] = ai
             for h in alm.halves:
                 if h.fa is not None:
                     h.fa_feed = "z"
                     concurrent += 1
             st.add(new_in, {net.lut_out[li]}, z_ext)
+            if vector:
+                cols_dirty.add(ai)
             return True
         return False
 
@@ -777,6 +1008,9 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
             alm_io_cache[ai] = plan.atom_io[aidx]
             lut_site[a] = ai
             lut_site[b] = ai
+            if vector_gather:
+                lut_site_arr[a] = ai
+                lut_site_arr[b] = ai
             return ai
         if kind == "single6":
             alm = ALM(halves=(Half(), Half()), lut6=atom[1])
@@ -786,10 +1020,9 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
         alms.append(alm)
         alm_lb.append(-1)
         alm_io_cache[ai] = plan.atom_io[aidx]
-        if kind == "single6":
-            lut_site[atom[1]] = ai
-        else:
-            lut_site[atom[1]] = ai
+        lut_site[atom[1]] = ai
+        if vector_gather:
+            lut_site_arr[atom[1]] = ai
         return ai
 
     # --- main greedy loop ---------------------------------------------------
@@ -801,28 +1034,60 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
     # stale entries (superseded scores, placed atoms) pop through.
     # Scores/first-seen live in flat lists (atom-indexed) — the bump
     # loop is the hottest spot of a re-clustering.
-    n_atoms = len(atoms)
-    frontier_scores = [0] * n_atoms
-    frontier_seen = [-1] * n_atoms
     frontier_heap: list[tuple[int, int, int]] = []
     n_seen = 0
     eligible = [pull_runs or a[0] != "run" for a in atoms]
     heappush = heapq.heappush
 
-    def bump_frontier(src_aidx: int):
-        nonlocal n_seen
-        for j, cnt in plan.atom_neighbors[src_aidx]:
-            if placed[j]:
-                continue
-            v = frontier_scores[j] + cnt
-            frontier_scores[j] = v
-            seq = frontier_seen[j]
-            if seq < 0:
-                seq = n_seen
-                frontier_seen[j] = seq
-                n_seen += 1
-            if eligible[j]:
+    if vector_bump:
+        # batched bump: one CSR slice per placement updates every
+        # neighbor's score, assigns first-seen ranks in CSR (= legacy
+        # flattening) order, and pushes the eligible survivors.  Scores
+        # only ever grow, so each pushed entry carries the neighbor's
+        # final score for this bump — exactly the legacy push sequence.
+        frontier_scores = np.zeros(n_atoms, np.int64)
+        frontier_seen = np.full(n_atoms, -1, np.int64)
+        eligible_arr = np.array(eligible, dtype=bool)
+        nbr_ptr, nbr_j, nbr_cnt = plan.nbr_ptr, plan.nbr_j, plan.nbr_cnt
+
+        def bump_frontier(src_aidx: int):
+            nonlocal n_seen
+            lo, hi = nbr_ptr[src_aidx], nbr_ptr[src_aidx + 1]
+            if hi == lo:
+                return
+            js = nbr_j[lo:hi]
+            m = ~placed[js]
+            if not m.any():
+                return
+            js = js[m]
+            frontier_scores[js] += nbr_cnt[lo:hi][m]
+            new = frontier_seen[js] < 0
+            if new.any():
+                idxs = js[new]
+                frontier_seen[idxs] = n_seen + np.arange(idxs.size)
+                n_seen += int(idxs.size)
+            el = js[eligible_arr[js]]
+            for v, seq, j in zip(frontier_scores[el].tolist(),
+                                 frontier_seen[el].tolist(), el.tolist()):
                 heappush(frontier_heap, (-v, seq, j))
+    else:
+        frontier_scores = [0] * n_atoms
+        frontier_seen = [-1] * n_atoms
+
+        def bump_frontier(src_aidx: int):
+            nonlocal n_seen
+            for j, cnt in plan.atom_neighbors[src_aidx]:
+                if placed[j]:
+                    continue
+                v = frontier_scores[j] + cnt
+                frontier_scores[j] = v
+                seq = frontier_seen[j]
+                if seq < 0:
+                    seq = n_seen
+                    frontier_seen[j] = seq
+                    n_seen += 1
+                if eligible[j]:
+                    heappush(frontier_heap, (-v, seq, j))
 
     def place_atom(aidx: int, lb_idx: int | None) -> int | None:
         """Place atom; returns the (possibly new) current LB index."""
@@ -852,28 +1117,70 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
         cand_lbs: list[int] = []
         if lb_idx is not None:
             cand_lbs.append(lb_idx)
-        for op, payload in plan.atom_cand_ops[aidx]:
-            if op == 0:
-                site = prod_site[payload]
-            elif op == 1:
-                site = payload
-            else:
-                site = lut_site.get(payload, -1)
-            if site >= 0 and alm_lb[site] >= 0:
-                cand_lbs.append(alm_lb[site])
+        if vector_gather:
+            lo, hi = cand_ptr[aidx], cand_ptr[aidx + 1]
+            if hi > lo:
+                code = cand_code[lo:hi]
+                pay = cand_payload[lo:hi]
+                sites = np.empty(hi - lo, np.int64)
+                m = code == 0
+                sites[m] = prod_site[pay[m]]
+                m = code == 1
+                sites[m] = pay[m]
+                m = code == 2
+                sites[m] = lut_site_arr[pay[m]]
+                lbs_arr = alm_lb_arr[sites[sites >= 0]]
+                cand_lbs.extend(lbs_arr[lbs_arr >= 0].tolist())
+        else:
+            for op, payload in plan.atom_cand_ops[aidx]:
+                if op == 0:
+                    site = prod_site[payload]
+                elif op == 1:
+                    site = payload
+                else:
+                    site = lut_site.get(payload, -1)
+                if site >= 0 and alm_lb[site] >= 0:
+                    cand_lbs.append(alm_lb[site])
+        n_conn = len(cand_lbs)
         if allow_unrelated and arch.concurrent:
             cand_lbs.extend(islice(host_capacity_lbs, 64))
+        # Batched host-feasibility mask for the unrelated-clustering
+        # fallback: the connectivity LBs (few, usually fruitful) run the
+        # plain scan, but an atom that falls through them probes up to 64
+        # spare-capacity LBs — one batched mask over all their hostable
+        # ALMs replaces those per-ALM set walks.  Built lazily on the
+        # first fallback probe; the state it snapshots cannot change
+        # until a commit ends the placement, so it holds across LBs and
+        # strict phases.
+        ok_mask = None
+        mask_built = kind == "single6" or not vector
         for strict in strict_phases:
             seen_lb: set[int] = set()
-            for cand in cand_lbs:
+            for pos, cand in enumerate(cand_lbs):
                 if cand in seen_lb:
                     continue
                 seen_lb.add(cand)
+                use_mask = None
+                if pos >= n_conn:
+                    if not mask_built:
+                        mask_built = True
+                        ids: list[int] = []
+                        mseen: set[int] = set()
+                        for lb2 in cand_lbs[n_conn:]:
+                            if lb2 not in mseen:
+                                mseen.add(lb2)
+                                ids.extend(lbs_state[lb2].hostable)
+                        if len(ids) >= _MASK_MIN_ALMS:
+                            ok_mask = _host_mask(
+                                ids, 2 if kind == "pair" else 1,
+                                plan.atom_ah_arr[aidx])
+                    use_mask = ok_mask
                 ok = False
                 if kind == "pair":
-                    ok = host_in_arith([atom[1], atom[2]], cand, strict)
+                    ok = host_in_arith([atom[1], atom[2]], cand, strict,
+                                       use_mask)
                 elif kind == "single5":
-                    ok = host_in_arith([atom[1]], cand, strict)
+                    ok = host_in_arith([atom[1]], cand, strict, use_mask)
                 elif kind == "single6":
                     ok = host6_in_arith(atom[1], cand)
                 if ok:

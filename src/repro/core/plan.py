@@ -88,6 +88,27 @@ class Cache:
     def __contains__(self, key) -> bool:
         return key in self._d
 
+    # dict-compatible views/operators so call sites that historically
+    # took a plain dict (e.g. sweep_suite's caller-provided ``prefixes``)
+    # accept a registry cache interchangeably
+    def __getitem__(self, key):
+        return self._d[key]
+
+    def __setitem__(self, key, value) -> None:
+        self.put(key, value)
+
+    def __iter__(self):
+        return iter(self._d)
+
+    def keys(self):
+        return self._d.keys()
+
+    def values(self):
+        return self._d.values()
+
+    def items(self):
+        return self._d.items()
+
 
 _REGISTRY: dict[str, Cache] = {}
 

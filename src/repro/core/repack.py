@@ -165,13 +165,24 @@ def _copy_skeleton(alms: list[ALM]) -> list[ALM]:
     """Fresh ALM objects for one re-clustering — clustering mutates
     halves (hosting, Z conversion) and appends logic ALMs, so the
     prefix's skeleton must never be handed out directly."""
+    # bypasses the dataclass constructors (keyword plumbing is ~2x the
+    # cost of the copy itself on large skeletons); absorbed lists are
+    # shared — clustering never mutates them
+    new_half, new_alm = Half.__new__, ALM.__new__
     out: list[ALM] = []
     for alm in alms:
-        halves = tuple(Half(fa=h.fa, fa_feed=h.fa_feed,
-                            absorbed=h.absorbed,  # shared: never mutated
-                            hosted_lut=h.hosted_lut)
-                       for h in alm.halves)
-        out.append(ALM(halves=halves, lut6=alm.lut6, is_arith=alm.is_arith))
+        h0, h1 = alm.halves
+        c0 = new_half(Half)
+        c0.fa, c0.fa_feed = h0.fa, h0.fa_feed
+        c0.absorbed, c0.hosted_lut = h0.absorbed, h0.hosted_lut
+        c1 = new_half(Half)
+        c1.fa, c1.fa_feed = h1.fa, h1.fa_feed
+        c1.absorbed, c1.hosted_lut = h1.absorbed, h1.hosted_lut
+        a2 = new_alm(ALM)
+        a2.halves = (c0, c1)
+        a2.lut6 = alm.lut6
+        a2.is_arith = alm.is_arith
+        out.append(a2)
     return out
 
 

@@ -28,9 +28,17 @@ from typing import Sequence
 
 import numpy as np
 
+from . import plan as _planner
 from .alm import ArchParams, group_archs_by_structure
 from .netlist import Netlist
 from .packing import PackedCircuit, pack
+
+#: packing prefixes per (circuit digest, seed) — the default store behind
+#: ``sweep_suite(prefixes=None)``.  Registry-backed so ONE
+#: :func:`repro.core.plan.clear_caches` drops it together with the IR
+#: templates the prefixes hand out (the PR-6 placement-cache rule);
+#: callers may still pass their own plain dict.
+_PREFIX_CACHE = _planner.register_cache("pack_prefix", cap=64)
 from .timing import record_timing_wall
 from .timing_vec import (build_suite_timing_program, delay_components,
                          critical_path_numpy, metrics_from_cp)
@@ -49,7 +57,12 @@ class SweepResult:
     wall: dict = field(default_factory=dict)
 
     def by_arch(self, arch_name: str) -> list[dict]:
-        k = self.archs.index(arch_name)
+        try:
+            k = self.archs.index(arch_name)
+        except ValueError:
+            raise ValueError(
+                f"arch {arch_name!r} not in sweep result (swept: "
+                f"{self.archs!r})") from None
         return [row[k] for row in self.records]
 
 
@@ -137,7 +150,7 @@ def sweep_suite(nets, archs: Sequence[ArchParams], seed: int = 0,
     if programs is None:
         programs = {}
     if prefixes is None:
-        prefixes = {}
+        prefixes = _PREFIX_CACHE
     digests = [net.content_digest() for net in flat]
     suite_key = tuple(digests)
     class_reps = [archs[idx[0]] for idx in classes]
@@ -266,17 +279,43 @@ def _geomean(xs):
     return float(np.exp(np.mean(np.log(xs))))
 
 
+def _circuit_rows(result: SweepResult, circuits) -> list[int]:
+    """Record-row indices of ``circuits`` (``None`` = all), with a clear
+    error naming any circuit the sweep never evaluated."""
+    if circuits is None:
+        return list(range(len(result.circuits)))
+    idx = []
+    for name in circuits:
+        try:
+            idx.append(result.circuits.index(name))
+        except ValueError:
+            raise ValueError(
+                f"circuit {name!r} not in sweep result (swept: "
+                f"{result.circuits!r})") from None
+    return idx
+
+
 def adp_frontier(result: SweepResult, baseline: str | None = None,
-                 keys=("area_mwta", "critical_path_ps", "adp")) -> list[dict]:
+                 keys=("area_mwta", "critical_path_ps", "adp"),
+                 circuits=None) -> list[dict]:
     """Geomean metric ratios vs the baseline arch, one row per grid point —
-    the ADP frontier over the design-space grid (sorted by ADP ratio)."""
+    the ADP frontier over the design-space grid (sorted by ADP ratio).
+
+    ``circuits`` restricts the geomean to a named subset — the search
+    driver's rung-level frontiers (cheap circuit slice) and the final
+    full-suite frontier run through this one code path.  An unknown name
+    raises ``ValueError`` instead of surfacing as an opaque KeyError.
+    """
     base_name = baseline if baseline is not None else result.archs[0]
-    base = result.by_arch(base_name)
+    rows_g = _circuit_rows(result, circuits)
+    base_all = result.by_arch(base_name)
+    base = [base_all[g] for g in rows_g]
     rows = []
     for name in result.archs:
         if name == base_name:
             continue
-        recs = result.by_arch(name)
+        recs_all = result.by_arch(name)
+        recs = [recs_all[g] for g in rows_g]
         row = {"arch": name}
         for k in keys:
             row[k] = _geomean([r[k] / b[k] for r, b in zip(recs, base)])

@@ -169,3 +169,40 @@ def test_structural_axes_change_packs():
     assert len(grid) == 4 * 7            # geometry axes multiply the grid
     assert len({a.name for a in grid}) == len(grid)
     assert len({a.structural_key() for a in grid}) == 4 * 5
+
+
+#: >= 3 cluster-geometry points for the vectorized-recluster A/B — each
+#: a distinct structural class stressing a different budget axis
+VEC_GEOMETRY = [
+    make_arch("v_a6_i40_u70", bypass_inputs=2, alms_per_lb=6,
+              lb_inputs=40, ext_pin_util=0.7),
+    make_arch("v_a8", bypass_inputs=2, alms_per_lb=8),
+    make_arch("v_a12_u80", bypass_inputs=2, alms_per_lb=12,
+              ext_pin_util=0.8),
+    make_arch("v_b0_a8", bypass_inputs=0, alms_per_lb=8),
+]
+
+
+def test_vectorized_recluster_byte_identical_to_pack(monkeypatch):
+    """The vectorized clustering replay (``VECTOR_CLUSTER`` + the
+    density-gated gather/bump/mask paths) must be byte-identical to the
+    legacy scalar reference AND to a from-scratch ``pack()`` across
+    geometry points — both at the profiled default gates and with every
+    vector path forced on (gates zeroed, mask always built)."""
+    import repro.core.packing as P
+
+    for mk in (lambda: kratos_gemm(m=5, n=5, width=5, sparsity=0.5),
+               lambda: sha_like(rounds=2)):
+        net = mk()
+        prefix = pack_prefix(net, seed=0)
+        for arch in VEC_GEOMETRY:
+            monkeypatch.setattr(P, "VECTOR_CLUSTER", False)
+            ref = repack(prefix, arch)
+            _assert_same_pack(ref, pack(net, arch, seed=0))
+            monkeypatch.setattr(P, "VECTOR_CLUSTER", True)
+            monkeypatch.setattr(P, "_VEC_MIN_DEGREE", 48)
+            monkeypatch.setattr(P, "_MASK_MIN_ALMS", 24)
+            _assert_same_pack(ref, repack(prefix, arch))
+            monkeypatch.setattr(P, "_VEC_MIN_DEGREE", 0)
+            monkeypatch.setattr(P, "_MASK_MIN_ALMS", 1)
+            _assert_same_pack(ref, repack(prefix, arch))

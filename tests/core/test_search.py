@@ -1,0 +1,194 @@
+"""Successive-halving search driver: determinism, budget accounting,
+survivor selection, the registry-backed caches, and the subset-aware
+frontier satellite.
+
+The driver's contract is *reproducibility*: the rung schedule, circuit
+subsets, survivor sets and the recorded payload are pure functions of
+``(nets, archs, seed, eta, budget)`` — walls are the only nondeterminism
+and live in clearly marked keys.
+"""
+import copy
+
+import pytest
+
+from repro.core.alm import ARCHS, full_arch_grid, make_arch, subgrid
+from repro.core.circuits import kratos_gemm, sha_like, vtr_mixed
+from repro.core.plan import cache_stats, clear_caches
+from repro.core.search import (circuit_schedule, pareto_front, search_archs,
+                               select_survivors, verify_winners)
+from repro.core.sweep import adp_frontier, sweep_suite
+
+
+def _nets():
+    return [kratos_gemm(m=4, n=4, width=4, sparsity=0.5),
+            sha_like(rounds=1),
+            vtr_mixed(logic_nodes=150, adders=2)]
+
+
+def _grid(n=12):
+    return subgrid(full_arch_grid(), n)
+
+
+def _stable_payload(payload: dict) -> dict:
+    """The deterministic part of a search payload (walls dropped)."""
+    p = copy.deepcopy(payload)
+    for r in p["rungs"]:
+        r.pop("walls")
+    return p
+
+
+def test_full_grid_spans_a_thousand_classes():
+    from repro.core.alm import group_archs_by_structure
+
+    grid = full_arch_grid()
+    names = [a.name for a in grid]
+    assert len(names) == len(set(names))
+    assert len(grid) >= 1000
+    assert len(group_archs_by_structure(grid)) >= 1000
+    # the canonical paper rows are grid members under their grid names
+    assert {"b0", "b2_f10", "b2_f10_l6"} <= set(names)
+
+
+def test_circuit_schedule_nested_and_smallest_first():
+    nets = _nets()
+    subsets = circuit_schedule(nets, n_rungs=3, min_circuits=1)
+    assert [len(s) for s in subsets] == [1, 2, 3]
+    sizes = [n.n_luts + n.n_adders for n in subsets[-1]]
+    assert sizes == sorted(sizes)
+    for a, b in zip(subsets, subsets[1:]):       # nested prefixes
+        assert [n.name for n in a] == [n.name for n in b][:len(a)]
+
+
+def test_pareto_front_and_selection():
+    rows = [
+        {"arch": "a", "area_mwta": 1.0, "critical_path_ps": 1.0,
+         "adp": 1.00},
+        {"arch": "b", "area_mwta": 0.9, "critical_path_ps": 1.2,
+         "adp": 1.08},                            # front: best area
+        {"arch": "c", "area_mwta": 1.1, "critical_path_ps": 0.9,
+         "adp": 0.99},                            # front: best delay
+        {"arch": "d", "area_mwta": 1.2, "critical_path_ps": 1.3,
+         "adp": 1.56},                            # dominated by a
+    ]
+    front = [r["arch"] for r in pareto_front(rows)]
+    assert front == ["c", "a", "b"]              # (adp, name) order
+    assert "d" not in front
+    # halving: the front always survives, fill to k by adp
+    assert select_survivors(rows, k=2, allocation="halving") == \
+        ["a", "b", "c"]
+    # bandit widens by the optimism band but stays deterministic
+    s1 = select_survivors(rows, k=2, allocation="bandit", n_circuits=3)
+    s2 = select_survivors(rows, k=2, allocation="bandit", n_circuits=3)
+    assert s1 == s2 and set(front) <= set(s1)
+    with pytest.raises(ValueError, match="allocation"):
+        select_survivors(rows, k=2, allocation="ucb")
+
+
+def test_search_deterministic_payload():
+    """Same seed + budget (fresh netlist objects, fresh caches) →
+    identical survivor sets and identical payload modulo walls."""
+    grid = _grid()
+    clear_caches()
+    r1 = search_archs(_nets(), grid, seed=0, min_survivors=3,
+                      min_circuits=2, baseline="b0", packs={}, programs={})
+    clear_caches()
+    r2 = search_archs(_nets(), grid, seed=0, min_survivors=3,
+                      min_circuits=2, baseline="b0", packs={}, programs={})
+    assert r1.survivor_trajectory() == r2.survivor_trajectory()
+    assert _stable_payload(r1.payload()) == _stable_payload(r2.payload())
+    assert r1.winner == r2.winner
+    # every rung reports the full wall split schema
+    for rung in r1.rungs:
+        assert set(rung["walls"]) == {"pack_s", "prefix_s", "recluster_s",
+                                      "lower_s", "place_s", "time_s",
+                                      "eval_s"}
+
+
+def test_search_budget_ledger():
+    """The budget is a hard cap on (circuit x arch) evaluations: rungs
+    are trimmed to fit and the ledger records what was spent."""
+    grid = _grid()
+    nets = _nets()
+    free = search_archs(nets, grid, seed=0, min_survivors=3,
+                        min_circuits=2, baseline="b0",
+                        packs={}, programs={})
+    capped = search_archs(nets, grid, seed=0, min_survivors=3,
+                          min_circuits=2, baseline="b0", packs={},
+                          programs={}, budget=len(grid) * 2)
+    assert capped.budget["requested"] == len(grid) * 2
+    assert capped.budget["used"] <= capped.budget["requested"]
+    assert len(capped.rungs) <= len(free.rungs)
+    with pytest.raises(ValueError, match="budget"):
+        search_archs(nets, grid, seed=0, min_circuits=2, baseline="b0",
+                     packs={}, programs={}, budget=1)
+
+
+def test_search_winner_verified():
+    """The promoted winner is oracle-bit-identical and equivalence-gated
+    — the honesty gate the recorded frontier rests on."""
+    grid = _grid(8)
+    nets = _nets()
+    res = search_archs(nets, grid, seed=0, min_survivors=2,
+                       min_circuits=2, baseline="b0",
+                       packs={}, programs={})
+    rep = verify_winners(res, nets, grid, seed=0, n_equiv_circuits=1,
+                         winners=[res.winner])
+    assert rep["oracle_match"] and rep["equivalent"]
+    assert rep["mismatches"] == []
+
+
+def test_search_baseline_must_be_in_grid():
+    with pytest.raises(ValueError, match="baseline"):
+        search_archs(_nets(), _grid(8), baseline="nope")
+
+
+def test_adp_frontier_circuit_subset():
+    """Rung-level and full-suite frontiers share one code path: the
+    ``circuits`` subset argument; unknown names raise a clear error."""
+    nets = _nets()
+    grid = [ARCHS["baseline"], ARCHS["dd5"],
+            make_arch("dd5_a8", bypass_inputs=2, alms_per_lb=8)]
+    res = sweep_suite(nets, grid, backend="numpy",
+                      packs={}, programs={}, prefixes={})
+    sub_names = [nets[0].name]
+    rows_sub = adp_frontier(res, baseline="baseline", circuits=sub_names)
+    # equals the frontier of a sweep over only that circuit
+    res_only = sweep_suite([nets[0]], grid, backend="numpy",
+                           packs={}, programs={}, prefixes={})
+    rows_only = adp_frontier(res_only, baseline="baseline")
+    assert rows_sub == rows_only
+    with pytest.raises(ValueError, match="no_such_circuit"):
+        adp_frontier(res, baseline="baseline",
+                     circuits=["no_such_circuit"])
+    with pytest.raises(ValueError, match="no_such_arch"):
+        res.by_arch("no_such_arch")
+
+
+def test_prefix_and_search_caches_registered():
+    """Regression mirroring the PR-6 placement-cache fix: the default
+    ``sweep_suite`` prefix store and the search driver's rung caches
+    live in the plan registry, so ONE ``clear_caches()`` provably drops
+    them — a 'cleared' state must rebuild, never serve a stale prefix or
+    pack."""
+    clear_caches()
+    nets = [kratos_gemm(m=4, n=4, width=4, sparsity=0.5)]
+    grid = [ARCHS["baseline"], ARCHS["dd5"]]
+    res1 = sweep_suite(nets, grid, backend="numpy")    # default stores
+    assert cache_stats().get("pack_prefix", 0) == 1
+    res2 = search_archs(nets, grid, seed=0, min_circuits=1,
+                        baseline="baseline")           # default stores
+    assert cache_stats().get("search_packs", 0) >= 2
+    clear_caches()
+    assert cache_stats().get("pack_prefix", 0) == 0
+    assert cache_stats().get("search_packs", 0) == 0
+    # rebuilt-from-scratch results are identical in value (no stale
+    # reuse, no loss either)
+    res1b = sweep_suite(nets, grid, backend="numpy")
+    for g in range(len(nets)):
+        for k in range(len(grid)):
+            assert (res1.records[g][k]["critical_path_ps"]
+                    == res1b.records[g][k]["critical_path_ps"])
+    res2b = search_archs(nets, grid, seed=0, min_circuits=1,
+                         baseline="baseline")
+    assert _stable_payload(res2.payload()) == _stable_payload(
+        res2b.payload())
