@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV lines.  Sections:
   search — thousand-point successive-halving design-space search over
           the full arch grid, gated on winner oracle parity +
           equivalence and a >= 2x search-vs-dense cost ratio
+  serve — async batched flow serving: p50/p99 latency + throughput at
+          1/8/32 concurrent clients, gated on serial bit-identity and
+          coalesced warm throughput >= 2x the serial min-of-N baseline
   kernels — Pallas kernel microbenchmarks (interpret mode on CPU)
   roofline — reads dry-run artifacts if present (see launch/dryrun.py)
 
@@ -33,10 +36,12 @@ suite-scale sweep numbers).
 ``--smoke`` is the fast-tier CI entrypoint (also ``scripts/check.sh``):
 runs ``pytest -m "not slow"``, a 2-point arch-grid sweep gated on oracle
 bit-identity, the IR-parity step, a 2-circuit placement gate (placed
-sweep bit-identical to the placed oracle + >= 2x placement reuse), and a
+sweep bit-identical to the placed oracle + >= 2x placement reuse), a
 2-rung / 8-point / 2-circuit search smoke (winner oracle parity +
-equivalence, dense-vs-search cost ratio >= 1), and exits non-zero on any
-failure.
+equivalence, dense-vs-search cost ratio >= 1), and a flow-serving smoke
+(8 concurrent clients over 2 circuits x 2 archs, every served record
+bit-identical to serial ``pack_and_analyze``, coalesced warm throughput
+>= the serial baseline), and exits non-zero on any failure.
 """
 from __future__ import annotations
 
@@ -54,6 +59,7 @@ SECTIONS = [
     ("sweep", "sweep_frontier"),
     ("place", "place_sweep"),
     ("search", "search_frontier"),
+    ("serve", "serve_latency"),
     ("kernels", "kernels"),
     ("roofline", "roofline"),
 ]
@@ -110,7 +116,9 @@ def smoke() -> int:
     their oracles from the same CircuitIR object) + the 2-circuit
     placement gate (placed sweep bit-identical to the placed oracle,
     placement reuse >= 2x vs place-per-point) + the 2-rung search smoke
-    (winner oracle parity + equivalence, dense-vs-search ratio >= 1)."""
+    (winner oracle parity + equivalence, dense-vs-search ratio >= 1) +
+    the flow-serving smoke (8 concurrent clients, 2 circuits x 2 archs;
+    serial bit-identity + coalesced >= serial throughput)."""
     import os
     import subprocess
 
@@ -164,14 +172,26 @@ def smoke() -> int:
         print(f"smoke_search,,failed({type(e).__name__}: {e})",
               file=sys.stderr)
         search_ok = False
+    print("== smoke: flow-serving gate (8 clients, 2 circuits x 2 archs) ==",
+          flush=True)
+    try:
+        from .serve_latency import run as serve_run
+
+        vrec = serve_run(smoke=True)
+        serve_ok = vrec["pass_gate"]
+    except Exception as e:  # noqa: BLE001
+        print(f"smoke_serve,,failed({type(e).__name__}: {e})",
+              file=sys.stderr)
+        serve_ok = False
     ok = (tests.returncode == 0 and sweep_ok and ir_ok and place_ok
-          and search_ok)
+          and search_ok and serve_ok)
     print(f"smoke,,{'ok' if ok else 'failed'}"
           f"(tests={'ok' if tests.returncode == 0 else 'fail'};"
           f"sweep={'ok' if sweep_ok else 'fail'};"
           f"ir_parity={'ok' if ir_ok else 'fail'};"
           f"place={'ok' if place_ok else 'fail'};"
-          f"search={'ok' if search_ok else 'fail'})")
+          f"search={'ok' if search_ok else 'fail'};"
+          f"serve={'ok' if serve_ok else 'fail'})")
     return 0 if ok else 1
 
 

@@ -5,7 +5,10 @@
 # ONCE each; eval and timing proven against their oracles from the same
 # CircuitIR object, lowering counters asserting no duplicates), + the
 # 2-rung / 8-point / 2-circuit successive-halving search smoke (winner
-# oracle parity + equivalence, dense-vs-search cost ratio >= 1).
+# oracle parity + equivalence, dense-vs-search cost ratio >= 1), + the
+# flow-serving smoke (8 concurrent clients over 2 circuits x 2 archs,
+# every served record bit-identical to serial pack_and_analyze and
+# coalesced warm throughput >= the serial min-of-N baseline).
 # Equivalent to `python -m benchmarks.run --smoke`; run the full tier-1
 # line (`python -m pytest -x -q`) before shipping.
 set -e

@@ -68,6 +68,61 @@ DEFAULT_MAX_GROUPS = 4
 _PLAN_CACHE = _planner.register_cache("eval_plans", cap=64)
 _GROUP_CACHE = _planner.register_cache("eval_groups", cap=16)
 
+#: shape signatures of evaluation programs that have actually *run* (hence
+#: compiled) in this process — the ground truth behind the cost model's
+#: ``warm="auto"`` derivation (:func:`repro.core.flow.eval_mode_cost_model`).
+#: jax keys its jit cache by argument shapes + static args, so the
+#: signature is shape-based too (:func:`program_signature`): two circuits
+#: whose plans pad to identical bucket envelopes share one compile, and
+#: the marker honestly reports both warm.
+_COMPILED_CACHE = _planner.register_cache("eval_compiled", cap=2048)
+
+
+def program_signature(plan: FusedPlan, n_lane_words: int,
+                      use_pallas: bool, batch: int | None = None) -> tuple:
+    """The jit-cache identity of one evaluation program: per-bucket
+    static flags + padded bucket shapes + value-buffer height + lane
+    words (+ the vmap batch size for grouped programs, ``None`` for
+    single-circuit ones).  Everything jax's compile cache keys on."""
+    return (plan.flags, tuple(bk.shape for bk in plan.buckets),
+            plan.n_signals,
+            None if n_lane_words is None else int(n_lane_words),
+            bool(use_pallas), batch)
+
+
+def layout_program_signature(layout: dict, n_signals: int,
+                             n_lane_words: int | None, use_pallas: bool,
+                             batch: int | None) -> tuple:
+    """:func:`program_signature` derived from a :func:`group_layout`
+    record alone — no plan tensors built.  Mirrors ``_bucket_from_ir``'s
+    padding floors (``max(dim, 1)``) and per-bucket flags, which a test
+    pins against the signature an actual run records."""
+    flags = tuple((M > 0, C > 0) for (M, C, B) in layout["envelopes"])
+    shapes = tuple((max(j - i, 1), max(M, 1), max(C, 1), max(B, 1))
+                   for (i, j), (M, C, B) in zip(layout["bounds"],
+                                                layout["envelopes"]))
+    return (flags, shapes, n_signals,
+            None if n_lane_words is None else int(n_lane_words),
+            bool(use_pallas), batch)
+
+
+def mark_program_run(sig: tuple) -> None:
+    """Record that the program with signature ``sig`` has executed (its
+    compile is cached).  Called by both evaluation paths after a run."""
+    _COMPILED_CACHE.put(sig, True)
+
+
+def program_seen(sig: tuple) -> bool:
+    """Has a program with this signature run in this process?  With
+    ``n_lane_words`` (position 3) set to ``None`` the lane-word count is
+    a wildcard — for cost-model callers that don't know the lane shape
+    yet (a compile at any lane count proves the plan shapes were built
+    and the program dispatched at least once)."""
+    if sig[3] is not None:
+        return sig in _COMPILED_CACHE
+    probe = sig[:3] + sig[4:]
+    return any(k[:3] + k[4:] == probe for k in _COMPILED_CACHE.keys())
+
 
 def netlist_digest(net: Netlist) -> str:
     """Content digest of a netlist's structure (the plan-cache key) —
@@ -367,6 +422,7 @@ def eval_netlist_jax(net: Netlist, pi_lanes: dict[int, np.ndarray],
     vals = _init_vals(plan, pi_lanes, n_lane_words)
     out = _run_fused(vals, plan.device_arrays(), flags=plan.flags,
                      use_pallas=use_pallas)
+    mark_program_run(program_signature(plan, n_lane_words, use_pallas))
     return out[:plan.n_signals]
 
 
@@ -467,8 +523,8 @@ class SuiteProgram:
     def run(self, pi_lanes_list: list[dict[int, np.ndarray]],
             n_lane_words: int, use_pallas: bool = True) -> list[np.ndarray]:
         outs: list = [None] * len(self.n_signals)
-        for members, (n_sig, stacked, flags, _) in zip(self.groups,
-                                                       self.programs):
+        for members, (n_sig, stacked, flags,
+                      member_plans) in zip(self.groups, self.programs):
             vals = np.zeros((len(members), n_sig + 1, n_lane_words),
                             dtype=np.uint32)
             vals[:, CONST1] = 0xFFFFFFFF
@@ -480,6 +536,11 @@ class SuiteProgram:
             # np.asarray blocks on the device result — timing loops over
             # run() measure execution, not dispatch
             out = np.asarray(out)
+            # all members share the group layout, so member 0's plan IS
+            # the group's program shape signature
+            mark_program_run(program_signature(
+                member_plans[0], n_lane_words, use_pallas,
+                batch=len(members)))
             for row, i in enumerate(members):
                 outs[i] = out[row, :self.n_signals[i]]
         return outs

@@ -291,8 +291,10 @@ def prepare_suite(nets: list[Netlist],
 #: the padding small relative to the saved dispatches.
 EVAL_DISPATCH_ROW_COST = 4096
 
-#: padded-row-equivalents charged per program COMPILE when the caller has
-#: not declared the jit cache warm (``warm=False``, the default): the
+#: padded-row-equivalents charged per program COMPILE when the program's
+#: shape signature has not run yet (``warm="auto"``, the default — see
+#: :func:`repro.core.eval_jax.program_seen`) or the caller forces
+#: ``warm=False``: the
 #: recorded cold suite walls (``suite_eval_grouped.json``:
 #: ``t_suite_per_circuit_s`` - ``t_suite_grouped_s`` over the compile-
 #: count delta) imply ~3-4 s per program compile, ~10^7 rows at the
@@ -305,7 +307,9 @@ def eval_mode_cost_model(nets: list[Netlist], plans=None, groups=None,
                          max_groups: int = DEFAULT_MAX_GROUPS,
                          max_buckets: int = DEFAULT_MAX_BUCKETS,
                          backend: str | None = None,
-                         warm: bool = False) -> dict:
+                         warm: bool | str = "auto",
+                         n_lane_words: int | None = None,
+                         use_pallas: bool = True) -> dict:
     """Backend-aware cost model: grouped vs per-circuit eval.
 
     Grouped evaluation trades program count (one compile + one dispatch
@@ -316,17 +320,29 @@ def eval_mode_cost_model(nets: list[Netlist], plans=None, groups=None,
     backends (``gpu``/``tpu``) the group axis maps to real parallelism
     and a group costs one member's padded rows.  Both sides are charged
     :data:`EVAL_DISPATCH_ROW_COST` rows per program, plus
-    :data:`EVAL_COMPILE_ROW_COST` per program unless ``warm=True``
-    (caller vouches the jit cache is hot, e.g. a steady-state loop) —
-    cold one-shot calls therefore keep the compile-count-minimizing
-    grouped layout, and only amortized loops flip to the padding-free
-    per-circuit one.  All terms come from the unified
+    :data:`EVAL_COMPILE_ROW_COST` per program that is not yet compiled.
+
+    Warmness is no longer caller-asserted: the default ``warm="auto"``
+    derives it *per program* from the registry's record of programs that
+    have actually run (:func:`repro.core.eval_jax.program_seen`, shape
+    signatures matching jax's own jit keying) — on a mixed batch two
+    circuits already served stay cheap while a new envelope is charged
+    its compile, which the old all-or-nothing flag got wrong in both
+    directions.  ``warm=True`` / ``False`` remain as forced overrides
+    (benchmark loops that just cleared the jax cache, tests).
+    ``n_lane_words`` sharpens the auto derivation (compiles are
+    per-lane-shape); when unknown, a program compiled at any lane count
+    counts as warm.  All row terms come from the unified
     :class:`~repro.core.circuit_ir.CircuitIR` profiles — no device
     tensors are built.  (ROADMAP "warm-path grouped eval" item.)
     """
     from .circuit_ir import lower_netlist_ir
-    from .eval_jax import group_layout, group_plans_by_envelope
+    from .eval_jax import (group_layout, group_plans_by_envelope,
+                           layout_program_signature, program_seen,
+                           program_signature)
 
+    if warm not in (True, False, "auto"):
+        raise ValueError(f"warm must be True, False or 'auto': {warm!r}")
     if plans is None:
         plans = [plan_netlist(n, max_buckets=max_buckets) for n in nets]
     if groups is None:
@@ -336,27 +352,46 @@ def eval_mode_cost_model(nets: list[Netlist], plans=None, groups=None,
 
         backend = jax.default_backend()
     parallel = backend in ("gpu", "tpu")
+
+    def compile_cost(sig) -> int:
+        if warm is True:
+            return 0
+        if warm is False:
+            return EVAL_COMPILE_ROW_COST
+        return 0 if program_seen(sig) else EVAL_COMPILE_ROW_COST
+
     irs = [lower_netlist_ir(n) for n in nets]
     single_rows = sum(p.padded_lut_rows + p.padded_chain_bits for p in plans)
+    compile_single = sum(
+        compile_cost(program_signature(p, n_lane_words, use_pallas))
+        for p in plans)
     grouped_rows = 0
+    compile_grouped = 0
     for g in groups:
         layout = group_layout([irs[i] for i in g], max_buckets=max_buckets)
         grouped_rows += layout["rows_per_member"] * (1 if parallel
                                                      else len(g))
-    per_program = EVAL_DISPATCH_ROW_COST + (0 if warm
-                                            else EVAL_COMPILE_ROW_COST)
-    cost_grouped = grouped_rows + per_program * len(groups)
-    cost_single = single_rows + per_program * len(nets)
+        compile_grouped += compile_cost(layout_program_signature(
+            layout, max(irs[i].n_signals for i in g), n_lane_words,
+            use_pallas, len(g)))
+    dispatch = EVAL_DISPATCH_ROW_COST
+    cost_grouped = grouped_rows + dispatch * len(groups) + compile_grouped
+    cost_single = single_rows + dispatch * len(nets) + compile_single
     return {
         "backend": backend,
         "parallel": parallel,
         "warm": warm,
         "n_programs_grouped": len(groups),
         "n_programs_per_circuit": len(nets),
+        "n_cold_programs_grouped": compile_grouped // EVAL_COMPILE_ROW_COST,
+        "n_cold_programs_per_circuit": (compile_single
+                                        // EVAL_COMPILE_ROW_COST),
         "padded_rows_grouped": int(grouped_rows),
         "padded_rows_per_circuit": int(single_rows),
         "dispatch_row_cost": EVAL_DISPATCH_ROW_COST,
-        "compile_row_cost": 0 if warm else EVAL_COMPILE_ROW_COST,
+        "compile_row_cost": EVAL_COMPILE_ROW_COST,
+        "compile_rows_grouped": int(compile_grouped),
+        "compile_rows_per_circuit": int(compile_single),
         "cost_grouped": int(cost_grouped),
         "cost_per_circuit": int(cost_single),
         "pick": "grouped" if cost_grouped <= cost_single else "per_circuit",
@@ -370,14 +405,17 @@ def evaluate_suite(nets: list[Netlist],
                    max_buckets: int = DEFAULT_MAX_BUCKETS,
                    program: SuiteProgram | None = None,
                    mode: str = "auto",
-                   warm: bool = False) -> tuple[list[np.ndarray], dict]:
+                   warm: bool | str = "auto") -> tuple[list[np.ndarray],
+                                                       dict]:
     """Whole-suite evaluation as <= ``max_groups`` vmapped jit programs —
     or per-circuit fused programs, whichever the backend-aware cost model
     predicts cheaper (``mode="auto"``; force with ``"grouped"`` /
-    ``"per_circuit"``; a prepared ``program`` implies grouped).  Pass
-    ``warm=True`` from steady-state loops whose jit compiles are already
-    amortized — a cold one-shot call (the default assumption) charges
-    compile count and keeps the old always-grouped behavior.
+    ``"per_circuit"``; a prepared ``program`` implies grouped).
+    ``warm="auto"`` (default) derives each candidate program's compile
+    cost from whether its shape signature has actually run
+    (:func:`eval_mode_cost_model`); ``True``/``False`` force the old
+    all-warm / all-cold assumptions for benchmark loops that know
+    better (e.g. right after ``jax.clear_caches()``).
 
     Returns ``(per-circuit vals arrays, stats)`` where stats records the
     envelope groups, their bucket shapes, padded-row counts, the chosen
@@ -404,7 +442,9 @@ def evaluate_suite(nets: list[Netlist],
     if mode == "auto":
         groups = group_plans_by_envelope(plans, max_groups=max_groups)
         model = eval_mode_cost_model(nets, plans=plans, groups=groups,
-                                     max_buckets=max_buckets, warm=warm)
+                                     max_buckets=max_buckets, warm=warm,
+                                     n_lane_words=n_lane_words,
+                                     use_pallas=use_pallas)
         chosen = model["pick"]
     if chosen == "grouped":
         if groups is None:
@@ -429,6 +469,24 @@ def evaluate_suite(nets: list[Netlist],
     if model is not None:
         stats["cost_model"] = model
     return outs, stats
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def serve(requests, **server_kwargs):
+    """Serve a list of :class:`~repro.core.serve_flow.FlowRequest`\\ s
+    through one async batched :class:`~repro.core.serve_flow.FlowServer`
+    (coalescing window, request dedup, batched timing/eval programs,
+    bounded multi-tenant caches) and return
+    :class:`~repro.core.serve_flow.FlowResult`\\ s in request order.
+    Every record is bit-identical to ``pack_and_analyze(net, arch,
+    seeds=(seed,))`` — see :mod:`repro.core.serve_flow`."""
+    from .serve_flow import serve_requests
+
+    return serve_requests(requests, **server_kwargs)
 
 
 def oracle_check(net: Netlist, pi_lanes: dict[int, np.ndarray],

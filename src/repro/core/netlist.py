@@ -326,6 +326,32 @@ class Netlist:
                        )).encode())
         return h.hexdigest()
 
+    def pack_digest(self) -> str:
+        """Digest of the *pack-and-timing-relevant* structure — everything
+        :meth:`content_digest` covers **except the LUT truth tables**.
+        Neither the packer (absorption / chain slotting / pairing /
+        clustering read only connectivity) nor static timing (delays are
+        per-edge-class, never per-function) ever reads ``lut_tt``, so two
+        netlists with equal pack digests produce byte-identical
+        ``pack()`` results and identical timing/area records under every
+        (arch, seed).  This is the key behind the flow server's
+        netlist-delta fast path (:mod:`repro.core.serve_flow`): a
+        truth-table-only edit — the shape of an incremental-synthesis
+        weight/constant update — reuses the base request's pack and
+        timing outright and re-runs only functional evaluation."""
+        import hashlib
+
+        h = hashlib.blake2b(digest_size=16)
+        h.update(repr((self.n_signals, tuple(self.pis),
+                       tuple(self.lut_inputs),
+                       tuple(self.lut_out),
+                       tuple((tuple(c.a), tuple(c.b), tuple(c.sums),
+                              c.cin, c.cout) for c in self.chains),
+                       tuple(sorted((k, tuple(v))
+                                    for k, v in self.pos.items()))
+                       )).encode())
+        return h.hexdigest()
+
     def lower_ir(self):
         """The functional columnar :class:`~repro.core.circuit_ir.CircuitIR`
         of this netlist (levelized node rows with truth-table words, signal

@@ -54,33 +54,84 @@ from __future__ import annotations
 
 
 class Cache:
-    """Insertion-ordered mapping with FIFO eviction at ``cap`` entries.
+    """Bounded LRU mapping with hit/miss/eviction telemetry.
 
     Eviction is a perf tradeoff, never a correctness one: every consumer
     rebuilds on a miss (re-lowering / re-planning), so a sweep over more
     distinct circuits than a cache's cap still computes correct results —
     it just stops amortizing.  The functional-IR and template caches are
-    sized (256) well above the benchmark suites; raise the caps if a
-    workload legitimately holds more circuits warm at once."""
+    sized (256) well above the benchmark suites; raise the caps
+    (:func:`set_cache_cap`) if a workload legitimately holds more
+    circuits warm at once.
+
+    Multi-tenant serving (:mod:`repro.core.serve_flow`) shares these
+    caches across requests, so two properties matter beyond the old FIFO
+    dict:
+
+    * **LRU order** — a ``get`` hit (or ``[]`` access) refreshes the
+      entry, so the steady-state working set of a request mix survives
+      one-off circuits streaming through;
+    * **counters** — ``hits`` / ``misses`` / ``evictions`` accumulate per
+      cache and surface through :func:`cache_stats`; the flow server's
+      telemetry and the warm-path cost model both read them.
+      ``__contains__`` is a *probe* and deliberately does not count (or
+      refresh) — cost models may ask "would this hit?" without skewing
+      the stats they are about to report.
+    """
 
     def __init__(self, name: str, cap: int):
         self.name = name
         self.cap = cap
         self._d: dict = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def _touch(self, key) -> None:
+        # dicts preserve insertion order; re-inserting moves to the end,
+        # which is all LRU needs (the first key is the eviction victim)
+        self._d[key] = self._d.pop(key)
 
     def get(self, key, default=None):
-        return self._d.get(key, default)
+        if key in self._d:
+            self.hits += 1
+            self._touch(key)
+            return self._d[key]
+        self.misses += 1
+        return default
 
     def put(self, key, value) -> None:
-        if key not in self._d and len(self._d) >= self.cap:
+        if key in self._d:
+            self._d.pop(key)
+        elif len(self._d) >= self.cap:
             self._d.pop(next(iter(self._d)))
+            self.evictions += 1
         self._d[key] = value
 
     def pop(self, key, default=None):
         return self._d.pop(key, default)
 
     def clear(self) -> None:
+        """Drop all entries.  Lifetime counters survive — a clear is an
+        invalidation event, not a telemetry reset
+        (:func:`reset_cache_stats` does that)."""
         self._d.clear()
+
+    def resize(self, cap: int) -> None:
+        """Change the capacity, evicting LRU entries if shrinking."""
+        if cap < 1:
+            raise ValueError(f"cache {self.name!r}: cap must be >= 1")
+        self.cap = cap
+        while len(self._d) > cap:
+            self._d.pop(next(iter(self._d)))
+            self.evictions += 1
+
+    def stats(self) -> dict:
+        return {"size": len(self._d), "cap": self.cap, "hits": self.hits,
+                "misses": self.misses, "evictions": self.evictions}
+
+    def reset_stats(self) -> None:
+        self.hits = self.misses = self.evictions = 0
 
     def __len__(self) -> int:
         return len(self._d)
@@ -92,6 +143,11 @@ class Cache:
     # took a plain dict (e.g. sweep_suite's caller-provided ``prefixes``)
     # accept a registry cache interchangeably
     def __getitem__(self, key):
+        if key not in self._d:
+            self.misses += 1
+            raise KeyError(key)
+        self.hits += 1
+        self._touch(key)
         return self._d[key]
 
     def __setitem__(self, key, value) -> None:
@@ -127,14 +183,35 @@ def clear_caches() -> None:
     """Drop every registered lowering/planning cache at once — functional
     IRs, eval plans, grouped tensors and sweep IR templates.  The single
     invalidation point the per-module ``clear_plan_caches()`` used to
-    only partially cover."""
+    only partially cover.  Counters survive (a clear is an invalidation,
+    not a telemetry reset — see :func:`reset_cache_stats`)."""
     for cache in _REGISTRY.values():
         cache.clear()
 
 
-def cache_stats() -> dict[str, int]:
-    """Entry counts per registered cache (diagnostics/tests)."""
-    return {name: len(c) for name, c in _REGISTRY.items()}
+def reset_cache_stats() -> None:
+    """Zero every registered cache's hit/miss/eviction counters (e.g. at
+    flow-server start, so telemetry windows are comparable)."""
+    for cache in _REGISTRY.values():
+        cache.reset_stats()
+
+
+def set_cache_cap(name: str, cap: int) -> Cache:
+    """Resize the registered cache ``name`` (evicting LRU entries when
+    shrinking) — the knob a multi-tenant deployment tunes per cache."""
+    cache = _REGISTRY.get(name)
+    if cache is None:
+        raise KeyError(f"no registered cache named {name!r} "
+                       f"(registered: {sorted(_REGISTRY)})")
+    cache.resize(cap)
+    return cache
+
+
+def cache_stats() -> dict[str, dict]:
+    """Per-cache telemetry: ``{name: {size, cap, hits, misses,
+    evictions}}`` — the single surface the flow server's stats endpoint,
+    the warm-path cost model diagnostics and the cache tests all read."""
+    return {name: c.stats() for name, c in _REGISTRY.items()}
 
 
 # ---------------------------------------------------------------------------

@@ -186,6 +186,49 @@ def _copy_skeleton(alms: list[ALM]) -> list[ALM]:
     return out
 
 
+def cluster_delta(base: PackedCircuit, new: PackedCircuit) -> dict:
+    """Per-cluster membership diff between two packs of the *same arch*
+    — the flow server's delta-path attribution (how much of a
+    ``base_digest`` request's packing actually changed).
+
+    An LB is *changed* when its multiset of ALM occupancies differs —
+    ALM identity is taken structurally (the FA bits and hosted/absorbed
+    LUT indices of each half, plus arith/lut6 flags), so two packs of
+    netlists that share atom numbering (the delta-request contract)
+    compare meaningfully.  Returns ``{"n_lbs_base", "n_lbs_new",
+    "n_changed", "unchanged_frac"}``; byte-identical packs report 0
+    changed clusters."""
+
+    def alm_sig(pack: PackedCircuit, ai: int) -> tuple:
+        alm = pack.alms[ai]
+        return tuple((h.fa, h.fa_feed, tuple(h.absorbed), h.hosted_lut)
+                     for h in alm.halves) + (alm.is_arith, alm.lut6)
+
+    def lb_sigs(pack: PackedCircuit) -> list[tuple]:
+        # sort by repr: signature fields mix None with tuples/ints, which
+        # have no direct ordering — only a canonical multiset order is
+        # needed, not a meaningful one
+        return [tuple(sorted((alm_sig(pack, ai) for ai in lb.alms),
+                             key=repr))
+                for lb in pack.lbs]
+
+    base_sigs = lb_sigs(base)
+    new_sigs = lb_sigs(new)
+    # greedy signature matching: clusters that survive verbatim cancel
+    # out, position-independently (re-clustering may renumber LBs)
+    from collections import Counter
+
+    surviving = Counter(base_sigs) & Counter(new_sigs)
+    n_same = sum(surviving.values())
+    n_changed = max(len(base_sigs), len(new_sigs)) - n_same
+    return {
+        "n_lbs_base": len(base_sigs),
+        "n_lbs_new": len(new_sigs),
+        "n_changed": int(n_changed),
+        "unchanged_frac": n_same / max(len(new_sigs), 1),
+    }
+
+
 def repack(prefix: PackPrefix, arch: ArchParams,
            allow_unrelated: bool = True, strict_phases: tuple = (False,),
            pull_runs: bool = False) -> PackedCircuit:

@@ -157,7 +157,7 @@ def test_clear_caches_forces_relowering():
     reset_lower_counts()
     clear_plan_caches()                       # the old entry point — now
     assert prefix.ir_template is None         # reaches the templates too
-    assert all(n == 0 for n in cache_stats().values())
+    assert all(st["size"] == 0 for st in cache_stats().values())
     res2 = sweep_suite(nets, grid, backend="numpy", prefixes=prefixes)
     counts = read_lower_counts()
     assert counts["functional"] == 1          # forced full re-lowering

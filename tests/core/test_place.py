@@ -171,12 +171,12 @@ def test_placement_cache_in_registry_cleared_with_everything_else():
     ir = pack(net, arch).lower_ir()
     a = placement_for(ir, arch, seed=0)
     assert PLACE_COUNTS["analytic"] == n0 + 1
-    assert cache_stats().get("placement", 0) == 1
+    assert cache_stats()["placement"]["size"] == 1
     # warm hit: same object, no new solve
     assert placement_for(ir, arch, seed=0) is a
     assert PLACE_COUNTS["analytic"] == n0 + 1
     clear_caches()
-    assert cache_stats().get("placement", 0) == 0
+    assert cache_stats()["placement"]["size"] == 0
     b = placement_for(ir, arch, seed=0)
     assert b is not a                      # re-solved, not stale
     assert PLACE_COUNTS["analytic"] == n0 + 2

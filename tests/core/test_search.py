@@ -174,13 +174,13 @@ def test_prefix_and_search_caches_registered():
     nets = [kratos_gemm(m=4, n=4, width=4, sparsity=0.5)]
     grid = [ARCHS["baseline"], ARCHS["dd5"]]
     res1 = sweep_suite(nets, grid, backend="numpy")    # default stores
-    assert cache_stats().get("pack_prefix", 0) == 1
+    assert cache_stats()["pack_prefix"]["size"] == 1
     res2 = search_archs(nets, grid, seed=0, min_circuits=1,
                         baseline="baseline")           # default stores
-    assert cache_stats().get("search_packs", 0) >= 2
+    assert cache_stats()["search_packs"]["size"] >= 2
     clear_caches()
-    assert cache_stats().get("pack_prefix", 0) == 0
-    assert cache_stats().get("search_packs", 0) == 0
+    assert cache_stats()["pack_prefix"]["size"] == 0
+    assert cache_stats()["search_packs"]["size"] == 0
     # rebuilt-from-scratch results are identical in value (no stale
     # reuse, no loss either)
     res1b = sweep_suite(nets, grid, backend="numpy")
