@@ -1,0 +1,239 @@
+"""Incremental repack — dirty-set re-cluster + IR patch vs the full path.
+
+The serving layer's structural-delta path (``repack.pack_prefix_delta``
++ ``repack.repack_delta`` + ``circuit_ir.apply_pack_delta``) claims a
+single-LUT structural edit on the largest suite circuit re-clusters a
+*dirty set* and patches the cached IR instead of re-running the whole
+prefix + greedy re-cluster + lowering pipeline.  This driver measures
+that claim on ``conv2d-fu`` (the largest Kratos suite member) under DD5
+and writes ``experiments/perf/repack_delta.json``.
+
+Workload: one single-LUT fanin rewire, probed so it stays on the
+incremental path (edits that flip absorption/pairing decisions or
+overrun the divergence bound legitimately fall back — the contract in
+``benchmarks/README.md`` — and are not what this gate measures).  Both
+paths are timed warm with :func:`benchmarks.common.min_of_n`; the
+edited netlist's IR cache rows are evicted per iteration so *both*
+paths pay their real lowering cost every sample.
+
+Gates (``pass_gate``):
+
+* **byte-identity** — the delta-path pack equals a fresh ``pack()`` of
+  the edited netlist field for field (sites, LB membership, per-ALM
+  occupancy), and the delta-patched IR times identically;
+* **per-cluster proof** — ``equiv.verify_clusters`` proves every
+  touched LB (edited LUT's LB + every diverged LB) equivalent;
+* **>= 2x** — delta wall (diff + prefix patch + advised re-cluster +
+  IR patch), min-of-N, at least 2x faster than the full re-cluster
+  path (prefix + re-cluster + lowering) on the same edit;
+* **serve parity** — the edit served through ``FlowServer`` with
+  ``base_digest`` produces a record bit-identical to
+  ``flow.pack_and_analyze`` on the edited netlist, via the delta path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import random
+
+from repro.core import plan
+from repro.core.alm import ARCHS
+from repro.core.circuit_ir import (_IR_CACHE, _PACK_DELTA_CACHE,
+                                   apply_pack_delta)
+from repro.core.circuits import kratos_conv2d
+from repro.core.edits import (clone_netlist, edit_rewire_fanin,
+                              safe_rewire_sources)
+from repro.core.equiv import verify_clusters
+from repro.core.packing import pack
+from repro.core.repack import (netlist_structural_diff, pack_prefix,
+                               pack_prefix_delta, repack, repack_delta,
+                               repack_with_log)
+
+from .common import Timer, emit, min_of_n
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "perf")
+
+ARCH = "dd5"
+
+
+def _same_pack(a, b) -> bool:
+    """Field-for-field pack identity — the delta contract's byte-identity
+    claim over everything downstream lowering reads."""
+    if (a.n_alms != b.n_alms or a.n_lbs != b.n_lbs
+            or a.concurrent_luts != b.concurrent_luts
+            or a.lut_site != b.lut_site or a.chain_site != b.chain_site
+            or list(a.alm_lb) != list(b.alm_lb)):
+        return False
+    for x, y in zip(a.alms, b.alms):
+        if (x.is_arith, x.lut6) != (y.is_arith, y.lut6):
+            return False
+        for hx, hy in zip(x.halves, y.halves):
+            if (hx.fa, hx.fa_feed, hx.absorbed, hx.hosted_lut) != (
+                    hy.fa, hy.fa_feed, hy.absorbed, hy.hosted_lut):
+                return False
+    return all(list(x.alms) == list(y.alms) for x, y in zip(a.lbs, b.lbs))
+
+
+def _pick_edit(net, prefix, log, arch, seed: int, max_probes: int = 50):
+    """A single-LUT fanin rewire that stays on the incremental path.
+    Probes deterministic random edits; returns ``(new_net, li, n_probed)``
+    or raises if the circuit admits none within the probe budget."""
+    rng = random.Random(seed)
+    cands = [li for li in range(net.n_luts) if li not in prefix.lut_site]
+    for probe in range(max_probes):
+        li = rng.choice(cands)
+        srcs = safe_rewire_sources(net, li)
+        if not srcs:
+            continue
+        src = rng.choice(srcs)
+        pin = rng.randrange(len(net.lut_inputs[li]))
+        if net.lut_inputs[li][pin] == src:
+            continue
+        new_net = clone_netlist(net)
+        edit_rewire_fanin(new_net, li, pin, src)
+        new_prefix, pinfo = pack_prefix_delta(prefix, new_net, base_log=log)
+        if new_prefix is None or pinfo["mode"] != "incremental":
+            continue
+        _, rinfo = repack_delta(new_prefix, log, arch,
+                                dirty_atoms=pinfo["dirty_atoms"])
+        if rinfo["mode"] == "incremental":
+            return new_net, li, probe + 1
+    raise RuntimeError(
+        f"no incremental-path edit found in {max_probes} probes")
+
+
+def run(smoke: bool = False, verbose: bool = True, seed: int = 0,
+        write_json: bool = True) -> dict:
+    plan.clear_caches()
+    arch = ARCHS[ARCH]
+    net = kratos_conv2d()                 # conv2d-fu, largest suite member
+    n = 2 if smoke else 3
+
+    with Timer() as t_base:
+        prefix = pack_prefix(net, seed=seed)
+        base_pack, log = repack_with_log(prefix, arch)
+        base_pack.lower_ir()              # warm the base functional IR
+    new_net, li, n_probed = _pick_edit(net, prefix, log, arch, seed)
+    new_digest = new_net.content_digest()
+    delta_key = (net.content_digest(), new_digest, arch.structural_key())
+
+    def full_path():
+        # what serving pays without the delta path: full prefix + full
+        # greedy re-cluster + lowering of the edited netlist
+        _IR_CACHE.pop(new_digest)
+        p = pack_prefix(new_net, seed=seed)
+        pk = repack(p, arch)
+        return pk, pk.lower_ir()
+
+    def delta_path():
+        # the dirty-set path; both lowering caches evicted so the IR
+        # patch recomputes every sample (a repeat edit would hit them)
+        _IR_CACHE.pop(new_digest)
+        _PACK_DELTA_CACHE.pop(delta_key)
+        diff = netlist_structural_diff(net, new_net)
+        np_, pinfo = pack_prefix_delta(prefix, new_net, base_log=log,
+                                       diff=diff)
+        pk, rinfo = repack_delta(np_, log, arch,
+                                 dirty_atoms=pinfo["dirty_atoms"])
+        ir = apply_pack_delta(pk, net, edited_luts=diff["changed_inputs"],
+                              tt_luts=diff["changed_tt"])
+        return pk, ir, rinfo
+
+    t_full, (full_pack, full_ir) = min_of_n(full_path, n=n)
+    t_delta, (dpack, dir_, rinfo) = min_of_n(delta_path, n=n)
+    speedup = t_full / max(t_delta, 1e-9)
+
+    # -- byte-identity vs a completely fresh pack of the edited netlist --
+    fresh = pack(new_net, arch, seed=seed)
+    same = _same_pack(dpack, fresh) and _same_pack(full_pack, fresh)
+    from repro.core.timing import analyze_oracle
+    from repro.core.timing_vec import analyze_ir
+    cp_delta = analyze_ir(dir_, arch)["critical_path_ps"]
+    cp_full = analyze_ir(full_ir, arch)["critical_path_ps"]
+    cp_ref = analyze_oracle(fresh)["critical_path_ps"]
+    timing_same = cp_delta == cp_full == cp_ref
+
+    # -- per-cluster proof over every touched LB ------------------------
+    touched = set(rinfo["div_lbs"])
+    site = dpack.lut_site.get(li)
+    if site is not None:
+        touched.add(int(dpack.alm_lb[site]))
+    vrep = verify_clusters(dpack, sorted(touched))
+
+    # -- serve parity: the edit through the FlowServer delta path -------
+    from repro.core.flow import _METRIC_KEYS, pack_and_analyze
+    from repro.core.serve_flow import FlowRequest, serve_requests
+
+    plan.clear_caches()
+    res = serve_requests([FlowRequest(net, ARCH, seed=seed)])
+    res_d = serve_requests(
+        [FlowRequest(new_net, ARCH, seed=seed,
+                     base_digest=res[0].digest)])
+    ref = pack_and_analyze(new_net, ARCH, seeds=(seed,))
+    serve_delta = res_d[0].delta or {}
+    serve_parity = all(res_d[0].record[k] == ref[k] for k in _METRIC_KEYS)
+    served_incremental = (
+        serve_delta.get("repack", {}).get("mode") == "incremental")
+
+    rec = {
+        "tag": "repack_delta",
+        "smoke": smoke,
+        "circuit": net.name,
+        "arch": ARCH,
+        "seed": seed,
+        "edit": {"lut": li, "kind": "rewire_fanin", "n_probed": n_probed},
+        "base_build_s": t_base.us / 1e6,
+        "t_full_s": t_full,
+        "t_delta_s": t_delta,
+        "speedup": speedup,
+        "n_samples": n,
+        "repack": {k: rinfo[k] for k in
+                   ("mode", "n_skipped", "n_scanned", "n_div_lbs",
+                    "n_frozen_lbs")},
+        "verify": {"method": vrep["method"], "lbs": vrep["lbs"],
+                   "scoped_luts": vrep["scoped_luts"],
+                   "equivalent": vrep["equivalent"]},
+        "serve": {"delta_mode": serve_delta.get("mode"),
+                  "repack_mode": serve_delta.get("repack", {}).get("mode"),
+                  "n_frozen": serve_delta.get("n_frozen"),
+                  "n_moved": serve_delta.get("n_moved"),
+                  "n_reclustered": serve_delta.get("n_reclustered"),
+                  "parity": serve_parity},
+        "pack_identical": bool(same),
+        "timing_identical": bool(timing_same),
+        "pass_gate": bool(same and timing_same and vrep["equivalent"]
+                          and serve_parity and served_incremental
+                          and speedup >= 2.0),
+    }
+    if write_json and not smoke:
+        os.makedirs(OUT, exist_ok=True)
+        with open(os.path.join(OUT, "repack_delta.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        emit("repack_delta/full", t_full * 1e6, f"n={n}")
+        emit("repack_delta/delta", t_delta * 1e6,
+             f"skip={rinfo['n_skipped']};scan={rinfo['n_scanned']};"
+             f"div={rinfo['n_div_lbs']}")
+        emit("repack_delta/gate", 0,
+             f"speedup={speedup:.2f}x;identical={same};"
+             f"verified_lbs={len(vrep['lbs'])};"
+             f"equivalent={vrep['equivalent']};serve_parity={serve_parity};"
+             f"gate={rec['pass_gate']}")
+    return rec
+
+
+def main():
+    with Timer() as t:
+        rec = run()
+    emit("repack_delta", t.us,
+         f"speedup={rec['speedup']:.2f}x;gate={rec['pass_gate']}")
+    return rec
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--smoke" in sys.argv[1:]:
+        rec = run(smoke=True)
+        sys.exit(0 if rec["pass_gate"] else 1)
+    main()

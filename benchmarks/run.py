@@ -18,6 +18,10 @@ Prints ``name,us_per_call,derived`` CSV lines.  Sections:
   serve — async batched flow serving: p50/p99 latency + throughput at
           1/8/32 concurrent clients, gated on serial bit-identity and
           coalesced warm throughput >= 2x the serial min-of-N baseline
+  repack — incremental repack: a single-LUT edit on conv2d-fu served
+          via dirty-set re-cluster + IR patch, gated on pack
+          byte-identity, per-cluster equivalence of every touched LB,
+          served-record parity, and a >= 2x delta-vs-full speedup
   kernels — Pallas kernel microbenchmarks (interpret mode on CPU)
   roofline — reads dry-run artifacts if present (see launch/dryrun.py)
 
@@ -41,7 +45,14 @@ sweep bit-identical to the placed oracle + >= 2x placement reuse), a
 equivalence, dense-vs-search cost ratio >= 1), and a flow-serving smoke
 (8 concurrent clients over 2 circuits x 2 archs, every served record
 bit-identical to serial ``pack_and_analyze``, coalesced warm throughput
->= the serial baseline), and exits non-zero on any failure.
+>= the serial baseline), and a repack-delta smoke (a single-LUT edit on
+conv2d-fu served via the dirty-set path: pack byte-identical to a fresh
+``pack()``, every touched LB proven equivalent, served record
+bit-identical to ``pack_and_analyze``), and exits non-zero on any
+failure.  The run ends with the cache-registry table — per-cache
+size/cap, hits, misses, evictions, and the derived hit rate from
+``plan.cache_stats()`` — so a smoke log always shows where the run's
+reuse actually came from.
 """
 from __future__ import annotations
 
@@ -60,6 +71,7 @@ SECTIONS = [
     ("place", "place_sweep"),
     ("search", "search_frontier"),
     ("serve", "serve_latency"),
+    ("repack", "repack_delta"),
     ("kernels", "kernels"),
     ("roofline", "roofline"),
 ]
@@ -118,7 +130,9 @@ def smoke() -> int:
     placement reuse >= 2x vs place-per-point) + the 2-rung search smoke
     (winner oracle parity + equivalence, dense-vs-search ratio >= 1) +
     the flow-serving smoke (8 concurrent clients, 2 circuits x 2 archs;
-    serial bit-identity + coalesced >= serial throughput)."""
+    serial bit-identity + coalesced >= serial throughput) + the
+    repack-delta smoke (single-LUT edit served via the dirty-set path,
+    parity- and equivalence-gated)."""
     import os
     import subprocess
 
@@ -183,16 +197,50 @@ def smoke() -> int:
         print(f"smoke_serve,,failed({type(e).__name__}: {e})",
               file=sys.stderr)
         serve_ok = False
+    print("== smoke: repack-delta gate (single-LUT edit, dirty-set path) ==",
+          flush=True)
+    try:
+        from .repack_delta import run as repack_run
+
+        rrec = repack_run(smoke=True)
+        repack_ok = rrec["pass_gate"]
+    except Exception as e:  # noqa: BLE001
+        print(f"smoke_repack,,failed({type(e).__name__}: {e})",
+              file=sys.stderr)
+        repack_ok = False
+    _print_cache_table()
     ok = (tests.returncode == 0 and sweep_ok and ir_ok and place_ok
-          and search_ok and serve_ok)
+          and search_ok and serve_ok and repack_ok)
     print(f"smoke,,{'ok' if ok else 'failed'}"
           f"(tests={'ok' if tests.returncode == 0 else 'fail'};"
           f"sweep={'ok' if sweep_ok else 'fail'};"
           f"ir_parity={'ok' if ir_ok else 'fail'};"
           f"place={'ok' if place_ok else 'fail'};"
           f"search={'ok' if search_ok else 'fail'};"
-          f"serve={'ok' if serve_ok else 'fail'})")
+          f"serve={'ok' if serve_ok else 'fail'};"
+          f"repack={'ok' if repack_ok else 'fail'})")
     return 0 if ok else 1
+
+
+def _print_cache_table() -> None:
+    """The cache-registry table: every registered cache's occupancy and
+    hit/miss/eviction counters with the derived hit rate — the smoke
+    run's reuse ledger (counters survive ``clear_caches``, so this is
+    cumulative over every gate above)."""
+    try:
+        from repro.core.plan import cache_stats
+    except ImportError:
+        return
+    stats = cache_stats()
+    if not stats:
+        return
+    print("== caches ==", flush=True)
+    print(f"{'cache':<20} {'size/cap':>9} {'hits':>7} {'misses':>7} "
+          f"{'evict':>6} {'hit_rate':>8}")
+    for name in sorted(stats):
+        s = stats[name]
+        print(f"{name:<20} {s['size']:>4}/{s['cap']:<4} {s['hits']:>7} "
+              f"{s['misses']:>7} {s['evictions']:>6} {s['hit_rate']:>8.3f}")
 
 
 def main() -> int:

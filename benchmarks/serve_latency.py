@@ -33,12 +33,29 @@ Gates (``pass_gate``):
 The server runs with ``memoize=False``: timing records recompute every
 batch, so the recorded speedup is coalescing + pack/program reuse —
 not a result-memo dictionary lookup.
+
+Two further scenarios ride the same driver:
+
+* **edit stream** — one tenant serves a base circuit, then a stream of
+  single-LUT edited variants of it with ``base_digest`` set, exercising
+  the structural-delta path end to end (dirty-set repack + dirty-column
+  IR patch + scoped per-cluster verify).  Per-edit latency, delta mode,
+  and the frozen/moved/re-clustered attribution are recorded; the gate
+  requires every edited record bit-identical to ``pack_and_analyze``
+  and at least one edit actually served incrementally.
+* **compile counts** — :func:`repro.core.timing_vec.read_compile_counts`
+  is snapshotted around every pass; the recorded deltas show the
+  shape-padded timing programs (``pad_timing_shapes``) re-using jit
+  executables across batch compositions instead of recompiling per
+  program (``jit_reused`` grows while ``jit_built`` stays flat once
+  warm).
 """
 from __future__ import annotations
 
 import asyncio
 import json
 import os
+import random
 import time
 
 import numpy as np
@@ -120,6 +137,75 @@ def _phase_record(wall: float, latencies, stats, n_requests: int) -> dict:
     }
 
 
+def _edit_stream(base_net, n_edits: int, seed: int):
+    """``n_edits`` single-LUT variants of ``base_net`` — mostly fanin
+    rewires (structural, exercise the dirty-set repack) with every third
+    a truth-table edit (pack-irrelevant, exercises the tt-only delta)."""
+    from repro.core.edits import (clone_netlist, edit_lut_tt,
+                                  edit_rewire_fanin, safe_rewire_sources)
+
+    rng = random.Random(seed + 1)
+    edits = []
+    while len(edits) < n_edits:
+        li = rng.randrange(base_net.n_luts)
+        new_net = clone_netlist(base_net)
+        if len(edits) % 3 == 2:
+            tt = rng.getrandbits(1 << len(base_net.lut_inputs[li]))
+            if tt == base_net.lut_tt[li]:
+                continue
+            edit_lut_tt(new_net, li, tt)
+            kind = "lut_tt"
+        else:
+            srcs = safe_rewire_sources(base_net, li)
+            if not srcs:
+                continue
+            src = rng.choice(srcs)
+            pin = rng.randrange(len(base_net.lut_inputs[li]))
+            if base_net.lut_inputs[li][pin] == src:
+                continue
+            edit_rewire_fanin(new_net, li, pin, src)
+            kind = "rewire_fanin"
+        edits.append((new_net, kind))
+    return edits
+
+
+def _run_edit_stream(base_net, arch: str, n_edits: int, seed: int,
+                     server_kwargs: dict):
+    """Serve the base, then its edit stream with ``base_digest`` set.
+    Returns ``(records, stats)``; each record carries the edit's
+    latency, delta attribution, and parity vs ``pack_and_analyze``."""
+    edits = _edit_stream(base_net, n_edits, seed)
+
+    async def _main():
+        server = FlowServer(**server_kwargs)
+        base = await server.submit(FlowRequest(
+            base_net, arch, analyses=ANALYSES, seed=seed))
+        recs = []
+        for new_net, kind in edits:
+            r = await server.submit(FlowRequest(
+                new_net, arch, analyses=ANALYSES, seed=seed,
+                base_digest=base.digest))
+            ref = pack_and_analyze(new_net, arch, seeds=(seed,))
+            d = r.delta or {}
+            recs.append({
+                "kind": kind,
+                "latency_ms": r.walls["total_s"] * 1e3,
+                "delta_mode": d.get("mode"),
+                "repack_mode": (d.get("repack") or {}).get("mode"),
+                "n_frozen": d.get("n_frozen"),
+                "n_moved": d.get("n_moved"),
+                "n_reclustered": d.get("n_reclustered"),
+                "verify_method": (d.get("verify") or {}).get("method"),
+                "verify_ok": (d.get("verify") or {}).get("equivalent"),
+                "parity": all(r.record[k] == ref[k] for k in _METRIC_KEYS),
+            })
+        stats = dict(server.stats)
+        await server.aclose()
+        return recs, stats
+
+    return asyncio.run(_main())
+
+
 def _check_parity(results, pool, n_requests: int, seed: int,
                   refs: dict) -> bool:
     """Every served record bit-identical to its single-request
@@ -160,22 +246,50 @@ def run(smoke: bool = False, verbose: bool = True, seed: int = 0,
     t_serial, _ = min_of_n(serial_pass, n=warm_n)
     serial_rps = n_requests / max(t_serial, 1e-9)
 
+    from repro.core.timing_vec import read_compile_counts
+
+    def _cc_delta(before: dict) -> dict:
+        after = read_compile_counts()
+        return {k: after[k] - before[k] for k in after}
+
     refs: dict = {}
     parity_ok = True
     clients: dict[str, dict] = {}
+    compile_counts: dict[str, dict] = {}
     for n_cl in client_counts:
         plan.clear_caches()
+        cc0 = read_compile_counts()
         wall, lats, results, stats = _run_pass(
             pool, n_cl, n_requests, seed, server_kwargs)
         cold = _phase_record(wall, lats, stats, n_requests)
+        compile_counts[f"clients{n_cl}/cold"] = _cc_delta(cc0)
         parity_ok &= _check_parity(results, pool, n_requests, seed, refs)
+        cc0 = read_compile_counts()
         (wall, lats, results, stats) = min_of_n(
             lambda n=n_cl: _run_pass(pool, n, n_requests, seed,
                                      server_kwargs),
             n=warm_n, sample=lambda r, e: r[0])[1]
         warm = _phase_record(wall, lats, stats, n_requests)
+        compile_counts[f"clients{n_cl}/warm"] = _cc_delta(cc0)
         parity_ok &= _check_parity(results, pool, n_requests, seed, refs)
         clients[str(n_cl)] = {"cold": cold, "warm": warm}
+
+    # -- edit stream: the structural-delta path under serving ------------
+    from repro.core.circuits import kratos_gemm
+
+    edit_net = kratos_gemm(m=5, n=5, width=5, sparsity=0.5) if smoke \
+        else kratos_gemm(m=6, n=6, width=6, sparsity=0.5)
+    n_edits = 3 if smoke else 6
+    plan.clear_caches()
+    cc0 = read_compile_counts()
+    edit_recs, edit_stats = _run_edit_stream(
+        edit_net, "dd5", n_edits, seed, server_kwargs)
+    compile_counts["edit_stream"] = _cc_delta(cc0)
+    edits_parity = all(r["parity"] for r in edit_recs)
+    n_incremental = sum(r["repack_mode"] == "incremental"
+                        for r in edit_recs)
+    edits_verified = all(r["verify_ok"] is not False for r in edit_recs)
+    edits_ok = edits_parity and edits_verified and n_incremental >= 1
 
     top = str(max(client_counts))
     speedup = clients[top]["warm"]["throughput_rps"] / serial_rps
@@ -196,11 +310,26 @@ def run(smoke: bool = False, verbose: bool = True, seed: int = 0,
         "serial": {"t_best_s": t_serial, "throughput_rps": serial_rps,
                    "n_samples": warm_n},
         "clients": clients,
+        "edit_stream": {
+            "circuit": edit_net.name,
+            "arch": "dd5",
+            "n_edits": n_edits,
+            "edits": edit_recs,
+            "n_incremental": n_incremental,
+            "n_delta_incremental": edit_stats["n_delta_incremental"],
+            "n_delta_fallback": edit_stats["n_delta_fallback"],
+            "n_verify_scoped": edit_stats["n_verify_scoped"],
+            "n_verify_full": edit_stats["n_verify_full"],
+            "parity_ok": bool(edits_parity),
+            "verified_ok": bool(edits_verified),
+        },
+        "compile_counts": compile_counts,
         "cache_stats": {k: v for k, v in plan.cache_stats().items()
                         if k.startswith("serve") or k == "pack_prefix"},
         "parity_ok": bool(parity_ok),
         "speedup_warm_vs_serial": speedup,
-        "pass_gate": bool(parity_ok) and speedup >= need,
+        "pass_gate": (bool(parity_ok) and speedup >= need
+                      and bool(edits_ok)),
     }
     if write_json and not smoke:
         os.makedirs(OUT, exist_ok=True)
@@ -217,6 +346,17 @@ def run(smoke: bool = False, verbose: bool = True, seed: int = 0,
                      f"p50={p['p50_ms']:.2f}ms;p99={p['p99_ms']:.2f}ms;"
                      f"batches={p['n_batches']};"
                      f"coalesced={p['n_coalesced']}")
+        for i, r in enumerate(edit_recs):
+            emit(f"serve/edit{i}", r["latency_ms"] * 1e3,
+                 f"kind={r['kind']};mode={r['delta_mode']};"
+                 f"repack={r['repack_mode']};frozen={r['n_frozen']};"
+                 f"moved={r['n_moved']};recl={r['n_reclustered']};"
+                 f"verify={r['verify_method']};parity={r['parity']}")
+        cw = compile_counts.get(f"clients{top}/warm", {})
+        emit("serve/compile_counts", 0,
+             f"warm_built={cw.get('jit_built')};"
+             f"warm_reused={cw.get('jit_reused')};"
+             f"edits_ok={edits_ok}")
         emit("serve/gate", 0,
              f"speedup_warm_vs_serial={speedup:.2f}x;"
              f"parity={parity_ok};gate={rec['pass_gate']}")

@@ -8,7 +8,12 @@
 # oracle parity + equivalence, dense-vs-search cost ratio >= 1), + the
 # flow-serving smoke (8 concurrent clients over 2 circuits x 2 archs,
 # every served record bit-identical to serial pack_and_analyze and
-# coalesced warm throughput >= the serial min-of-N baseline).
+# coalesced warm throughput >= the serial min-of-N baseline), + the
+# repack-delta smoke (a single-LUT edit on conv2d-fu served via the
+# dirty-set incremental path: pack byte-identical to a fresh pack(),
+# every touched LB proven equivalent, served record bit-identical to
+# pack_and_analyze, delta wall >= 2x faster than full re-cluster).
+# Ends with the cache-registry table (per-cache hits/misses/hit_rate).
 # Equivalent to `python -m benchmarks.run --smoke`; run the full tier-1
 # line (`python -m pytest -x -q`) before shipping.
 set -e

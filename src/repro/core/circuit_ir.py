@@ -125,10 +125,18 @@ _CLS_ABSORBED = edge_class(ROUTE_NULL, PIN_NULL, PATH_AH)
 #: functional IRs per netlist content digest — the single levelization
 _IR_CACHE = _planner.register_cache("netlist_ir", cap=256)
 
+#: packed IRs produced by :func:`apply_pack_delta`, keyed by
+#: ``(base_digest, new_digest, structural_key)``.  Invalidation rule:
+#: both digests are *content* digests, so an entry can never go stale —
+#: a different edit or circuit is a different key — and the cache is
+#: eviction-only (LRU) plus the registry-wide ``clear_caches()``.
+_PACK_DELTA_CACHE = _planner.register_cache("pack_delta_ir", cap=128)
+
 #: lowering-stage counters (see module docstring); tests assert the
 #: one-lowering-per-(circuit, structural class) property against these
-LOWER_COUNTS = {"functional": 0, "placement_full": 0,
-                "placement_incremental": 0}
+LOWER_COUNTS = {"functional": 0, "functional_patch": 0,
+                "placement_full": 0, "placement_incremental": 0,
+                "placement_delta": 0}
 
 
 def reset_lower_counts() -> None:
@@ -415,6 +423,170 @@ def _lower_functional(net: Netlist, digest: str) -> CircuitIR:
         n_alms=0, n_lbs=0, n_luts=net.n_luts, n_adders=net.n_adders,
         concurrent_luts=0,
     )
+
+
+# ---------------------------------------------------------------------------
+# functional dirty-row patch (per edited-netlist content digest)
+# ---------------------------------------------------------------------------
+
+
+def patch_functional_ir(base: CircuitIR, new_net: Netlist,
+                        edited_luts, tt_luts,
+                        digest: str | None = None) -> CircuitIR | None:
+    """Patch a functional :class:`CircuitIR` for an index-stable LUT
+    edit instead of re-levelizing the whole netlist.
+
+    ``base`` is the functional IR of the *base* netlist; ``edited_luts``
+    are the LUT indices whose fanin tuples changed and ``tt_luts`` those
+    whose truth tables changed (from
+    :func:`repro.core.repack.netlist_structural_diff` — the caller has
+    already proven the edit index-stable).  Only the touched rows are
+    rewritten: the edited LUTs' ``ins``/``tt``/``ndc`` entries inside
+    their level tables and their output signals' fanin-CSR rows.
+
+    **Levels-stable gate**: the patch requires every edited LUT's
+    topological level to be unchanged under its new fanins (level =
+    ``max(input levels) + 1``).  An unchanged output level means no
+    downstream level can move either, so the level tables keep exactly
+    their base rows.  Returns ``None`` when the gate fails and the
+    caller must run the full :func:`lower_netlist_ir`.
+
+    Within-level row *order* is inherited from the base IR (fresh
+    lowering orders rows by Kahn-queue pop order, which an edit can
+    permute); every consumer — the evaluator, the vectorized timing
+    program, the equivalence walks — reduces per signal, so results are
+    bit-identical regardless of row order within a level.
+    """
+    import dataclasses
+
+    if base.arch_name is not None:
+        raise ValueError("patch_functional_ir needs a functional IR base")
+    sig_level = base.sig_level
+    edited_luts = sorted(set(edited_luts))
+    for li in edited_luts:
+        out = new_net.lut_out[li]
+        lv = 0
+        for s in new_net.lut_inputs[li]:
+            lv = max(lv, int(sig_level[s]))
+        if lv + 1 != int(sig_level[out]):
+            return None
+    LOWER_COUNTS["functional_patch"] += 1
+
+    # locate each touched LUT's (level-table, row) slot by output signal
+    def find_row(out_sig: int) -> tuple[int, int]:
+        for t, ll in enumerate(base.lut_levels):
+            r = np.nonzero(ll.out == out_sig)[0]
+            if r.size:
+                return t, int(r[0])
+        raise ValueError(f"signal {out_sig} has no LUT row")
+
+    touched: dict[int, dict[int, int]] = {}   # table idx -> {row: li}
+    for li in set(edited_luts) | set(tt_luts):
+        t, r = find_row(new_net.lut_out[li])
+        touched.setdefault(t, {})[r] = li
+
+    lut_levels = list(base.lut_levels)
+    for t, rows in touched.items():
+        ll = lut_levels[t]
+        ins = ll.ins.copy()
+        tt_lo = ll.tt_lo.copy()
+        tt_hi = ll.tt_hi.copy()
+        ndc = ll.ndc.copy()
+        from .netlist import tt_words64 as _ttw
+        for r, li in rows.items():
+            sig_ins = new_net.lut_inputs[li]
+            k = len(sig_ins)
+            ins[r] = 0
+            ins[r, :k] = sig_ins
+            lo, hi = _ttw(new_net.lut_tt[li], k)
+            tt_lo[r] = lo
+            tt_hi[r] = hi
+            ndc[r] = (NDC_LUT4 if k <= 4 else
+                      NDC_LUT5 if k == 5 else NDC_LUT6)
+        lut_levels[t] = dataclasses.replace(
+            ll, ins=ins, tt_lo=tt_lo, tt_hi=tt_hi, ndc=ndc)
+
+    # fanin-CSR rows of the edited outputs (per-occurrence, consts
+    # dropped — mirrors _lower_functional's append rule)
+    ptr = base.fanin_ptr
+    new_rows = {}
+    for li in edited_luts:
+        out = new_net.lut_out[li]
+        new_rows[out] = [q for q in new_net.lut_inputs[li] if q > CONST1]
+    same_len = all(ptr[s + 1] - ptr[s] == len(row)
+                   for s, row in new_rows.items())
+    if same_len:
+        fanin_ptr = ptr
+        fanin_sig = base.fanin_sig.copy()
+        for s, row in new_rows.items():
+            fanin_sig[ptr[s]:ptr[s + 1]] = row
+    else:
+        S = base.n_signals
+        lens = np.diff(ptr).astype(np.int64)
+        for s, row in new_rows.items():
+            lens[s] = len(row)
+        fanin_ptr = np.zeros(S + 1, ptr.dtype)
+        np.cumsum(lens, out=fanin_ptr[1:])
+        segs: list[np.ndarray] = []
+        prev = 0
+        for s in sorted(new_rows):
+            if prev < s:
+                segs.append(base.fanin_sig[ptr[prev]:ptr[s]])
+            segs.append(np.asarray(new_rows[s], base.fanin_sig.dtype))
+            prev = s + 1
+        if prev < S:
+            segs.append(base.fanin_sig[ptr[prev]:ptr[S]])
+        fanin_sig = np.concatenate(segs) if segs \
+            else base.fanin_sig[:0]
+
+    return dataclasses.replace(
+        base,
+        name=new_net.name,
+        net_digest=(digest if digest is not None
+                    else new_net.content_digest()),
+        fanin_ptr=fanin_ptr, fanin_sig=fanin_sig,
+        fanin_cls=np.zeros_like(fanin_sig),
+        fanin_hop=np.zeros_like(fanin_sig),
+        lut_levels=tuple(lut_levels))
+
+
+def apply_pack_delta(packed: "PackedCircuit", base_net: Netlist,
+                     edited_luts=(), tt_luts=()) -> CircuitIR:
+    """Dirty-column lowering of an edited netlist's pack: patch the
+    *base* netlist's cached functional IR row-wise
+    (:func:`patch_functional_ir`) and restamp the placement columns with
+    the same vectorized :func:`_patch_placement` pass every other
+    lowering path runs — instead of re-levelizing from scratch.
+
+    The patched functional IR is inserted into the ``netlist_ir``
+    registry under the edited netlist's content digest, so any later
+    fresh lowering of the same edited netlist (``pack_and_analyze``,
+    sweeps) hits it identically; the packed result lands in the
+    ``pack_delta_ir`` cache keyed ``(base_digest, new_digest,
+    structural_key)`` (content-digest keys — entries cannot go stale;
+    see the cache comment).  Falls back to the full functional lowering
+    when the levels-stable gate fails, so it is total: every call
+    returns the same arrays ``lower_pack_ir`` would produce up to
+    within-level row order."""
+    new_digest = packed.net.content_digest()
+    base_digest = base_net.content_digest()
+    key = (base_digest, new_digest, packed.arch.structural_key())
+    hit = _PACK_DELTA_CACHE.get(key)
+    if hit is not None:
+        return hit
+    func = _IR_CACHE.get(new_digest)
+    if func is None:
+        base_func = lower_netlist_ir(base_net, base_digest)
+        func = patch_functional_ir(base_func, packed.net, edited_luts,
+                                   tt_luts, new_digest)
+        if func is None:
+            func = lower_netlist_ir(packed.net, new_digest)
+        else:
+            _IR_CACHE.put(new_digest, func)
+    LOWER_COUNTS["placement_delta"] += 1
+    ir = _patch_placement(func, packed)
+    _PACK_DELTA_CACHE.put(key, ir)
+    return ir
 
 
 # ---------------------------------------------------------------------------

@@ -261,19 +261,18 @@ def _compose_half(net: Netlist, a: int, b: int, cin, outer_tt: int):
     return _canon(ins, tt)
 
 
-def symbolic_equivalence_report(src: Netlist,
-                                re_elab: ReElaboration) -> dict:
-    """Per-ALM symbolic equivalence: truth tables, not test vectors.
+def _prove_nodes(src: Netlist, re_elab: ReElaboration,
+                 lut_scope=None, chain_scope=None):
+    """The symbolic per-node proof loop, optionally scoped.
 
-    Walks the source in topo order.  LUT nodes compare their canonical
-    cone (inputs mapped into physical ids) against the physical driver's
-    cone — this is where re-composed absorption masks are verified bit-for-
-    bit.  Chain bits compose both sides' operand masks into the sum
-    (``XOR3``) and carry (``MAJ3``) functions with ``tt_compose``; a
-    merged support wider than 6 inputs is recorded in ``fallback`` for
-    lane simulation instead.  ``equivalent`` is True only when every cone
-    was proven and none fell back; a symbolic mismatch names the first
-    corrupted source node in ``mismatches``.
+    ``lut_scope`` / ``chain_scope`` restrict the walk to those LUT
+    indices / chain indices (``None`` = every node); nodes outside the
+    scope are not visited at all.  This is the shared core of the
+    full-circuit :func:`symbolic_equivalence_report` and the
+    dirty-cluster :func:`verify_clusters` — one proof engine, two
+    scopes, so a scoped verdict is by construction the full verdict
+    restricted to the scope.  Returns ``(proven_luts, proven_bits,
+    fallback, mismatches)``.
     """
     phys, sig_map = re_elab.phys, re_elab.sig_map
     proven_luts = proven_bits = 0
@@ -297,6 +296,8 @@ def symbolic_equivalence_report(src: Netlist,
     for nd in src.topo_order():
         kind, idx = nd
         if kind == "lut":
+            if lut_scope is not None and idx not in lut_scope:
+                continue
             out = src.lut_out[idx]
             p_out = sig_map.get(out)
             want = map_support((src.lut_inputs[idx], src.lut_tt[idx]))
@@ -315,6 +316,8 @@ def symbolic_equivalence_report(src: Netlist,
                 mismatches.append({"node": nd, "signal": out,
                                    "phys_signal": p_out, "want": want})
         else:
+            if chain_scope is not None and idx not in chain_scope:
+                continue
             ch = src.chains[idx]
             p_first = sig_map.get(ch.sums[0])
             drv = phys.driver.get(p_first) if p_first is not None else None
@@ -371,9 +374,33 @@ def symbolic_equivalence_report(src: Netlist,
                     else:
                         fallback.append((kind, idx, bi))
 
-    po_ok = all(
-        [sig_map.get(s) for s in bus] == phys.pos.get(name)
+    return proven_luts, proven_bits, fallback, mismatches
+
+
+def _po_ok(src: Netlist, re_elab: ReElaboration) -> bool:
+    return all(
+        [re_elab.sig_map.get(s) for s in bus] == re_elab.phys.pos.get(name)
         for name, bus in src.pos.items())
+
+
+def symbolic_equivalence_report(src: Netlist,
+                                re_elab: ReElaboration) -> dict:
+    """Per-ALM symbolic equivalence: truth tables, not test vectors.
+
+    Walks the source in topo order.  LUT nodes compare their canonical
+    cone (inputs mapped into physical ids) against the physical driver's
+    cone — this is where re-composed absorption masks are verified bit-for-
+    bit.  Chain bits compose both sides' operand masks into the sum
+    (``XOR3``) and carry (``MAJ3``) functions with ``tt_compose``; a
+    merged support wider than 6 inputs is recorded in ``fallback`` for
+    lane simulation instead.  ``equivalent`` is True only when every cone
+    was proven and none fell back; a symbolic mismatch names the first
+    corrupted source node in ``mismatches``.
+    """
+    proven_luts, proven_bits, fallback, mismatches = _prove_nodes(
+        src, re_elab)
+    po_ok = _po_ok(src, re_elab)
+    sig_map = re_elab.sig_map
     return {
         "name": src.name,
         "method": "symbolic",
@@ -385,6 +412,54 @@ def symbolic_equivalence_report(src: Netlist,
         "mismatches": mismatches,
         "po_ok": po_ok,
         "complete": not fallback and po_ok,
+        "equivalent": po_ok and not fallback and not mismatches,
+    }
+
+
+def verify_clusters(packed: PackedCircuit, lb_indices,
+                    re_elab: ReElaboration | None = None) -> dict:
+    """Verify-after-repack, scoped to the dirty clusters.
+
+    Proves exactly the nodes whose ALMs live in ``lb_indices`` — hosted
+    / 6-LUT / absorbed LUT cones and the chain bits sited there —
+    through the same symbolic engine as the full-circuit report
+    (:func:`_prove_nodes`), so the scoped verdict equals the full
+    verdict restricted to the scope.  Re-elaboration itself is global
+    (cone supports cross cluster boundaries and the signal map must be
+    complete) but is linear and shared: pass ``re_elab`` to amortize it
+    across calls, or let the function build it.
+
+    Returns a report shaped like :func:`symbolic_equivalence_report`
+    with ``method="symbolic_scoped"`` plus the scope description
+    (``lbs``, ``scoped_luts``, ``scoped_chains``).  ``equivalent`` means
+    every scoped cone proved with no fallback and the primary outputs
+    map cleanly; an incremental repack whose dirty set misses a cluster
+    this report would have flagged is exactly the bug class the
+    property-fuzz suite hunts (scoped == full restricted to scope).
+    """
+    src = packed.net
+    if re_elab is None:
+        re_elab = reelaborate(packed)
+    lbs = set(int(x) for x in lb_indices)
+    alm_scope = {ai for ai, lb in enumerate(packed.alm_lb) if lb in lbs}
+    lut_scope = {li for li, ai in packed.lut_site.items()
+                 if ai in alm_scope}
+    chain_scope = {ci for (ci, bi), ai in packed.chain_site.items()
+                   if ai in alm_scope}
+    proven_luts, proven_bits, fallback, mismatches = _prove_nodes(
+        src, re_elab, lut_scope=lut_scope, chain_scope=chain_scope)
+    po_ok = _po_ok(src, re_elab)
+    return {
+        "name": src.name,
+        "method": "symbolic_scoped",
+        "lbs": sorted(lbs),
+        "scoped_luts": len(lut_scope),
+        "scoped_chains": len(chain_scope),
+        "proven_luts": proven_luts,
+        "proven_chain_bits": proven_bits,
+        "fallback": fallback,
+        "mismatches": mismatches,
+        "po_ok": po_ok,
         "equivalent": po_ok and not fallback and not mismatches,
     }
 

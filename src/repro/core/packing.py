@@ -258,6 +258,14 @@ def _fanout_counts(net: Netlist) -> dict[int, int]:
 
 def _pair_luts(net: Netlist, free_luts: list[int], rng):
     """Pair LUTs into ALM-sized groups by shared-input affinity."""
+    # per-LUT input sets/arities hoisted out of the greedy loops: can_pair
+    # and the affinity score used to rebuild both sets on every probe,
+    # which dominated the pass on large circuits.  Decisions (and
+    # therefore the output) are unchanged — only the set construction
+    # moved.
+    in_set: dict[int, frozenset] = {
+        li: frozenset(net.lut_inputs[li]) for li in free_luts}
+    arity: dict[int, int] = {li: len(in_set[li]) for li in free_luts}
     by_sig: dict[int, list[int]] = defaultdict(list)
     for li in free_luts:
         for s in net.lut_inputs[li]:
@@ -268,14 +276,14 @@ def _pair_luts(net: Netlist, free_luts: list[int], rng):
     singles5: list[int] = []
 
     def can_pair(a: int, b: int) -> bool:
-        ia, ib = set(net.lut_inputs[a]), set(net.lut_inputs[b])
-        ka, kb = len(ia), len(ib)
+        ia, ib = in_set[a], in_set[b]
+        ka, kb = arity[a], arity[b]
         if ka > 5 or kb > 5:
             return False
-        union = len(ia | ib)
-        if union > 8:
+        shared = len(ia & ib)
+        if ka + kb - shared > 8:
             return False
-        if ka == 5 and kb == 5 and len(ia & ib) < 2:
+        if ka == 5 and kb == 5 and shared < 2:
             return False
         return True
 
@@ -292,13 +300,14 @@ def _pair_luts(net: Netlist, free_luts: list[int], rng):
         best = None
         best_score = -1
         seen = set()
+        ia = in_set[li]
         for s in net.lut_inputs[li]:
             for lj in by_sig[s]:
                 if lj == li or lj not in unpaired or lj in seen:
                     continue
                 seen.add(lj)
                 if can_pair(li, lj):
-                    score = len(set(net.lut_inputs[li]) & set(net.lut_inputs[lj]))
+                    score = len(ia & in_set[lj])
                     if score > best_score:
                         best_score, best = score, lj
         if best is None:
@@ -422,6 +431,16 @@ class ClusterPlan:
     skel_ah_len: np.ndarray | None = None
     skel_ah_pad: np.ndarray | None = None
 
+    # --- incremental-repack ownership columns (delta plans only) ---------
+    #: per atom, the LB that owned it in the *base* pack the delta plan
+    #: was derived from (-1 for unknown/new atoms), and per atom the LBs
+    #: the base greedy consulted while placing it (its decision
+    #: dependencies).  Filled by ``repack.pack_prefix_delta`` from the
+    #: base decision log; ``None`` on plans built fresh — fresh plans are
+    #: shared across archs and ownership is arch-specific.
+    atom_owner_lb: np.ndarray | None = None
+    atom_dep_lbs: list | None = None
+
 
 def _fill_host_cols(ai, alm, bit_live, ah_set, col_fh, col_need, col_moved,
                     col_ah_len, col_ah_pad) -> None:
@@ -459,6 +478,27 @@ def _fill_host_cols(ai, alm, bit_live, ah_set, col_fh, col_need, col_moved,
         col_ah_pad[ai, : len(srt)] = srt
 
 
+def _atom_sigs_of(net, atom) -> set[int]:
+    """Live signal set of one atom — the connectivity currency of the
+    plan (frontier counts, probe targets).  Insertion order is part of
+    the plan contract: neighbor rows inherit it, so the delta-prefix
+    path must build rows with exactly this sequence."""
+    kind = atom[0]
+    sigs: set[int] = set()
+    if kind == "run":
+        ci = atom[1]
+        ch = net.chains[ci]
+        for s in list(ch.a) + list(ch.b) + list(ch.sums):
+            if s > CONST1:
+                sigs.add(s)
+    else:
+        for li in atom[1:]:
+            if isinstance(li, int):
+                sigs.update(s for s in net.lut_inputs[li] if s > CONST1)
+                sigs.add(net.lut_out[li])
+    return sigs
+
+
 def _build_cluster_plan(net, alms, chain_alm_runs, chain_site, pairs,
                         singles6, singles5, rng) -> ClusterPlan:
     """Build the :class:`ClusterPlan` — the atom list, connectivity
@@ -477,23 +517,7 @@ def _build_cluster_plan(net, alms, chain_alm_runs, chain_site, pairs,
     for li in singles5:
         atoms.append(("single5", li))
 
-    def compute_atom_sigs(atom) -> set[int]:
-        kind = atom[0]
-        sigs: set[int] = set()
-        if kind == "run":
-            ci = atom[1]
-            ch = net.chains[ci]
-            for s in list(ch.a) + list(ch.b) + list(ch.sums):
-                if s > CONST1:
-                    sigs.add(s)
-        else:
-            for li in atom[1:]:
-                if isinstance(li, int):
-                    sigs.update(s for s in net.lut_inputs[li] if s > CONST1)
-                    sigs.add(net.lut_out[li])
-        return sigs
-
-    atom_sigs = [compute_atom_sigs(a) for a in atoms]
+    atom_sigs = [_atom_sigs_of(net, a) for a in atoms]
 
     # connectivity index
     sig2atoms: dict[int, list[int]] = defaultdict(list)
@@ -651,7 +675,7 @@ def _build_cluster_plan(net, alms, chain_alm_runs, chain_site, pairs,
 
 def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
              chain_site, lut_site, allow_unrelated=True,
-             strict_phases=(True, False), pull_runs=True):
+             strict_phases=(True, False), pull_runs=True, replay=None):
     atoms = plan.atoms
     n_atoms = len(atoms)
     vector = VECTOR_CLUSTER and plan.cand_ptr is not None
@@ -817,6 +841,8 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
                    and st.alm_pos[st.hostable[idx]] < pos):
                 idx += 1
             st.hostable.insert(idx, ai)
+            if replay is not None:
+                replay.ev_ins(lb_idx, ai)
 
     def free_halves_of(ai: int) -> list:
         """Hostable halves of an arith ALM (Z-free first) — cached, with
@@ -878,10 +904,14 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
             alm = alms[ai]
             if alm.lut6 is not None:
                 hostable.pop(i)       # 6-LUT span: never hostable again
+                if replay is not None:
+                    replay.ev_pop(lb_idx, ai)
                 continue
             free_halves = free_halves_of(ai)
             if not free_halves:
                 hostable.pop(i)       # filled up; prune (order preserved)
+                if replay is not None:
+                    replay.ev_pop(lb_idx, ai)
                 continue
             i += 1
             if ok_mask is not None and not ok_mask.get(ai, True):
@@ -947,6 +977,8 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
             return True
         if not hostable:
             host_capacity_lbs.discard(lb_idx)
+            if replay is not None:
+                replay.ev_capd(lb_idx)
         return False
 
     def host6_in_arith(li: int, lb_idx: int) -> bool:
@@ -1093,8 +1125,18 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
         """Place atom; returns the (possibly new) current LB index."""
         atom = atoms[aidx]
         kind = atom[0]
+        # The replay log shadows the greedy loop without steering it: in
+        # record mode start_atom opens a step and adv_skips stays None; in
+        # advise mode it returns the base run's consulted-but-rejected LBs
+        # for this atom when the step is provably in sync (same atom order,
+        # no diverged state touched) — those scans are skipped and their
+        # recorded side effects (hostable prunes/reinserts, capacity-set
+        # discards) applied verbatim, so every *executed* scan sees exactly
+        # the state a fresh pack would.
+        adv_skips = replay.start_atom(aidx) if replay is not None else None
         if kind == "run":
             ci = atom[1]
+            tgts: list[int] = []
             for ai in chain_alm_runs[ci]:
                 tgt = lb_idx
                 if tgt is None or not try_fit_alm(ai, tgt):
@@ -1105,8 +1147,11 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
                         pass
                 place_alm(ai, tgt)
                 lb_idx = tgt
+                tgts.append(tgt)
             placed[aidx] = True
             bump_frontier(aidx)
+            if replay is not None:
+                replay.note_atom(aidx, tuple(tgts), lb_idx, len(lbs_state))
             return lb_idx
         # LUT atoms: try concurrent hosting — connectivity-driven first
         # (current LB, then LBs producing this atom's inputs, then LBs
@@ -1153,13 +1198,19 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
         # until a commit ends the placement, so it holds across LBs and
         # strict phases.
         ok_mask = None
-        mask_built = kind == "single6" or not vector
+        mask_built = kind == "single6" or not vector or adv_skips is not None
         for strict in strict_phases:
             seen_lb: set[int] = set()
             for pos, cand in enumerate(cand_lbs):
                 if cand in seen_lb:
                     continue
                 seen_lb.add(cand)
+                if adv_skips is not None and adv_skips.try_skip(
+                        cand, lbs_state, host_capacity_lbs):
+                    # base run consulted this LB here and rejected it; its
+                    # state is untouched by the edit, so the rejection (and
+                    # the scan's pruning side effects) transfer verbatim
+                    continue
                 use_mask = None
                 if pos >= n_conn:
                     if not mask_built:
@@ -1175,6 +1226,8 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
                                 ids, 2 if kind == "pair" else 1,
                                 plan.atom_ah_arr[aidx])
                     use_mask = ok_mask
+                if replay is not None:
+                    replay.open_consult(cand)
                 ok = False
                 if kind == "pair":
                     ok = host_in_arith([atom[1], atom[2]], cand, strict,
@@ -1186,7 +1239,12 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
                 if ok:
                     placed[aidx] = True
                     bump_frontier(aidx)
-                    return lb_idx if lb_idx is not None else cand
+                    ret = lb_idx if lb_idx is not None else cand
+                    if replay is not None:
+                        replay.note_atom(aidx, (cand,), ret, len(lbs_state))
+                    return ret
+                if replay is not None:
+                    replay.close_consult(cand)
         ai = materialize_logic_alm(aidx)
         tgt = lb_idx
         if tgt is None or not try_fit_alm(ai, tgt):
@@ -1201,6 +1259,8 @@ def _cluster(net, arch, alms, chain_alm_runs, plan: ClusterPlan,
         place_alm(ai, tgt)
         placed[aidx] = True
         bump_frontier(aidx)
+        if replay is not None:
+            replay.note_atom(aidx, (tgt,), tgt, len(lbs_state))
         return tgt
 
     cur_lb: int | None = None

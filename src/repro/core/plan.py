@@ -127,8 +127,10 @@ class Cache:
             self.evictions += 1
 
     def stats(self) -> dict:
+        lookups = self.hits + self.misses
         return {"size": len(self._d), "cap": self.cap, "hits": self.hits,
-                "misses": self.misses, "evictions": self.evictions}
+                "misses": self.misses, "evictions": self.evictions,
+                "hit_rate": (self.hits / lookups) if lookups else 0.0}
 
     def reset_stats(self) -> None:
         self.hits = self.misses = self.evictions = 0
@@ -209,8 +211,10 @@ def set_cache_cap(name: str, cap: int) -> Cache:
 
 def cache_stats() -> dict[str, dict]:
     """Per-cache telemetry: ``{name: {size, cap, hits, misses,
-    evictions}}`` — the single surface the flow server's stats endpoint,
-    the warm-path cost model diagnostics and the cache tests all read."""
+    evictions, hit_rate}}`` — the single surface the flow server's stats
+    endpoint, the warm-path cost model diagnostics and the cache tests
+    all read.  ``hit_rate`` is derived (``hits / (hits + misses)``; 0.0
+    before the first lookup)."""
     return {name: c.stats() for name, c in _REGISTRY.items()}
 
 

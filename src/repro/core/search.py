@@ -162,7 +162,7 @@ def search_archs(nets, archs, seed: int = 0, eta: int = 4,
                  allocation: str = "halving", budget: int | None = None,
                  baseline: str | None = None, backend: str = "numpy",
                  max_groups: int = 4, place: bool = False,
-                 packs=None, programs=None) -> SearchResult:
+                 packs=None, programs=None, prefixes=None) -> SearchResult:
     """Pareto-aware successive-halving search over ``archs``.
 
     The rung schedule divides the grid by ``eta`` per rung until
@@ -180,6 +180,13 @@ def search_archs(nets, archs, seed: int = 0, eta: int = 4,
     structural class would otherwise jit its own program; pass ``"jax"``
     to compile per class (worth it only for narrow grids re-run many
     times).
+
+    ``prefixes`` overrides the shared ``pack_prefix`` store the rungs'
+    sweeps read packing prefixes from — the store that also hosts
+    edited-netlist prefixes (:func:`repro.core.sweep.prefix_for_edit`,
+    keyed by ``(pack digest, base digest, seed)``), so a search run over
+    a netlist and its structural edits shares every delta-derived
+    prefix with the serving layer.
     """
     archs = list(archs)
     if not archs:
@@ -224,7 +231,8 @@ def search_archs(nets, archs, seed: int = 0, eta: int = 4,
             subset = subset[:max_circ] if max_circ < len(subset) else subset
         res = sweep_suite(subset, current, seed=seed, backend=backend,
                           max_groups=max_groups, place=place,
-                          packs=packs, programs=programs)
+                          packs=packs, programs=programs,
+                          prefixes=prefixes)
         budget_used += len(subset) * len(current)
         t0 = time.perf_counter()
         subset_names = [nt.name for nt in subset]

@@ -38,11 +38,29 @@ static timing ever reads LUT truth tables, pack results are keyed by
 :meth:`~repro.core.netlist.Netlist.pack_digest`: a truth-table-only edit
 — the shape of an incremental-synthesis constant/weight update — hits
 the base's pack AND timing record outright and re-runs only functional
-eval.  A structural edit re-clusters from the (content-keyed)
-:func:`~repro.core.repack.pack_prefix` ClusterPlan prefix and reports
-per-cluster membership-change attribution
-(:func:`~repro.core.repack.cluster_delta`) in
-:attr:`FlowResult.delta`.
+eval.
+
+A *structural* edit takes the dirty-set path: the server diffs the
+edited netlist against the served base
+(:func:`~repro.core.repack.netlist_structural_diff`), patches the base's
+ClusterPlan prefix instead of rebuilding it
+(:func:`~repro.core.sweep.prefix_for_edit`, hosted in the shared prefix
+store under ``(pack digest, base digest, seed)``), replays the base's
+recorded greedy decisions over everything *outside* the dirty set
+(:func:`~repro.core.repack.repack_delta` — surviving LBs are frozen as
+placed obstacles, only dirty members and divergence-reached LBs re-run
+real scans), patches only the touched rows of the cached CircuitIR
+(:func:`~repro.core.circuit_ir.apply_pack_delta`), and proves the
+touched clusters with a scoped symbolic equivalence pass
+(:func:`~repro.core.equiv.verify_clusters`; the full-circuit proof runs
+only on fallback modes, where the dirty set no longer bounds the
+touched region).  Any eligibility failure (shape change, absorbed-LUT
+edit, absorption/pairing flip, evicted base state, dirty-set growth
+past the divergence bound) falls back to the full path — every mode is
+byte-identical to a fresh ``pack()``.  :attr:`FlowResult.delta` carries
+the per-cluster attribution (:func:`~repro.core.repack.cluster_delta`:
+frozen / moved / re-clustered LB counts) plus the repack-path and
+verify summaries.
 
 Determinism contract
 --------------------
@@ -72,7 +90,9 @@ from . import flow as _flow
 from . import plan as _planner
 from .alm import ARCHS, ArchParams
 from .netlist import Netlist
-from .repack import cluster_delta, pack_prefix, repack
+from .repack import (cluster_delta, netlist_structural_diff, pack_prefix,
+                     repack_delta, repack_with_log)
+from .sweep import prefix_for_edit
 from .timing import record_timing_wall
 from .timing_vec import (build_suite_timing_program, critical_path_numpy,
                          delay_components, metrics_from_cp)
@@ -100,7 +120,17 @@ _DIGESTS = _planner.register_cache("serve_digests", cap=4096)
 
 #: the prefix store shared with :mod:`repro.core.sweep` — delta
 #: requests re-cluster from the same ClusterPlan prefixes sweeps warm.
+#: Edited-netlist prefixes land in the SAME store under the
+#: ``(pack digest, base digest, seed)`` keying of
+#: :func:`repro.core.sweep.prefix_for_edit`.
 _PREFIXES = _planner.register_cache("pack_prefix", cap=64)
+
+#: greedy decision logs per (pack digest, structural key, seed) — what a
+#: later structural edit replays against.  Recorded on every full
+#: re-cluster (``repack_with_log``); delta-produced packs do not get a
+#: log (an advised replay cannot also record), so a chain of edits
+#: re-records at its first full repack.
+_REPACK_LOGS = _planner.register_cache("serve_repack_logs", cap=32)
 
 ANALYSES = ("area", "timing", "eval")
 
@@ -196,6 +226,8 @@ class _Job:
     delta: dict | None = None
     pack_cached: bool = False
     timing_cached: bool = False
+    delta_info: dict | None = None   # repack-path attribution
+    verify: dict | None = None       # scoped/full equivalence summary
 
 
 def _eval_key(req: FlowRequest, digest: str):
@@ -223,7 +255,9 @@ class FlowServer:
                  timing_backend: str = "jax", max_buckets: int = 3,
                  max_groups: int = 4, use_pallas: bool = True,
                  memoize: bool = True, eval_mode: str = "auto",
-                 eval_warm: bool | str = "auto"):
+                 eval_warm: bool | str = "auto",
+                 verify_deltas: bool = True,
+                 pad_timing_shapes: bool = True):
         if timing_backend not in ("jax", "numpy"):
             raise ValueError(f"unknown timing backend {timing_backend!r}")
         self.batch_window_s = batch_window_s
@@ -235,10 +269,19 @@ class FlowServer:
         self.memoize = memoize
         self.eval_mode = eval_mode
         self.eval_warm = eval_warm
+        #: prove every structurally-delta-served pack: per-cluster
+        #: symbolic proof scoped to the touched LBs on the incremental
+        #: path, the full-circuit proof on fallbacks
+        self.verify_deltas = verify_deltas
+        #: quantize batched timing-program shapes to power-of-two
+        #: envelopes so rotating batch compositions share jit compiles
+        self.pad_timing_shapes = pad_timing_shapes
         self.stats = {"n_requests": 0, "n_batches": 0, "n_jobs": 0,
                       "n_coalesced": 0, "n_pack_hits": 0,
                       "n_timing_hits": 0, "n_eval_hits": 0,
-                      "n_delta_requests": 0, "n_delta_pack_reuse": 0}
+                      "n_delta_requests": 0, "n_delta_pack_reuse": 0,
+                      "n_delta_incremental": 0, "n_delta_fallback": 0,
+                      "n_verify_scoped": 0, "n_verify_full": 0}
         self._pending: list[_Pending] = []
         self._seq = itertools.count()
         self._batch_ids = itertools.count()
@@ -325,8 +368,8 @@ class FlowServer:
     def _process_batch(self, batch: list[_Pending]) -> None:
         t0 = time.perf_counter()
         walls = {"coalesce_s": 0.0, "prefix_s": 0.0, "repack_s": 0.0,
-                 "lower_s": 0.0, "build_s": 0.0, "timing_s": 0.0,
-                 "eval_s": 0.0, "total_s": 0.0}
+                 "lower_s": 0.0, "verify_s": 0.0, "build_s": 0.0,
+                 "timing_s": 0.0, "eval_s": 0.0, "total_s": 0.0}
         batch_id = next(self._batch_ids)
 
         jobs = self._coalesce(batch, walls)
@@ -393,8 +436,9 @@ class FlowServer:
 
     def _pack_stage(self, pack_jobs: list[_Job], walls: dict) -> None:
         """Resolve each job's pack: pack-digest cache hit (tt-only delta
-        or repeat), else prefix + re-cluster (byte-identical to
-        ``pack()``)."""
+        or repeat), else the dirty-set structural-delta path when the
+        request names a served base, else prefix + full re-cluster.
+        Every path is byte-identical to ``pack()``."""
         for job in pack_jobs:
             skey = job.arch.structural_key()
             pd = job.net.pack_digest()
@@ -402,6 +446,8 @@ class FlowServer:
             _DIGESTS.put(job.digest, pd)
             pack = _PACKS.get((pd, skey, job.seed))
             job.pack_cached = pack is not None
+            if pack is None and job.base_digest is not None:
+                pack = self._delta_pack(job, skey, walls)
             if pack is None:
                 prefix = _PREFIXES.get((job.digest, job.seed))
                 if prefix is None:
@@ -410,14 +456,102 @@ class FlowServer:
                     _PREFIXES.put((job.digest, job.seed), prefix)
                     walls["prefix_s"] += time.perf_counter() - t1
                 t1 = time.perf_counter()
-                pack = repack(prefix, job.arch)
+                pack, log = repack_with_log(prefix, job.arch)
                 walls["repack_s"] += time.perf_counter() - t1
                 _PACKS.put((pd, skey, job.seed), pack)
-            else:
+                _REPACK_LOGS.put((pd, skey, job.seed), log)
+            elif job.pack_cached:
                 self.stats["n_pack_hits"] += 1
             job.pack = pack
             if job.base_digest is not None:
                 self._attribute_delta(job, skey)
+
+    def _delta_pack(self, job: _Job, skey, walls: dict):
+        """The dirty-set structural-delta path: diff against the served
+        base, patch its prefix (``prefix_for_edit`` — hosted in the
+        shared store keyed by (pack digest, base digest, seed)), replay
+        the base's decision log over the dirty set, patch the cached IR's
+        dirty columns, and prove the touched clusters.  Returns the pack
+        (byte-identical to a fresh ``pack()``) or ``None`` when any
+        eligibility gate fails — the caller then runs the full path, and
+        ``job.delta_info`` says why."""
+        base_pd = _DIGESTS.get(job.base_digest)
+        if base_pd is None:
+            return None
+        hit = _PREFIXES.get((job.base_digest, job.seed))
+        base_prefix = hit
+        base_log = _REPACK_LOGS.get((base_pd, skey, job.seed))
+        if base_prefix is None or base_log is None:
+            job.delta_info = {"mode": "full", "reason": "base_evicted"}
+            return None
+        diff = netlist_structural_diff(base_prefix.net, job.net)
+        if diff is None:
+            job.delta_info = {"mode": "full", "reason": "shape"}
+            return None
+        t1 = time.perf_counter()
+        new_prefix, pinfo = prefix_for_edit(base_prefix, job.net,
+                                            base_log=base_log,
+                                            prefixes=_PREFIXES)
+        walls["prefix_s"] += time.perf_counter() - t1
+        if new_prefix is None:
+            job.delta_info = {"mode": "full",
+                              "reason": pinfo.get("reason", "prefix")}
+            return None
+        t1 = time.perf_counter()
+        pack, rinfo = repack_delta(
+            new_prefix, base_log, job.arch,
+            dirty_atoms=pinfo.get("dirty_atoms", frozenset()))
+        walls["repack_s"] += time.perf_counter() - t1
+        t1 = time.perf_counter()
+        from .circuit_ir import apply_pack_delta
+
+        job.ir = apply_pack_delta(pack, base_prefix.net,
+                                  edited_luts=diff["changed_inputs"],
+                                  tt_luts=diff["changed_tt"])
+        walls["lower_s"] += time.perf_counter() - t1
+        job.delta_info = dict(rinfo, prefix_mode=pinfo.get("mode"),
+                              prefix_store=pinfo.get("store"))
+        self.stats["n_delta_incremental" if rinfo["mode"] == "incremental"
+                   else "n_delta_fallback"] += 1
+        if self.verify_deltas:
+            self._verify_delta(job, pack, diff, rinfo, walls)
+            if job.verify is not None and not job.verify["equivalent"]:
+                # a failed proof means a packer bug, not a delta bug
+                # (every mode is byte-identical by construction) — but
+                # never serve an unproven delta: fall back to the full
+                # path and surface the failure in the attribution
+                job.delta_info = {"mode": "full",
+                                  "reason": "verify_failed"}
+                return None
+        _PACKS.put((job.pack_digest, skey, job.seed), pack)
+        return pack
+
+    def _verify_delta(self, job: _Job, pack, diff: dict, rinfo: dict,
+                      walls: dict) -> None:
+        """Verify-after-repack: on the incremental path a symbolic proof
+        scoped to the touched clusters (edited LUTs' LBs + every
+        diverged LB); on fallback modes the full-circuit proof — the
+        dirty set is no longer a sound touch bound there."""
+        from .equiv import reelaborate, symbolic_equivalence_report, \
+            verify_clusters
+
+        t1 = time.perf_counter()
+        if rinfo["mode"] == "incremental":
+            touched = set(rinfo.get("div_lbs", ()))
+            for li in set(diff["changed_inputs"]) | set(diff["changed_tt"]):
+                site = pack.lut_site.get(li)
+                if site is not None:
+                    touched.add(int(pack.alm_lb[site]))
+            rep = verify_clusters(pack, sorted(touched))
+            self.stats["n_verify_scoped"] += 1
+        else:
+            rep = symbolic_equivalence_report(job.net, reelaborate(pack))
+            self.stats["n_verify_full"] += 1
+        walls["verify_s"] += time.perf_counter() - t1
+        job.verify = {
+            "method": rep["method"], "equivalent": rep["equivalent"],
+            "lbs": rep.get("lbs"), "proven_luts": rep["proven_luts"],
+            "fallback_closures": rep["fallback"]}
 
     def _attribute_delta(self, job: _Job, skey) -> None:
         self.stats["n_delta_requests"] += 1
@@ -440,9 +574,15 @@ class FlowServer:
             job.delta = {"mode": "structural_base_evicted",
                          "base_digest": job.base_digest}
             return
+        # frozen = same LB signature at the same index, moved = same
+        # signature elsewhere, re-clustered = membership changed
         d = cluster_delta(base_pack, job.pack)
         job.delta = dict(d, mode="structural",
                          base_digest=job.base_digest)
+        if job.delta_info is not None:
+            job.delta["repack"] = job.delta_info
+        if job.verify is not None:
+            job.delta["verify"] = job.verify
 
     def _timing_stage(self, pack_jobs: list[_Job], walls: dict) -> None:
         """Batched timing for every job without a (memoized) record:
@@ -474,13 +614,20 @@ class FlowServer:
             for job in class_jobs:
                 pkey = (job.pack_digest, skey, job.seed)
                 if pkey not in ir_index:
-                    t1 = time.perf_counter()
-                    prefix = _PREFIXES.get((job.digest, job.seed))
-                    tpl = prefix.ir_template if prefix is not None else None
-                    ir = job.pack.lower_ir(template=tpl)
-                    if prefix is not None and prefix.ir_template is None:
-                        prefix.ir_template = ir
-                    walls["lower_s"] += time.perf_counter() - t1
+                    if job.ir is not None:
+                        # the delta path already patched the cached IR's
+                        # dirty columns — no re-lowering
+                        ir = job.ir
+                    else:
+                        t1 = time.perf_counter()
+                        prefix = _PREFIXES.get((job.digest, job.seed))
+                        tpl = (prefix.ir_template if prefix is not None
+                               else None)
+                        ir = job.pack.lower_ir(template=tpl)
+                        if (prefix is not None
+                                and prefix.ir_template is None):
+                            prefix.ir_template = ir
+                        walls["lower_s"] += time.perf_counter() - t1
                     ir_index[pkey] = len(irs)
                     irs.append(ir)
                 job.ir = irs[ir_index[pkey]]
@@ -494,14 +641,16 @@ class FlowServer:
                 # members keyed by full (pack digest, skey, seed) — two
                 # batches whose IRs differ only in pack seed must not
                 # share a program row
-                prog_key = (tuple(ir_index), self.max_buckets)
+                prog_key = (tuple(ir_index), self.max_buckets,
+                            self.pad_timing_shapes)
                 progs = _PROGRAMS.get(prog_key)
                 if progs is None:
                     groups = _planner.group_by_envelope(
                         irs, max_groups=self.max_groups)
                     progs = [(members, build_suite_timing_program(
                         [irs[i] for i in members],
-                        max_buckets=self.max_buckets))
+                        max_buckets=self.max_buckets,
+                        pad_shapes=self.pad_timing_shapes))
                         for members in groups]
                     _PROGRAMS.put(prog_key, progs)
                 walls["build_s"] += time.perf_counter() - t1

@@ -40,6 +40,53 @@ from .packing import PackedCircuit, pack
 #: callers may still pass their own plain dict.
 _PREFIX_CACHE = _planner.register_cache("pack_prefix", cap=64)
 from .timing import record_timing_wall
+
+
+def prefix_for_edit(base, new_net: Netlist, base_log=None, prefixes=None):
+    """Resolve an *edited* netlist's packing prefix through the shared
+    prefix store, deriving it with
+    :func:`repro.core.repack.pack_prefix_delta` on a miss.
+
+    Edited prefixes are hosted under ``(edited pack digest, base content
+    digest, base seed)``: pack digest because truth tables never steer
+    packing (the same keying as the serving pack store), base digest
+    because a delta-derived prefix replays the *base's* decisions, so
+    derivations from two different bases must never collide.  On a hit
+    whose cached ``.net`` is a different tt-variant of the same packing
+    structure, the prefix is rebound to ``new_net`` — every other field
+    is structure-only, and the IR template is content-keyed so it simply
+    misses for the new truth tables.
+
+    Returns ``(prefix | None, info)``; ``info`` is the
+    ``pack_prefix_delta`` info dict plus a ``"store"`` key (``"hit"`` /
+    ``"miss"``).  ``None`` means the edit is outside the delta-eligible
+    class — the caller re-runs :func:`repro.core.repack.pack_prefix`.
+    """
+    from dataclasses import replace
+
+    from .repack import pack_prefix_delta
+
+    store = _PREFIX_CACHE if prefixes is None else prefixes
+    key = (new_net.pack_digest(), base.net.content_digest(), base.seed)
+    hit = store.get(key)
+    if hit is not None:
+        prefix, info = hit
+        info = dict(info, store="hit")
+        if prefix.net.content_digest() != new_net.content_digest():
+            prefix = replace(prefix, net=new_net)
+            # the stored changed_tt describes the stored tt-variant;
+            # recompute it against the actual request
+            info["changed_tt"] = [
+                li for li in range(base.net.n_luts)
+                if base.net.lut_tt[li] != new_net.lut_tt[li]]
+        return prefix, info
+    prefix, info = pack_prefix_delta(base, new_net, base_log=base_log)
+    if prefix is not None:
+        # the info rides with the prefix: a later hit must replay with
+        # the SAME dirty set or the advised re-cluster would trust
+        # recorded decisions of atoms whose data changed
+        store[key] = (prefix, dict(info))
+    return prefix, dict(info, store="miss")
 from .timing_vec import (build_suite_timing_program, delay_components,
                          critical_path_numpy, metrics_from_cp)
 

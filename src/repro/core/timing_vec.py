@@ -55,6 +55,33 @@ from .plan import bucket_envelopes, combined_profile, segment_levels
 
 _IDX = {f: i for i, f in enumerate(DELAY_FIELDS)}
 
+#: jit executables shared across :class:`SuiteTimingProgram` instances,
+#: keyed by the full shape signature (signal count, stacked member count,
+#: per-bucket flags + tensor shapes, PO width).  The compiled function
+#: reads every member-specific value from its *arguments*, so any two
+#: programs with equal signatures can share one executable — and with
+#: ``pad_shapes=True`` (below) signatures are quantized so that nearby
+#: batch compositions actually collide.  Unbounded on purpose: entries
+#: are a few compiled closures, not data.
+_JIT_CACHE: dict[tuple, object] = {}
+
+#: how many programs were built, how many jit executables that actually
+#: compiled vs reused — the serving benchmark records the delta to prove
+#: shape padding converts compiles into reuses.
+_COMPILE_COUNTS = {"programs": 0, "jit_built": 0, "jit_reused": 0}
+
+
+def read_compile_counts() -> dict:
+    """Snapshot of program-build vs jit-compile/reuse counters."""
+    return dict(_COMPILE_COUNTS)
+
+
+def _pad_dim(n: int, floor: int = 4) -> int:
+    """Round ``n`` up to the next power of two, at least ``floor`` —
+    the shape quantizer behind ``pad_shapes``."""
+    n = max(int(n), floor)
+    return 1 << (n - 1).bit_length()
+
 
 def delay_components(tables: np.ndarray) -> dict[str, np.ndarray]:
     """Expand delay-table rows ``[..., len(DELAY_FIELDS)]`` into the three
@@ -192,32 +219,40 @@ def analyze_ir(ir: CircuitIR, arch: ArchParams, backend: str = "numpy") -> dict:
 # ---------------------------------------------------------------------------
 
 
-def _pad_levels(ir: CircuitIR, L: int, bounds, envelopes, sink: int):
-    """Pad one member's ragged level tables to the bucketed group envelope;
+def _alloc_bucket(l: int, M1: int, C1: int, B1: int, sink: int):
+    """One bucket's all-pad (null) 17-tuple: every gather reads signal 0
+    (CONST0, arrival 0.0) through edge class 0 / wire tier 0, every
+    scatter lands on ``sink`` — a no-op level row."""
+    return (np.zeros((l, M1, 6), dtype=np.int32),       # l_ins
+            np.zeros((l, M1, 6), dtype=np.int32),       # l_cls
+            np.zeros((l, M1), dtype=np.int32),          # l_ndc
+            np.full((l, M1), sink, dtype=np.int32),     # l_out
+            np.zeros((l, C1, B1), dtype=np.int32),      # a_sig
+            np.zeros((l, C1, B1), dtype=np.int32),      # a_cls
+            np.zeros((l, C1, B1), dtype=np.int32),      # b_sig
+            np.zeros((l, C1, B1), dtype=np.int32),      # b_cls
+            np.zeros((l, C1), dtype=np.int32),          # cin_sig
+            np.zeros((l, C1), dtype=np.int32),          # cin_cls
+            np.full((l, C1, B1), sink, dtype=np.int32),  # sums
+            np.full((l, C1), sink, dtype=np.int32),     # cout
+            np.zeros((l, C1), dtype=np.int32),          # last
+            np.zeros((l, M1, 6), dtype=np.int32),       # l_hop
+            np.zeros((l, C1, B1), dtype=np.int32),      # a_hop
+            np.zeros((l, C1, B1), dtype=np.int32),      # b_hop
+            np.zeros((l, C1), dtype=np.int32))          # cin_hop
+
+
+def _pad_levels(ir: CircuitIR, bounds, shapes, sink: int):
+    """Pad one member's ragged level tables to the bucketed group envelope
+    (``shapes[bi] = (l, M1, C1, B1)``, possibly quantized upward);
     returns per-bucket 17-tuples of [l, ...] arrays (the scan xs).  The
     wire-tier (hop) arrays ride at indices 13..16 so the flag probes on
     indices 3/10/11 stay valid; padded slots keep tier 0 (zero delay)."""
     out = []
-    for (i, j), (M, C, B) in zip(bounds, envelopes):
-        l = max(j - i, 1)
-        M1, C1, B1 = max(M, 1), max(C, 1), max(B, 1)
-        l_ins = np.zeros((l, M1, 6), dtype=np.int32)
-        l_cls = np.zeros((l, M1, 6), dtype=np.int32)
-        l_hop = np.zeros((l, M1, 6), dtype=np.int32)
-        l_ndc = np.zeros((l, M1), dtype=np.int32)
-        l_out = np.full((l, M1), sink, dtype=np.int32)
-        a_sig = np.zeros((l, C1, B1), dtype=np.int32)
-        a_cls = np.zeros((l, C1, B1), dtype=np.int32)
-        a_hop = np.zeros((l, C1, B1), dtype=np.int32)
-        b_sig = np.zeros((l, C1, B1), dtype=np.int32)
-        b_cls = np.zeros((l, C1, B1), dtype=np.int32)
-        b_hop = np.zeros((l, C1, B1), dtype=np.int32)
-        cin_sig = np.zeros((l, C1), dtype=np.int32)
-        cin_cls = np.zeros((l, C1), dtype=np.int32)
-        cin_hop = np.zeros((l, C1), dtype=np.int32)
-        sums = np.full((l, C1, B1), sink, dtype=np.int32)
-        cout = np.full((l, C1), sink, dtype=np.int32)
-        last = np.zeros((l, C1), dtype=np.int32)
+    for (i, j), (l, M1, C1, B1) in zip(bounds, shapes):
+        (l_ins, l_cls, l_ndc, l_out, a_sig, a_cls, b_sig, b_cls,
+         cin_sig, cin_cls, sums, cout, last,
+         l_hop, a_hop, b_hop, cin_hop) = _alloc_bucket(l, M1, C1, B1, sink)
         for t in range(i, min(j, ir.n_levels)):
             r = t - i
             ll, cl = ir.lut_levels[t], ir.chain_levels[t]
@@ -271,6 +306,9 @@ class SuiteTimingProgram:
     _tensors: tuple = field(repr=False)
     _po: object = field(repr=False)
     _jit: object = field(default=None, repr=False)
+    #: full compiled-shape signature; programs with equal signatures
+    #: share one jit executable through the module ``_JIT_CACHE``
+    shape_key: tuple | None = None
 
     def _build_jit(self):
         import functools
@@ -337,20 +375,43 @@ class SuiteTimingProgram:
         comps = delay_components(np.asarray(delay_tables, dtype=np.float64))
         with enable_x64():
             if self._jit is None:
-                self._jit = self._build_jit()
+                jit = (_JIT_CACHE.get(self.shape_key)
+                       if self.shape_key is not None else None)
+                if jit is None:
+                    jit = self._build_jit()
+                    _COMPILE_COUNTS["jit_built"] += 1
+                    if self.shape_key is not None:
+                        _JIT_CACHE[self.shape_key] = jit
+                else:
+                    _COMPILE_COUNTS["jit_reused"] += 1
+                self._jit = jit
             cps = self._jit(self._tensors, self._po, comps["edge"],
                             comps["wire"], comps["lut"], comps["chain"])
-            return np.asarray(cps, dtype=np.float64)
+            # rows past n_members are pad members (cp 1.0), sliced away
+            return np.asarray(cps, dtype=np.float64)[:self.n_members]
 
 
 def build_suite_timing_program(irs: Sequence[CircuitIR],
-                               max_buckets: int = 3) -> SuiteTimingProgram:
+                               max_buckets: int = 3,
+                               pad_shapes: bool = False
+                               ) -> SuiteTimingProgram:
     """Stack many circuits' CircuitIRs into one width-bucketed timing program.
 
     Levels are aligned to the longest member, the combined width profile
     is segmented by the evaluator's padded-volume DP, and every member is
     padded to the bucket envelopes with null rows (sink-scattering,
-    zero-gathering).  One program serves the whole suite."""
+    zero-gathering).  One program serves the whole suite.
+
+    ``pad_shapes=True`` additionally quantizes every compiled dimension
+    (signal space, member count, PO width, per-bucket level count and
+    envelope) up to the next power of two, so *different* batch
+    compositions land on the same shape signature and share one jit
+    executable through the module ``_JIT_CACHE`` — the flow server's
+    edit streams and rotating tenant batches stop recompiling per batch.
+    Padding is value-neutral by the model invariant documented in the
+    module docstring: pad slots gather CONST0 through the all-zero null
+    edge class, pad members scatter only to the sink and are sliced off
+    by :meth:`SuiteTimingProgram.run`."""
     import jax.numpy as jnp
 
     if not irs:
@@ -361,23 +422,35 @@ def build_suite_timing_program(irs: Sequence[CircuitIR],
     bounds = segment_levels(m, c, b, max_buckets)
     envelopes = bucket_envelopes(m, c, b, bounds)
     n_sig = max(ir.n_signals for ir in irs)
+    G = len(irs)
+    G_alloc = G
+    P = max(max((ir.po_sig.size for ir in irs), default=1), 1)
+    shapes = [(max(j - i, 1), max(M, 1), max(C, 1), max(B, 1))
+              for (i, j), (M, C, B) in zip(bounds, envelopes)]
+    if pad_shapes:
+        n_sig = _pad_dim(n_sig, floor=64)
+        G_alloc = _pad_dim(G, floor=1)
+        P = _pad_dim(P, floor=4)
+        shapes = [(_pad_dim(l), _pad_dim(M1), _pad_dim(C1, floor=1),
+                   _pad_dim(B1, floor=1)) for l, M1, C1, B1 in shapes]
     sink = n_sig
-    members = [_pad_levels(ir, L, bounds, envelopes, sink) for ir in irs]
+    members = [_pad_levels(ir, bounds, shapes, sink) for ir in irs]
+    members += [[_alloc_bucket(*s, sink) for s in shapes]
+                ] * (G_alloc - G)                           # pad members
     tensors = tuple(
         tuple(jnp.asarray(np.stack([mb[bi][ai] for mb in members]))
               for ai in range(17))
         for bi in range(len(bounds)))
-    P = max(max((ir.po_sig.size for ir in irs), default=1), 1)
-    po = np.zeros((len(irs), P), dtype=np.int32)   # pad -> CONST0 (arr 0.0)
+    po = np.zeros((G_alloc, P), dtype=np.int32)    # pad -> CONST0 (arr 0.0)
     for g, ir in enumerate(irs):
         po[g, :ir.po_sig.size] = ir.po_sig
     flags = tuple(
-        (any(mb[bi][3].min() < sink for mb in members),     # any real lut out
+        (any(mb[bi][3].min() < sink for mb in members[:G]),  # any real lut out
          any(mb[bi][11].min() < sink or (mb[bi][10] < sink).any()
-             for mb in members))                            # any real chain
+             for mb in members[:G]))                         # any real chain
         for bi in range(len(bounds)))
-    shapes = tuple((max(j - i, 1), M, C, B)
-                   for (i, j), (M, C, B) in zip(bounds, envelopes))
+    _COMPILE_COUNTS["programs"] += 1
     return SuiteTimingProgram(
-        n_sig=n_sig, n_members=len(irs), flags=flags, bucket_shapes=shapes,
-        _tensors=tensors, _po=jnp.asarray(po))
+        n_sig=n_sig, n_members=G, flags=flags, bucket_shapes=tuple(shapes),
+        _tensors=tensors, _po=jnp.asarray(po),
+        shape_key=(n_sig, G_alloc, P, flags, tuple(shapes)))

@@ -58,15 +58,16 @@ def test_cache_lru_order_and_counters():
     assert c.get("b") is None
     st = c.stats()
     assert st == {"size": 2, "cap": 2, "hits": 1, "misses": 1,
-                  "evictions": 1}
+                  "evictions": 1, "hit_rate": 0.5}
     # __contains__ is a probe: never counts, never refreshes
     _ = "a" in c
     assert c.stats()["hits"] == 1
     c.clear()                       # entries drop, lifetime counters stay
     assert c.stats() == {"size": 0, "cap": 2, "hits": 1, "misses": 1,
-                         "evictions": 1}
+                         "evictions": 1, "hit_rate": 0.5}
     c.reset_stats()
     assert c.stats()["hits"] == 0
+    assert c.stats()["hit_rate"] == 0.0    # derived: no lookups yet
 
 
 def test_cache_resize_and_registry_knobs():
@@ -277,6 +278,72 @@ def test_serve_delta_structural_attribution():
     assert r.delta["n_lbs_base"] >= 1 and r.delta["n_lbs_new"] >= 1
     assert 0 <= r.delta["unchanged_frac"] <= 1
     _assert_record_matches(r.record, edited, "baseline", 0)
+
+
+def test_serve_delta_dirty_set_incremental_path():
+    """A single-LUT fanin rewire with ``base_digest`` set rides the
+    dirty-set path end to end: incremental repack, dirty-column IR
+    patch, scoped per-cluster proof — and the served record is still
+    bit-identical to a fresh serial flow of the edited netlist."""
+    import random
+
+    from repro.core.alm import ARCHS
+    from repro.core.edits import (clone_netlist, edit_rewire_fanin,
+                                  safe_rewire_sources)
+    from repro.core.repack import (pack_prefix_delta, repack_delta,
+                                   repack_with_log)
+
+    net = kratos_gemm(m=4, n=4, width=5, sparsity=0.5)
+    arch = ARCHS["dd5"]
+    prefix = pack_prefix(net, seed=0)
+    _, log = repack_with_log(prefix, arch)
+    # probe for an edit that stays on the incremental path (some rewires
+    # legally fall back at the absorption/pairing gates)
+    rng = random.Random(7)
+    edited = None
+    for _ in range(50):
+        li = rng.randrange(net.n_luts)
+        srcs = safe_rewire_sources(net, li)
+        if not srcs:
+            continue
+        pin = rng.randrange(len(net.lut_inputs[li]))
+        src = rng.choice(srcs)
+        if net.lut_inputs[li][pin] == src:
+            continue
+        cand = clone_netlist(net)
+        edit_rewire_fanin(cand, li, pin, src)
+        np_, pinfo = pack_prefix_delta(prefix, cand, base_log=log)
+        if np_ is None or pinfo["mode"] != "incremental":
+            continue
+        _, rinfo = repack_delta(np_, log, arch,
+                                dirty_atoms=pinfo["dirty_atoms"])
+        if rinfo["mode"] == "incremental":
+            edited = cand
+            break
+    assert edited is not None, "no incremental-path rewire found"
+    plan.clear_caches()
+
+    async def main():
+        server = FlowServer()
+        base = await server.submit(FlowRequest(net, "dd5"))
+        r = await server.submit(FlowRequest(edited, "dd5",
+                                            base_digest=base.digest))
+        await server.aclose()
+        return r, dict(server.stats)
+
+    r, stats = asyncio.run(main())
+    assert r.delta["mode"] == "structural"
+    assert r.delta["repack"]["mode"] == "incremental"
+    assert r.delta["repack"]["n_frozen_lbs"] >= 1
+    assert r.delta["verify"]["method"] == "symbolic_scoped"
+    assert r.delta["verify"]["equivalent"] is True
+    # moved-vs-re-clustered attribution is present and partitions
+    assert (r.delta["n_frozen"] + r.delta["n_moved"]
+            + r.delta["n_reclustered"]) >= r.delta["n_lbs_new"] - 1
+    assert stats["n_delta_incremental"] == 1
+    assert stats["n_delta_fallback"] == 0
+    assert stats["n_verify_scoped"] == 1 and stats["n_verify_full"] == 0
+    _assert_record_matches(r.record, edited, "dd5", 0)
 
 
 def test_cluster_delta_identical_and_disjoint():
