@@ -1,0 +1,216 @@
+"""Annealing placement-refinement gates — what refinement actually buys.
+
+The PR-6 analytic placer is legalization-limited: its stable-sort snap
+scrambles the relaxation's local structure, leaving a large wirelength
+gap that the batched simulated annealer (:mod:`repro.core.anneal`)
+exists to close.  This section proves, per suite circuit:
+
+* **legality** — refined placements keep one LB per slot on the same
+  grid as the analytic seed;
+* **never-worse** — annealed wirelength <= the analytic seed's on
+  EVERY circuit (the best-snapshot guarantee, not luck), with a
+  **geomean HPWL improvement >= 5%** over the suite;
+* **placed-oracle parity** — vectorized placed timing of the annealed
+  placement is bit-identical to
+  :func:`repro.core.timing.analyze_placed_oracle` at a nonzero
+  wire-delay profile (the wire-tier gather is actually exercised);
+* **determinism** — a re-anneal from a cleared cache reproduces the
+  placement bit for bit.
+
+``--smoke`` (also ``scripts/check.sh --smoke``) runs a bounded-iteration
+anneal on 2 circuits; the full run covers all 17 suite members, three
+annealing seeds (ensemble variance), and the timing-driven mode's CPD
+deltas, and feeds the refinement block of
+``experiments/perf/placed_sweep.json`` (via ``benchmarks/place_sweep``).
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from repro.core.alm import make_arch
+from repro.core.anneal import ANNEAL_WALL
+from repro.core.circuit_ir import apply_placement
+from repro.core.packing import pack
+from repro.core.place import place_ir
+from repro.core.timing import analyze_placed_oracle
+from repro.core.timing_vec import analyze_ir
+
+from .common import Timer, emit, suites
+
+#: the routed wire profile the parity/CPD legs time under (same tiers as
+#: benchmarks/place_sweep.WIRE_PROFILES' nonzero row)
+WIRED = make_arch("dd5_wired", bypass_inputs=2, addmux_fanin=10,
+                  t_wire_hop1=25.0, t_wire_hop2=40.0, t_wire_long=120.0)
+
+#: suite-wide geomean HPWL improvement the annealer must deliver
+GEOMEAN_GATE = 0.05
+
+
+def _legal(pl) -> bool:
+    n = pl.n_lbs
+    if not ((pl.lb_x >= 0).all() and (pl.lb_x < pl.grid_w).all()
+            and (pl.lb_y >= 0).all() and (pl.lb_y < pl.grid_h).all()):
+        return False
+    return len(set(zip(pl.lb_x.tolist(), pl.lb_y.tolist()))) == n
+
+
+def _smoke_nets():
+    from repro.core.circuits import kratos_gemm, vtr_mixed
+
+    return [kratos_gemm(m=5, n=5, width=5, sparsity=0.5),
+            vtr_mixed(logic_nodes=150, adders=2)]
+
+
+def wirelength_report(nets, seed: int = 0, steps: int | None = None,
+                      seeds=(0, 1, 2), timing_mode: bool = True) -> dict:
+    """Per-circuit analytic-vs-annealed comparison under the wired arch.
+
+    For every netlist: the analytic seed and annealed wirelengths (and
+    their ratio), the placed CPDs of both placements at the routed wire
+    profile, the annealed-wirelength spread over ``seeds`` (the seed-
+    ensemble variance a multi-start caller would exploit), and — when
+    ``timing_mode`` — the CPD of the criticality-weighted anneal.  The
+    dict carries the two acceptance gates: ``all_never_worse`` and the
+    suite ``geomean_improvement`` vs :data:`GEOMEAN_GATE`.
+    """
+    rows = []
+    log_ratios = []
+    for net in nets:
+        packed = pack(net, WIRED, seed=seed)
+        ir = packed.lower_ir()
+        seed_pl = place_ir(ir, WIRED, seed)
+        t0 = time.perf_counter()
+        ann = place_ir(ir, WIRED, seed, refine="anneal",
+                       anneal_steps=steps)
+        t_ann = time.perf_counter() - t0
+        wl0, wl1 = seed_pl.wirelength(ir), ann.wirelength(ir)
+        cpd0 = analyze_ir(apply_placement(ir, seed_pl),
+                          WIRED)["critical_path_ps"]
+        cpd1 = analyze_ir(apply_placement(ir, ann),
+                          WIRED)["critical_path_ps"]
+        wls = [wl1] + [
+            place_ir(ir, WIRED, s, refine="anneal",
+                     anneal_steps=steps).wirelength(ir)
+            for s in seeds if s != seed]
+        row = {
+            "net": net.name,
+            "n_lbs": ir.n_lbs,
+            "wirelength_analytic": int(wl0),
+            "wirelength_annealed": int(wl1),
+            "wl_ratio": wl1 / max(wl0, 1),
+            "cpd_analytic_ps": cpd0,
+            "cpd_annealed_ps": cpd1,
+            "cpd_delta_ps": cpd1 - cpd0,
+            "legal": _legal(ann),
+            "never_worse": wl1 <= wl0,
+            "seed_wl_min": int(min(wls)),
+            "seed_wl_max": int(max(wls)),
+            "seed_wl_spread": (max(wls) - min(wls)) / max(min(wls), 1),
+            "t_anneal_s": t_ann,
+        }
+        if timing_mode:
+            tpl = place_ir(ir, WIRED, seed, refine="anneal_timing",
+                           anneal_steps=steps)
+            row["cpd_timing_driven_ps"] = analyze_ir(
+                apply_placement(ir, tpl), WIRED)["critical_path_ps"]
+            row["wirelength_timing_driven"] = int(tpl.wirelength(ir))
+        rows.append(row)
+        log_ratios.append(math.log(row["wl_ratio"]))
+    geo = math.exp(sum(log_ratios) / len(log_ratios)) if log_ratios else 1.0
+    return {
+        "circuits": rows,
+        "geomean_wl_ratio": geo,
+        "geomean_improvement": 1.0 - geo,
+        "geomean_gate": GEOMEAN_GATE,
+        "all_legal": all(r["legal"] for r in rows),
+        "all_never_worse": all(r["never_worse"] for r in rows),
+        "pass_geomean": (1.0 - geo) >= GEOMEAN_GATE,
+    }
+
+
+def run(smoke: bool = False, verbose: bool = True, seed: int = 0) -> dict:
+    if smoke:
+        nets = _smoke_nets()
+        steps = 24          # bounded-iteration smoke anneal
+        seeds = (0,)
+    else:
+        nets = [n for s in suites("wallace").values() for n in s]
+        steps = None        # size-scaled defaults
+        seeds = (0, 1, 2)
+
+    a0 = ANNEAL_WALL["s"]
+    report = wirelength_report(nets, seed=seed, steps=steps, seeds=seeds,
+                               timing_mode=not smoke)
+    report["anneal_wall_s"] = ANNEAL_WALL["s"] - a0
+
+    # placed-oracle parity on the ANNEALED placements, nonzero wire tiers
+    parity = True
+    for net in nets:
+        packed = pack(net, WIRED, seed=seed)
+        ir = packed.lower_ir()
+        ann = place_ir(ir, WIRED, seed, refine="anneal", anneal_steps=steps)
+        want = analyze_placed_oracle(packed, ann)
+        if analyze_ir(apply_placement(ir, ann), WIRED) != want:
+            parity = False
+
+    # determinism: a fresh re-anneal reproduces the placement bit for bit
+    net = nets[0]
+    ir = pack(net, WIRED, seed=seed).lower_ir()
+    a = place_ir(ir, WIRED, seed, refine="anneal", anneal_steps=steps)
+    b = place_ir(ir, WIRED, seed, refine="anneal", anneal_steps=steps)
+    deterministic = bool(np.array_equal(a.lb_x, b.lb_x)
+                         and np.array_equal(a.lb_y, b.lb_y))
+
+    # the smoke tier gates legality/never-worse/parity only; the geomean
+    # improvement gate needs the full suite to be meaningful
+    gates = [report["all_legal"], report["all_never_worse"], parity,
+             deterministic] + ([] if smoke else [report["pass_geomean"]])
+    rec = {
+        "tag": "anneal_refine",
+        "smoke": smoke,
+        "n_circuits": len(nets),
+        "steps": steps,
+        "report": report,
+        "oracle_match": parity,
+        "deterministic": deterministic,
+        "pass_gate": all(gates),
+    }
+    if verbose:
+        for row in report["circuits"]:
+            emit(f"anneal/{row['net']}", row["t_anneal_s"] * 1e6,
+                 f"lbs={row['n_lbs']};wl={row['wirelength_analytic']}->"
+                 f"{row['wirelength_annealed']};"
+                 f"ratio={row['wl_ratio']:.3f};"
+                 f"cpd_delta={row['cpd_delta_ps']:.0f}ps;"
+                 f"spread={row['seed_wl_spread']:.3f}")
+        emit("anneal/geomean", 0,
+             f"improvement={report['geomean_improvement']:.3f};"
+             f"gate>={GEOMEAN_GATE};"
+             f"never_worse={report['all_never_worse']};"
+             f"legal={report['all_legal']};oracle_match={parity};"
+             f"deterministic={deterministic};pass={rec['pass_gate']}")
+    return rec
+
+
+def main():
+    with Timer() as t:
+        rec = run()
+    emit("anneal_refine", t.us,
+         f"circuits={rec['n_circuits']};"
+         f"improvement={rec['report']['geomean_improvement']:.3f};"
+         f"wall={rec['report']['anneal_wall_s']:.2f}s;"
+         f"gate={rec['pass_gate']}")
+    if not rec["pass_gate"]:
+        raise RuntimeError("anneal_refine gates failed")
+    return rec
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--smoke" in sys.argv[1:]:
+        sys.exit(0 if run(smoke=True)["pass_gate"] else 1)
+    main()

@@ -5,24 +5,31 @@ the DD grid looks like when routing is free; this driver re-places and
 re-times the full Kratos + Koios + VTR suite across the arch grid with
 the wire-tier fabric model on (:mod:`repro.core.place`): every circuit
 is grid-placed once per *placement key* (structural class x grid
-aspect), every grid point's delay row — including the wire-tier profile
-— is then pure data for the batched timing programs.  The question the
-paper never measured: does DD5's density survive real wire delay?
+aspect) — analytic seed then annealing refinement
+(:mod:`repro.core.anneal`, ``refine="anneal"``, the ``sweep_suite``
+default) — and every grid point's delay row, including the wire-tier
+profile, is then pure data for the batched timing programs.  The
+question the paper never measured: does DD5's density survive real wire
+delay?
 
 Two gates, both green in ``scripts/check.sh --smoke``:
 
 * **placed oracle parity** — every (circuit, grid point) record is
   bit-identical to :func:`repro.core.timing.analyze_placed_oracle`, the
-  per-signal Python walk with the same placement;
+  per-signal Python walk with the same *annealed* placement;
 * **placement reuse >= 2x** — supplying the grid's placements from the
-  registry cache (one analytic solve per placement key, shared by every
-  wire-delay row of the class) must beat solving a fresh placement at
+  registry cache (one anneal per placement key, shared by every
+  wire-delay row of the class) must beat refining a fresh placement at
   every grid point by >= 2x wall clock (min-of-N on the gated side,
   ``benchmarks/common.min_of_n``).
 
 Records ``experiments/perf/placed_sweep.json`` — the placement-aware
 frontier that supersedes the packing-only one for routing-pressure
 questions (the packing-only file remains the placement-free reference).
+The record's ``refinement`` block (``anneal_refine.wirelength_report``)
+carries per-circuit analytic-vs-annealed wirelength, placed CPD deltas
+at the routed wire profile, and the annealed-wirelength spread over an
+annealing-seed ensemble.
 """
 from __future__ import annotations
 
@@ -31,6 +38,7 @@ import os
 import time
 
 from repro.core.alm import arch_grid
+from repro.core.anneal import ANNEAL_COUNTS
 from repro.core.packing import pack
 from repro.core.place import PLACE_COUNTS, place_ir, placement_for
 from repro.core.sweep import _flatten, adp_frontier, sweep_suite
@@ -65,9 +73,9 @@ def _grid(smoke: bool):
 
 def placement_reuse_gate(nets, grid, packs, seed: int = 0,
                          smoke: bool = False) -> dict:
-    """The >= 2x warm gate: registry-cached placements (one solve per
-    circuit x placement key) vs a fresh analytic solve at every
-    (circuit, grid point).
+    """The >= 2x warm gate: registry-cached annealed placements (one
+    anneal per circuit x placement key) vs a fresh analytic-solve +
+    anneal at every (circuit, grid point).
 
     The cached side is what ``sweep_suite(place=True)`` actually pays
     per warm sweep; min-of-N because container noise only inflates it.
@@ -87,21 +95,26 @@ def placement_reuse_gate(nets, grid, packs, seed: int = 0,
     def reuse_pass():
         for g in range(len(flat)):
             for arch in grid:
-                placement_for(irs[(g, arch.structural_key())], arch, seed)
+                placement_for(irs[(g, arch.structural_key())], arch, seed,
+                              refine="anneal")
 
-    # warm the registry cache (the cold solves were already paid by the
+    # warm the registry cache (the cold anneals were already paid by the
     # placed sweep; this makes the measurement independent of call order)
     reuse_pass()
     solved0 = PLACE_COUNTS["analytic"]
+    anneals0 = ANNEAL_COUNTS["anneal"]
     t_reuse, _ = min_of_n(reuse_pass, n=3)
     assert PLACE_COUNTS["analytic"] == solved0, \
         "reuse pass must be pure cache hits"
+    assert ANNEAL_COUNTS["anneal"] == anneals0, \
+        "reuse pass must not re-anneal"
 
     t0 = time.perf_counter()
     n_per_point = 0
     for g in range(len(flat)):
         for arch in grid:
-            place_ir(irs[(g, arch.structural_key())], arch, seed)
+            place_ir(irs[(g, arch.structural_key())], arch, seed,
+                     refine="anneal")
             n_per_point += 1
     t_per_point = time.perf_counter() - t0
 
@@ -143,7 +156,7 @@ def run(smoke: bool = False, verbose: bool = True, seed: int = 0,
     for g in range(len(flat)):
         for k, arch in enumerate(grid):
             p = pack(flat[g], arch, seed=seed)
-            pl = placement_for(p.lower_ir(), arch, seed)
+            pl = placement_for(p.lower_ir(), arch, seed, refine="anneal")
             want = analyze_placed_oracle(p, pl)
             for r in (res, res_warm):
                 got = r.records[g][k]
@@ -154,6 +167,14 @@ def run(smoke: bool = False, verbose: bool = True, seed: int = 0,
 
     # gate (b): placement reuse across wire-delay rows of a class
     reuse = placement_reuse_gate(nets, grid, packs, seed=seed, smoke=smoke)
+
+    # refinement report: analytic-vs-annealed wirelength, CPD deltas at
+    # the routed wire profile, and the annealing-seed-ensemble spread
+    from .anneal_refine import wirelength_report
+
+    refinement = wirelength_report(
+        flat, seed=seed, steps=24 if smoke else None,
+        seeds=(0,) if smoke else (0, 1, 2), timing_mode=not smoke)
 
     frontier = adp_frontier(res, baseline="b0")
     # wire-delay sensitivity: same structural point with/without the
@@ -184,9 +205,12 @@ def run(smoke: bool = False, verbose: bool = True, seed: int = 0,
         "wall_warm": res_warm.wall,
         "oracle_match": bool(match),
         "placement_reuse": reuse,
+        "refinement": refinement,
         "frontier_vs_b0": frontier,
         "wire_cpd_ratio": wire_cost,
-        "pass_gate": bool(match) and reuse["pass_gate"],
+        "pass_gate": (bool(match) and reuse["pass_gate"]
+                      and refinement["all_never_worse"]
+                      and refinement["all_legal"]),
     }
     if write_json and not smoke:
         os.makedirs(OUT, exist_ok=True)
@@ -206,6 +230,11 @@ def run(smoke: bool = False, verbose: bool = True, seed: int = 0,
              f"reused={reuse['t_place_reuse_s']:.3f}s;"
              f"speedup={reuse['speedup_reuse']:.1f}x;"
              f"gate={reuse['pass_gate']}")
+        emit("place/refine", 0,
+             f"geomean_improvement="
+             f"{refinement['geomean_improvement']:.3f};"
+             f"never_worse={refinement['all_never_worse']};"
+             f"legal={refinement['all_legal']}")
     return rec
 
 

@@ -10,11 +10,18 @@ Prints ``name,us_per_call,derived`` CSV lines.  Sections:
   beyond — beyond-paper sparsity/width ablations
   sweep — arch-grid ADP frontier (bypass width x AddMux population),
           batched PackIR timing, oracle-gated
-  place — placement-aware ADP frontier (grid placer + wire-tier delays),
-          gated on placed-oracle bit-identity and >= 2x placement reuse
+  place — placement-aware ADP frontier (grid placer + annealing
+          refinement + wire-tier delays), gated on placed-oracle
+          bit-identity and >= 2x placement reuse
+  anneal — annealing placement refinement: per-circuit analytic-vs-
+          annealed wirelength + CPD deltas, gated on legality,
+          never-worse-than-seed, placed-oracle parity on annealed
+          placements, and a suite geomean HPWL improvement >= 5%
   search — thousand-point successive-halving design-space search over
           the full arch grid, gated on winner oracle parity +
-          equivalence and a >= 2x search-vs-dense cost ratio
+          equivalence and a >= 2x search-vs-dense cost ratio; plus the
+          placed wire-delay-axis search (annealed placements, annealing
+          wall in the rung ledger, >= 2x placement-reuse gate)
   serve — async batched flow serving: p50/p99 latency + throughput at
           1/8/32 concurrent clients, gated on serial bit-identity and
           coalesced warm throughput >= 2x the serial min-of-N baseline
@@ -41,6 +48,9 @@ suite-scale sweep numbers).
 runs ``pytest -m "not slow"``, a 2-point arch-grid sweep gated on oracle
 bit-identity, the IR-parity step, a 2-circuit placement gate (placed
 sweep bit-identical to the placed oracle + >= 2x placement reuse), a
+2-circuit bounded-iteration anneal gate (grid-legal, wirelength <= the
+analytic seed, placed-oracle parity on the annealed placements,
+bit-deterministic re-anneal), a
 2-rung / 8-point / 2-circuit search smoke (winner oracle parity +
 equivalence, dense-vs-search cost ratio >= 1), and a flow-serving smoke
 (8 concurrent clients over 2 circuits x 2 archs, every served record
@@ -69,6 +79,7 @@ SECTIONS = [
     ("beyond", "beyond_paper"),
     ("sweep", "sweep_frontier"),
     ("place", "place_sweep"),
+    ("anneal", "anneal_refine"),
     ("search", "search_frontier"),
     ("serve", "serve_latency"),
     ("repack", "repack_delta"),
@@ -127,7 +138,9 @@ def smoke() -> int:
     (two circuits lowered ONCE each; eval and timing both proven against
     their oracles from the same CircuitIR object) + the 2-circuit
     placement gate (placed sweep bit-identical to the placed oracle,
-    placement reuse >= 2x vs place-per-point) + the 2-rung search smoke
+    placement reuse >= 2x vs place-per-point) + the bounded-iteration
+    anneal gate (legal, never-worse, placed-oracle parity,
+    deterministic) + the 2-rung search smoke
     (winner oracle parity + equivalence, dense-vs-search ratio >= 1) +
     the flow-serving smoke (8 concurrent clients, 2 circuits x 2 archs;
     serial bit-identity + coalesced >= serial throughput) + the
@@ -176,6 +189,17 @@ def smoke() -> int:
         print(f"smoke_place,,failed({type(e).__name__}: {e})",
               file=sys.stderr)
         place_ok = False
+    print("== smoke: bounded-iteration anneal gate (2 circuits) ==",
+          flush=True)
+    try:
+        from .anneal_refine import run as anneal_run
+
+        arec = anneal_run(smoke=True)
+        anneal_ok = arec["pass_gate"]
+    except Exception as e:  # noqa: BLE001
+        print(f"smoke_anneal,,failed({type(e).__name__}: {e})",
+              file=sys.stderr)
+        anneal_ok = False
     print("== smoke: 2-rung successive-halving search gate ==", flush=True)
     try:
         from .search_frontier import run as search_run
@@ -210,12 +234,13 @@ def smoke() -> int:
         repack_ok = False
     _print_cache_table()
     ok = (tests.returncode == 0 and sweep_ok and ir_ok and place_ok
-          and search_ok and serve_ok and repack_ok)
+          and anneal_ok and search_ok and serve_ok and repack_ok)
     print(f"smoke,,{'ok' if ok else 'failed'}"
           f"(tests={'ok' if tests.returncode == 0 else 'fail'};"
           f"sweep={'ok' if sweep_ok else 'fail'};"
           f"ir_parity={'ok' if ir_ok else 'fail'};"
           f"place={'ok' if place_ok else 'fail'};"
+          f"anneal={'ok' if anneal_ok else 'fail'};"
           f"search={'ok' if search_ok else 'fail'};"
           f"serve={'ok' if serve_ok else 'fail'};"
           f"repack={'ok' if repack_ok else 'fail'})")

@@ -17,7 +17,18 @@ The recorded scenario (``experiments/perf/search_frontier.json``):
   full dense sweep vs the search, both from cold caches.  The search
   must be >= 2x cheaper while agreeing on the winner;
 * **the bandit variant** — the same subgrid searched with the optimistic
-  allocation (``allocation="bandit"``), recorded for comparison.
+  allocation (``allocation="bandit"``), recorded for comparison;
+* **the placed wire-axis search** — ``search_archs(place=True)`` over
+  the canonical grid crossed with routed wire-tier profiles
+  (:data:`benchmarks.place_sweep.WIRE_PROFILES`).  Annealed placements
+  (:mod:`repro.core.anneal`) price the wire tiers, so the ``_w{n}``
+  rows — bit-identical ties in every unplaced sweep — become searchable
+  grid points.  The promoted winner is placed-oracle-parity-gated
+  (``verify_winners(place=True)``), the annealing wall is attributed in
+  every rung's ledger (``walls["anneal_s"]``), and the min-of-N
+  **placement-reuse >= 2x gate** (one anneal per placement key, shared
+  across the wire rows of a class, vs a fresh refine at every grid
+  point) rides along from :func:`benchmarks.place_sweep.placement_reuse_gate`.
 
 ``--smoke`` (also wired into ``scripts/check.sh`` via ``benchmarks.run
 --smoke``) runs a 2-rung, 8-point, 2-circuit search gated on oracle
@@ -29,12 +40,14 @@ import json
 import os
 import time
 
-from repro.core.alm import full_arch_grid, subgrid
+from repro.core.alm import arch_grid, full_arch_grid, subgrid
+from repro.core.packing import pack
 from repro.core.plan import clear_caches
 from repro.core.search import search_archs, verify_winners
 from repro.core.sweep import _flatten, sweep_suite
 
 from .common import Timer, emit, min_of_n, suites
+from .place_sweep import WIRE_PROFILES, placement_reuse_gate
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "perf")
 
@@ -197,6 +210,50 @@ def run(smoke: bool = False, verbose: bool = True, seed: int = 0,
         "agrees_with_halving": bres.winner == gate["search_winner"],
     }
 
+    # the placed wire-delay-axis search: canonical grid x wire profiles,
+    # annealed placements making the _w{n} rows distinct grid points
+    placed_grid = arch_grid(wire_delays=WIRE_PROFILES)
+    placed_packs: dict = {}
+    clear_caches()
+    t0 = time.perf_counter()
+    pres = search_archs(nets, placed_grid, seed=seed, eta=4,
+                        min_survivors=4, min_circuits=3, baseline="b0",
+                        backend="numpy", place=True, packs=placed_packs,
+                        programs={})
+    t_placed = time.perf_counter() - t0
+    pver = verify_winners(pres, nets, placed_grid, seed=seed,
+                          n_equiv_circuits=2, winners=[pres.winner],
+                          place=True)
+    # the search culls, so fill pack coverage for the reuse gate (cheap:
+    # most pairs are registry hits from the rungs above)
+    digests = [n.content_digest() for n in nets]
+    for g, net in enumerate(nets):
+        for a in placed_grid:
+            key = (digests[g], a.structural_key(), seed)
+            if key not in placed_packs:
+                placed_packs[key] = pack(net, a, seed=seed)
+    preuse = placement_reuse_gate(nets, placed_grid, placed_packs,
+                                  seed=seed)
+    anneal_wall = sum(r["walls"]["anneal_s"] for r in pres.rungs)
+    placed = {
+        "n_points": len(placed_grid),
+        "wire_profiles": [list(w) for w in WIRE_PROFILES],
+        "winner": pres.winner,
+        "t_search_s": t_placed,
+        "anneal_wall_s": anneal_wall,
+        "anneal_wall_attributed": anneal_wall > 0.0,
+        "walls_per_rung": [r["walls"] for r in pres.rungs],
+        "frontier": pres.frontier,
+        "pareto": pres.pareto,
+        "wire_rows_in_final_rung": sorted(
+            r["arch"] for r in pres.frontier if "_w" in r["arch"]),
+        "verify": {k: pver[k] for k in
+                   ("winners", "oracle_match", "equivalent")},
+        "placement_reuse": preuse,
+        "pass": (pver["oracle_match"] and pver["equivalent"]
+                 and anneal_wall > 0.0 and preuse["pass_gate"]),
+    }
+
     rec = {
         "tag": "search_frontier",
         "smoke": False,
@@ -212,9 +269,11 @@ def run(smoke: bool = False, verbose: bool = True, seed: int = 0,
                    ("winners", "oracle_match", "equivalent", "mismatches")},
         "dense_gate_64": gate,
         "bandit_64": bandit,
+        "placed_search": placed,
         "oracle_match": ver["oracle_match"] and ver["equivalent"],
         "pass_gate": (ver["oracle_match"] and ver["equivalent"]
-                      and dd5["contained_or_dominated"] and gate["pass"]),
+                      and dd5["contained_or_dominated"] and gate["pass"]
+                      and placed["pass"]),
     }
     if write_json:
         os.makedirs(OUT, exist_ok=True)
@@ -244,6 +303,12 @@ def run(smoke: bool = False, verbose: bool = True, seed: int = 0,
              f"dense={gate['t_dense_s']:.2f}s;"
              f"search={gate['t_search_s']:.2f}s;ratio={gate['ratio']:.2f}x;"
              f"winners_agree={gate['winners_agree']};gate={gate['pass']}")
+        emit("search/placed", 0,
+             f"points={len(placed_grid)};winner={pres.winner};"
+             f"t={t_placed:.1f}s;anneal={anneal_wall:.2f}s;"
+             f"wire_rows={len(placed['wire_rows_in_final_rung'])};"
+             f"reuse={preuse['speedup_reuse']:.1f}x;"
+             f"oracle_match={pver['oracle_match']};gate={placed['pass']}")
     return rec
 
 

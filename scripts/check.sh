@@ -4,6 +4,10 @@
 # timing-oracle bit-identity, + the IR-parity step (two circuits lowered
 # ONCE each; eval and timing proven against their oracles from the same
 # CircuitIR object, lowering counters asserting no duplicates), + the
+# 2-circuit placement gate (placed sweep bit-identical to the placed
+# oracle, >= 2x placement reuse), + the bounded-iteration anneal gate
+# (annealed placements grid-legal, wirelength <= the analytic seed,
+# placed-oracle parity, bit-deterministic re-anneal), + the
 # 2-rung / 8-point / 2-circuit successive-halving search smoke (winner
 # oracle parity + equivalence, dense-vs-search cost ratio >= 1), + the
 # flow-serving smoke (8 concurrent clients over 2 circuits x 2 archs,

@@ -290,7 +290,7 @@ def arch_grid(bypass_inputs=(0, 2), addmux_fanin=(5, 10, 20),
     return grid
 
 
-def full_arch_grid() -> list[ArchParams]:
+def full_arch_grid(wire_delays=((0.0, 0.0, 0.0),)) -> list[ArchParams]:
     """The *entire* DD design-space cross-product — every axis of
     :func:`arch_grid` widened at once:
 
@@ -300,10 +300,15 @@ def full_arch_grid() -> list[ArchParams]:
     = **1920 grid points over 1200 structural classes**.  Fan-ins
     10/14/20 saturate the ``z_sources`` budget, so they pack identically
     and differ only in delay rows — every point is still a distinct
-    delay row (fan-in moves the Z-pin mux delay).  The wire-tier axis is
-    deliberately absent: without placement all wire rows time
-    identically, which would pad the point count without adding design
-    space.
+    delay row (fan-in moves the Z-pin mux delay).
+
+    ``wire_delays`` crosses in the wire-tier axis (``_w{n}``-suffixed
+    rows per extra profile).  The default keeps it flat: in an unplaced
+    sweep all wire rows time identically, padding the point count
+    without adding design space.  A *placed* search
+    (``search_archs(place=True)``) passes real profiles here — annealed
+    placements price the tiers, so the wire rows stop tying and the
+    axis becomes searchable.
 
     This is the search space :mod:`repro.core.search` halves over —
     dense-sweeping it costs ~1200 re-clusterings per circuit, which is
@@ -316,7 +321,8 @@ def full_arch_grid() -> list[ArchParams]:
         alms_per_lb=(6, 8, 10, 12, 14),
         lb_inputs=(40, 48, 60),
         ext_pin_util=(0.7, 0.8, 0.9, 1.0),
-        direct_link_inputs=(20, 40))
+        direct_link_inputs=(20, 40),
+        wire_delays=wire_delays)
 
 
 def subgrid(archs, n: int, must_include=("b0", "b2_f10")) -> list[ArchParams]:

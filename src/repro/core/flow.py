@@ -132,7 +132,8 @@ def sweep_architectures(suites_or_nets, archs=None, seed: int = 0,
                         programs: dict | None = None,
                         prefixes: dict | None = None,
                         grid_axes: dict | None = None,
-                        place: bool = False):
+                        place: bool = False,
+                        refine: str | None = "anneal"):
     """Design-space sweep over an architecture grid (see
     :func:`repro.core.sweep.sweep_suite`).  ``archs`` defaults to the
     full bypass-width x crossbar-population grid; pass any list of
@@ -148,8 +149,10 @@ def sweep_architectures(suites_or_nets, archs=None, seed: int = 0,
     with a non-default grouping.  ``packs``/``programs``/``prefixes``
     are the caller-owned content-keyed caches of ``sweep_suite``.
     ``place=True`` grid-places every circuit and includes the wire-tier
-    delay term (placements registry-cached per placement key; see
-    :mod:`repro.core.place`)."""
+    delay term (placements registry-cached per placement key, anneal-
+    refined by default — ``refine`` forwards to
+    :func:`repro.core.sweep.sweep_suite`; see :mod:`repro.core.place`
+    and :mod:`repro.core.anneal`)."""
     from .alm import arch_grid
     from .sweep import sweep_suite
 
@@ -160,7 +163,7 @@ def sweep_architectures(suites_or_nets, archs=None, seed: int = 0,
     return sweep_suite(suites_or_nets, archs, seed=seed, backend=backend,
                        max_buckets=max_buckets, max_groups=max_groups,
                        packs=packs, programs=programs, prefixes=prefixes,
-                       place=place)
+                       place=place, refine=refine)
 
 
 def sweep_frontier(result, baseline: str | None = None):

@@ -36,14 +36,27 @@ bit-identity gates compare vectorized timing against the placed oracle
 *on whatever placement was produced*, so the backend choice never
 touches the timing contract.
 
+Refinement: ``place_ir(refine="anneal")`` hands the analytic result to
+the batched simulated annealer in :mod:`repro.core.anneal` (uniform
+weights; ``refine="anneal_timing"`` adds slack-derived criticality
+weights).  The refined placement lives on the same grid, stays legal,
+and is never worse than its seed under the refinement objective — see
+the anneal module docstring for the guarantees.
+
 Caching: placements register in the :mod:`repro.core.plan` registry
-(``"placement"``) keyed ``(netlist digest, arch placement key, seed)``.
+(``"placement"``) keyed ``(netlist digest, arch placement key, seed)``,
+extended with the refine mode when refinement is requested (and, for
+the timing-driven mode, the arch's non-wire delay signature — the only
+refine mode whose result reads the delay row).
 :meth:`~repro.core.alm.ArchParams.placement_key` is the *structural* key
 plus grid aspect — wire-tier delays and channel width are deliberately
 absent, so one placement serves every delay row of a structural class
 (place once, re-time many; the reuse the warm-sweep gate measures) and
 :func:`repro.core.plan.clear_caches` drops placements along with every
-other lowering cache.
+other lowering cache.  Tuning knobs (backend, ensembles, anneal steps /
+moves / chains) are deliberately *not* part of the key: like the
+analytic ``backend``, they pick an algorithm for producing a placement
+that satisfies the same contract, and the first call wins.
 """
 from __future__ import annotations
 
@@ -68,10 +81,20 @@ _ALPHA = 0.5  # damping: weight of a LB's own position vs its neighbours
 
 def grid_shape(n_lbs: int, aspect: float = 1.0) -> tuple[int, int]:
     """Smallest ``(grid_w, grid_h)`` grid of LB slots holding ``n_lbs``
-    at the requested width/height aspect ratio (``aspect = W/H``)."""
+    at the requested width/height aspect ratio (``aspect = W/H``).
+
+    Degenerate inputs clamp explicitly rather than by rounding
+    accident: ``w`` never exceeds ``n_lbs`` (an extreme aspect on a tiny
+    circuit would otherwise mint empty columns wider than the design —
+    e.g. 1 LB at aspect 16 rounds to a 4-wide grid), so a 1-LB circuit
+    always lands on a 1x1 grid and ``w * h >= n_lbs`` always holds with
+    every column except possibly the last one full."""
     if n_lbs <= 0:
         return (0, 0)
+    if not aspect > 0:
+        raise ValueError(f"grid aspect must be positive, got {aspect!r}")
     w = max(1, int(round(np.sqrt(n_lbs * aspect))))
+    w = min(w, n_lbs)
     h = -(-n_lbs // w)  # ceil
     return (w, h)
 
@@ -87,6 +110,7 @@ class GridPlacement:
     seed: int
     net_digest: str
     placement_key: tuple  # arch structural key + grid aspect
+    refine: str | None = None  # annealer mode that refined this, if any
 
     @property
     def n_lbs(self) -> int:
@@ -173,6 +197,9 @@ def _legalize(pos: np.ndarray, grid_w: int, grid_h: int
     """Snap relaxed coordinates to distinct grid slots: stable-sort by x
     into ``grid_w`` columns of ``grid_h``, then by y within a column."""
     L = pos.shape[0]
+    if grid_w * grid_h < L:
+        raise ValueError(
+            f"grid {grid_w}x{grid_h} cannot hold {L} LBs")
     lb_x = np.empty(L, dtype=np.int32)
     lb_y = np.empty(L, dtype=np.int32)
     by_x = np.argsort(pos[:, 0], kind="stable")
@@ -185,7 +212,10 @@ def _legalize(pos: np.ndarray, grid_w: int, grid_h: int
 
 
 def place_ir(ir: CircuitIR, arch: ArchParams, seed: int = 0, *,
-             backend: str = "numpy", ensembles: int = 4) -> GridPlacement:
+             backend: str = "numpy", ensembles: int = 4,
+             refine: str | None = None, anneal_steps: int | None = None,
+             anneal_moves: int | None = None,
+             anneal_chains: int = 4) -> GridPlacement:
     """Solve one analytic placement of ``ir``'s LBs on ``arch``'s grid.
 
     ``backend="numpy"`` (canonical) relaxes a single deterministic
@@ -193,6 +223,12 @@ def place_ir(ir: CircuitIR, arch: ArchParams, seed: int = 0, *,
     scatters in one vmapped program and keeps the legalized candidate
     with the lowest total wirelength (first-index tie-break, so the
     choice is still deterministic for a fixed backend).
+
+    ``refine="anneal"`` (or ``"anneal_timing"``) hands the analytic
+    result to :func:`repro.core.anneal.refine_placement`; the backend
+    choice carries over (jax refinement runs an ``anneal_chains``-wide
+    multi-chain ensemble).  ``anneal_steps`` / ``anneal_moves`` bound
+    the annealing schedule (None = size-scaled defaults).
     """
     if ir.arch_name is None:
         raise ValueError(f"{ir.name}: cannot place a functional IR")
@@ -224,40 +260,60 @@ def place_ir(ir: CircuitIR, arch: ArchParams, seed: int = 0, *,
             wl = cand.wirelength(ir)
             if best is None or wl < best[0]:
                 best = (wl, cand)
-        return best[1]
-    if backend != "numpy":
+        base = best[1]
+    elif backend == "numpy":
+        pos = _smooth_numpy(A, rng.random((L, 2)))
+        lb_x, lb_y = _legalize(pos, grid_w, grid_h)
+        base = GridPlacement(grid_w, grid_h, lb_x, lb_y, seed,
+                             ir.net_digest, pkey)
+    else:
         raise ValueError(f"unknown placement backend {backend!r}")
-    pos = _smooth_numpy(A, rng.random((L, 2)))
-    lb_x, lb_y = _legalize(pos, grid_w, grid_h)
-    return GridPlacement(grid_w, grid_h, lb_x, lb_y, seed,
-                         ir.net_digest, pkey)
+    if refine is None:
+        return base
+    from .anneal import refine_placement
+    return refine_placement(ir, arch, base, seed=seed, mode=refine,
+                            backend=backend, chains=anneal_chains,
+                            steps=anneal_steps, moves=anneal_moves)
 
 
 def placement_for(ir: CircuitIR, arch: ArchParams, seed: int = 0, *,
-                  cache: bool = True, backend: str = "numpy"
-                  ) -> GridPlacement:
+                  cache: bool = True, backend: str = "numpy",
+                  refine: str | None = None,
+                  **refine_kw) -> GridPlacement:
     """Registry-cached :func:`place_ir`.  The key deliberately omits
     wire-tier delays and channel width (they don't steer the placer), so
     all delay rows of a structural class x grid aspect share one
-    placement — the reuse that makes placed arch-grid sweeps cheap."""
+    placement — the reuse that makes placed arch-grid sweeps cheap.
+
+    With ``refine`` set the key grows the refine mode; the timing-driven
+    mode additionally keys on the arch's *non-wire* delay signature
+    (criticality reads the delay row, but never the wire tiers — so the
+    one-placement-per-wire-family reuse survives refinement)."""
     key = (ir.net_digest, arch.placement_key(), seed)
+    if refine is not None:
+        key = key + (refine,)
+        if refine == "anneal_timing":
+            from .anneal import delay_signature
+            key = key + (delay_signature(arch),)
     if cache:
         hit = _PLACE_CACHE.get(key)
         if hit is not None:
             PLACE_COUNTS["cache_hit"] += 1
             return hit
-    pl = place_ir(ir, arch, seed, backend=backend)
+    pl = place_ir(ir, arch, seed, backend=backend, refine=refine,
+                  **refine_kw)
     if cache:
         _PLACE_CACHE.put(key, pl)
     return pl
 
 
 def place_and_apply(ir: CircuitIR, arch: ArchParams, seed: int = 0, *,
-                    cache: bool = True, backend: str = "numpy"
-                    ) -> CircuitIR:
+                    cache: bool = True, backend: str = "numpy",
+                    refine: str | None = None, **refine_kw) -> CircuitIR:
     """Place ``ir`` and return the placed IR (wire-tier columns filled)."""
     return apply_placement(
-        ir, placement_for(ir, arch, seed, cache=cache, backend=backend))
+        ir, placement_for(ir, arch, seed, cache=cache, backend=backend,
+                          refine=refine, **refine_kw))
 
 
 # ---------------------------------------------------------------------------

@@ -145,13 +145,17 @@ class SearchResult:
 
 
 def _wall_split(sweep_wall: dict, eval_s: float) -> dict:
-    """The per-rung pack / lower / place / time / eval wall split."""
+    """The per-rung pack / lower / place / anneal / time / eval wall
+    split.  ``anneal_s`` is the annealing share *inside* ``place_s``
+    (refinement runs during the placement phase), billed separately so
+    placed-search ledgers show what refinement itself costs per rung."""
     return {
         "pack_s": sweep_wall["pack_s"],
         "prefix_s": sweep_wall["prefix_s"],
         "recluster_s": sweep_wall["recluster_s"],
         "lower_s": sweep_wall["lower_s"],
         "place_s": sweep_wall["place_s"],
+        "anneal_s": sweep_wall["anneal_s"],
         "time_s": sweep_wall["build_s"] + sweep_wall["timing_s"],
         "eval_s": eval_s,
     }
@@ -162,6 +166,7 @@ def search_archs(nets, archs, seed: int = 0, eta: int = 4,
                  allocation: str = "halving", budget: int | None = None,
                  baseline: str | None = None, backend: str = "numpy",
                  max_groups: int = 4, place: bool = False,
+                 refine: str | None = "anneal",
                  packs=None, programs=None, prefixes=None) -> SearchResult:
     """Pareto-aware successive-halving search over ``archs``.
 
@@ -187,6 +192,16 @@ def search_archs(nets, archs, seed: int = 0, eta: int = 4,
     keyed by ``(pack digest, base digest, seed)``), so a search run over
     a netlist and its structural edits shares every delta-derived
     prefix with the serving layer.
+
+    ``place=True`` runs every rung placed: each rung's sweep subgroups
+    its grid rows by ``placement_key`` (structural class x grid aspect),
+    anneal-refines one placement per (circuit, key, seed) through the
+    shared registry cache (``refine``, default ``"anneal"``), and times
+    the wire tiers — so ``_w{n}`` wire-delay grid rows stop tying
+    bit-for-bit and the wire axis becomes searchable design space.
+    Promotion never re-places: a survivor's placements are cache hits on
+    every later rung (only newly-joined circuits anneal), and the per-
+    rung ledger bills the annealing share under ``walls["anneal_s"]``.
     """
     archs = list(archs)
     if not archs:
@@ -231,7 +246,7 @@ def search_archs(nets, archs, seed: int = 0, eta: int = 4,
             subset = subset[:max_circ] if max_circ < len(subset) else subset
         res = sweep_suite(subset, current, seed=seed, backend=backend,
                           max_groups=max_groups, place=place,
-                          packs=packs, programs=programs,
+                          refine=refine, packs=packs, programs=programs,
                           prefixes=prefixes)
         budget_used += len(subset) * len(current)
         t0 = time.perf_counter()
@@ -279,14 +294,21 @@ def search_archs(nets, archs, seed: int = 0, eta: int = 4,
 
 
 def verify_winners(result: SearchResult, nets, archs, seed: int = 0,
-                   n_equiv_circuits: int = 2, winners=None) -> dict:
+                   n_equiv_circuits: int = 2, winners=None,
+                   place: bool = False,
+                   refine: str | None = "anneal") -> dict:
     """Prove the promoted winners honest.
 
     * **oracle parity**: every (final-rung circuit, winner) record is
       re-derived by a fresh ``pack()`` + Python oracle timing walk and
       must match bit-for-bit — this re-checks the prefix/re-cluster/
       template-lowering pipeline end to end at the exact points the
-      search promotes;
+      search promotes.  For a placed search pass ``place=True`` (and the
+      search's ``refine``): the reference becomes
+      :func:`repro.core.timing.analyze_placed_oracle` under the same
+      registry-cached refined placement the rungs consumed, resolved
+      through the winner's placement-key representative in ``archs``
+      order (the sweep's subgrouping rule);
     * **equivalence**: each winner's pack of the ``n_equiv_circuits``
       smallest circuits is re-elaborated and proven equivalent to the
       source netlist (symbolic + exhaustive closure,
@@ -294,11 +316,14 @@ def verify_winners(result: SearchResult, nets, archs, seed: int = 0,
     """
     from .equiv import check_pack_equivalence
     from .packing import pack
-    from .timing import analyze_oracle
+    from .timing import analyze_oracle, analyze_placed_oracle
 
     if result.final is None:
         raise ValueError("search result has no final sweep to verify")
     by_name = {a.name: a for a in archs}
+    reps: dict[tuple, ArchParams] = {}
+    rep_for = {a.name: reps.setdefault(a.placement_key(), a)
+               for a in archs}
     if winners is None:
         winners = [r["arch"] for r in result.pareto]
         if result.winner not in winners:
@@ -315,7 +340,14 @@ def verify_winners(result: SearchResult, nets, archs, seed: int = 0,
         rec_by_circ = {r["net"]: r for r in recs}
         for net in check_nets:
             p = pack(net, arch, seed=seed)
-            ro = analyze_oracle(p)
+            if place:
+                from .place import placement_for
+
+                pl = placement_for(p.lower_ir(), rep_for[wname], seed,
+                                   refine=refine)
+                ro = analyze_placed_oracle(p, pl)
+            else:
+                ro = analyze_oracle(p)
             rec = rec_by_circ[net.name]
             ok = (ro["critical_path_ps"] == rec["critical_path_ps"]
                   and ro["area_mwta"] == rec["area_mwta"])

@@ -141,7 +141,8 @@ def sweep_suite(nets, archs: Sequence[ArchParams], seed: int = 0,
                 backend: str = "jax", packs: dict | None = None,
                 programs: dict | None = None,
                 prefixes: dict | None = None,
-                place: bool = False) -> SweepResult:
+                place: bool = False,
+                refine: str | None = "anneal") -> SweepResult:
     """Pack + re-time ``nets`` under every arch of the grid.
 
     ``nets`` is a list of netlists or a ``{suite_name: [netlists]}`` dict.
@@ -183,6 +184,15 @@ def sweep_suite(nets, archs: Sequence[ArchParams], seed: int = 0,
     ``benchmarks/place_sweep.py`` gates at >= 2x).  Within a class,
     rows are subgrouped by grid aspect (aspect reshapes the grid, hence
     the hop columns) and each subgroup runs as its own batched program.
+
+    ``refine`` (default ``"anneal"``) anneal-refines every placement
+    through :mod:`repro.core.anneal` before timing — transparent to the
+    caller, billed separately in ``wall["anneal_s"]`` (a subset of
+    ``place_s``).  ``refine=None`` times the raw analytic seeds.  The
+    timing-driven mode (``"anneal_timing"``) weights moves by the
+    subgroup *representative's* non-wire delay row (the first grid row
+    of the class x aspect subgroup) — one placement must still serve
+    every wire row of the subgroup, so the wire tiers never steer it.
     """
     from .repack import pack_prefix, repack
 
@@ -191,7 +201,8 @@ def sweep_suite(nets, archs: Sequence[ArchParams], seed: int = 0,
     classes = group_archs_by_structure(archs)
     records: list[list[dict | None]] = [[None] * len(archs) for _ in flat]
     wall = {"pack_s": 0.0, "prefix_s": 0.0, "recluster_s": 0.0,
-            "lower_s": 0.0, "place_s": 0.0, "build_s": 0.0, "timing_s": 0.0}
+            "lower_s": 0.0, "place_s": 0.0, "anneal_s": 0.0,
+            "build_s": 0.0, "timing_s": 0.0}
     if packs is None:
         packs = {}
     if programs is None:
@@ -251,26 +262,34 @@ def sweep_suite(nets, archs: Sequence[ArchParams], seed: int = 0,
             subgroups = [idx_list]
         for sub_idx in subgroups:
             if place:
+                from .anneal import ANNEAL_WALL
                 from .circuit_ir import apply_placement
                 from .place import placement_for
 
                 rep = archs[sub_idx[0]]
                 pkey = rep.placement_key()
                 t0 = time.perf_counter()
+                a0 = ANNEAL_WALL["s"]
                 use_irs = [apply_placement(
-                    ir, placement_for(ir, rep, seed)) for ir in irs]
+                    ir, placement_for(ir, rep, seed, refine=refine))
+                    for ir in irs]
                 wall["place_s"] += time.perf_counter() - t0
+                wall["anneal_s"] += ANNEAL_WALL["s"] - a0
             else:
                 pkey = None
                 use_irs = irs
             tables = np.stack([archs[i].delay_table() for i in sub_idx])
             if backend == "jax":
                 t0 = time.perf_counter()
-                # pkey last: positions of the pre-placement key elements
-                # (suite, skey, seed, buckets, groups) stay stable for
-                # callers/tests that probe grouping knobs by index.
+                # pkey/refine last: positions of the pre-placement key
+                # elements (suite, skey, seed, buckets, groups) stay
+                # stable for callers/tests that probe grouping knobs by
+                # index.  refine is part of the key because the program
+                # bakes in the placed hop tensors — a program built from
+                # analytic placements must never serve annealed rows.
                 prog_key = (suite_key, skey, seed, max_buckets,
-                            max_groups, pkey)
+                            max_groups, pkey,
+                            refine if place else None)
                 progs = programs.get(prog_key)
                 if progs is None:
                     groups = _envelope_groups(use_irs, max_groups)
@@ -372,24 +391,34 @@ def adp_frontier(result: SweepResult, baseline: str | None = None,
 
 
 def oracle_parity(result: SweepResult, nets, archs: Sequence[ArchParams],
-                  seed: int = 0, place: bool = False) -> bool:
+                  seed: int = 0, place: bool = False,
+                  refine: str | None = "anneal") -> bool:
     """Prove every sweep record's critical path bit-identical to the
     Python oracle (packing under the *actual* arch — structural-class
     pack sharing is part of what this verifies).  With ``place=True``
     the reference is :func:`repro.core.timing.analyze_placed_oracle`
     under the registry-cached placement of each (circuit, placement key)
-    — the same placements the sweep consumed, so this also proves the
-    wire-tier gather against the per-edge Python walk."""
+    — the same placements the sweep consumed (``refine`` must match the
+    sweep's), so this also proves the wire-tier gather against the
+    per-edge Python walk.  Placements resolve through each grid row's
+    *subgroup representative* (the first arch in ``archs`` order sharing
+    its placement key), mirroring the sweep's subgrouping — for the
+    timing-driven refine mode the representative's delay row is part of
+    the placement cache key, so resolving through the row itself would
+    anneal a fresh (different) placement and spuriously fail parity."""
     from .timing import analyze_oracle, analyze_placed_oracle
 
     _, flat = _flatten(nets)
+    reps: dict[tuple, ArchParams] = {}
+    rep_for = [reps.setdefault(a.placement_key(), a) for a in archs]
     for g, net in enumerate(flat):
         for k, arch in enumerate(archs):
             p = pack(net, arch, seed=seed)
             if place:
                 from .place import placement_for
 
-                pl = placement_for(p.lower_ir(), arch, seed)
+                pl = placement_for(p.lower_ir(), rep_for[k], seed,
+                                   refine=refine)
                 ro = analyze_placed_oracle(p, pl)
             else:
                 ro = analyze_oracle(p)

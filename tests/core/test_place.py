@@ -79,6 +79,49 @@ def test_grid_shape_aspect():
     assert grid_shape(0) == (0, 0)
 
 
+def test_grid_shape_degenerate_inputs_clamp_explicitly():
+    """Regression for the degenerate-grid satellite: the width clamp is
+    explicit, not incidental rounding — a 1-LB circuit lands on a 1x1
+    grid at ANY aspect (round(sqrt(16)) = 4 used to mint a 4-wide grid
+    of empty columns), extreme aspects never exceed n_lbs columns, and
+    capacity always covers the circuit."""
+    import pytest
+
+    for aspect in (1 / 16, 0.5, 1.0, 4.0, 16.0, 1000.0):
+        assert grid_shape(1, aspect) == (1, 1)
+    for n in (1, 2, 3, 5, 7, 12, 97):
+        for aspect in (1 / 16, 0.5, 1.0, 4.0, 16.0):
+            w, h = grid_shape(n, aspect)
+            assert 1 <= w <= n
+            assert w * h >= n
+            assert w * (h - 1) < n      # h is minimal for this w
+    with pytest.raises(ValueError, match="aspect"):
+        grid_shape(4, 0.0)
+    with pytest.raises(ValueError, match="aspect"):
+        grid_shape(4, -1.0)
+
+
+def test_extreme_aspect_placement_stays_legal_end_to_end():
+    """A 1-LB circuit and an extreme-aspect arch both place, refine and
+    time without tripping the legalizer's capacity check."""
+    from repro.core.circuits import vtr_mixed
+
+    tiny = vtr_mixed(logic_nodes=8, adders=1)
+    wide = make_arch("dd5_wide", bypass_inputs=2, addmux_fanin=10,
+                     grid_aspect=16.0)
+    for net in (tiny, kratos_gemm(m=4, n=4, width=4, sparsity=0.5)):
+        packed = pack(net, wide)
+        ir = packed.lower_ir()
+        for refine in (None, "anneal"):
+            pl = place_ir(ir, wide, seed=0, refine=refine)
+            assert pl.grid_w * pl.grid_h >= ir.n_lbs
+            assert pl.grid_w <= max(ir.n_lbs, 1)
+            slots = set(zip(pl.lb_x.tolist(), pl.lb_y.tolist()))
+            assert len(slots) == ir.n_lbs
+            assert analyze(packed, placement=pl) \
+                == analyze_placed_oracle(packed, pl)
+
+
 def test_lb_connectivity_symmetric_no_self_edges():
     net = kratos_gemm(m=4, n=4, width=4, sparsity=0.5)
     ir = pack(net, ARCHS["baseline"]).lower_ir()

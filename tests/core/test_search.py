@@ -100,8 +100,8 @@ def test_search_deterministic_payload():
     # every rung reports the full wall split schema
     for rung in r1.rungs:
         assert set(rung["walls"]) == {"pack_s", "prefix_s", "recluster_s",
-                                      "lower_s", "place_s", "time_s",
-                                      "eval_s"}
+                                      "lower_s", "place_s", "anneal_s",
+                                      "time_s", "eval_s"}
 
 
 def test_search_budget_ledger():
@@ -135,6 +135,50 @@ def test_search_winner_verified():
                          winners=[res.winner])
     assert rep["oracle_match"] and rep["equivalent"]
     assert rep["mismatches"] == []
+
+
+def test_search_placed_wire_axis_smoke():
+    """`search_archs(place=True)` is a supported mode: a 2-rung search
+    over a wire-delay subgrid completes with the promoted winner placed-
+    oracle-parity-gated, bills annealing wall into the rung ledger, and
+    the ``_w{n}`` wire rows — bit-for-bit ties in an unplaced sweep —
+    become distinct grid points under annealed placements."""
+    from repro.core.alm import arch_grid
+
+    grid = arch_grid(bypass_inputs=(0, 2), addmux_fanin=(10,),
+                     lut6=(False,),
+                     wire_delays=((0.0, 0.0, 0.0), (25.0, 40.0, 120.0)))
+    assert {"b0", "b0_w25", "b2_f10", "b2_f10_w25"} == \
+        {a.name for a in grid}
+    nets = _nets()
+    clear_caches()
+    res = search_archs(nets, grid, seed=0, eta=2, min_survivors=2,
+                       min_circuits=2, baseline="b0", place=True,
+                       packs={}, programs={})
+    assert len(res.rungs) == 2
+    # annealing wall is attributed in the ledger (cold first rung must
+    # have actually annealed; later rungs may be pure cache hits)
+    assert res.rungs[0]["walls"]["anneal_s"] > 0.0
+    assert all("anneal_s" in r["walls"] for r in res.rungs)
+    rep = verify_winners(res, nets, grid, seed=0, n_equiv_circuits=1,
+                         winners=[res.winner], place=True)
+    assert rep["oracle_match"] and rep["equivalent"]
+    assert rep["mismatches"] == []
+    # wire rows tie bit-for-bit unplaced, and stop tying once placed
+    flat = sweep_suite(nets, grid, backend="numpy", place=False,
+                       packs={}, programs={}, prefixes={})
+    placed = sweep_suite(nets, grid, backend="numpy", place=True,
+                         packs={}, programs={}, prefixes={})
+    for base, wired in (("b0", "b0_w25"), ("b2_f10", "b2_f10_w25")):
+        flat_cps = [(a["critical_path_ps"], b["critical_path_ps"])
+                    for a, b in zip(flat.by_arch(base),
+                                    flat.by_arch(wired))]
+        assert all(a == b for a, b in flat_cps)
+        placed_cps = [(a["critical_path_ps"], b["critical_path_ps"])
+                      for a, b in zip(placed.by_arch(base),
+                                      placed.by_arch(wired))]
+        assert any(a != b for a, b in placed_cps)
+        assert all(a <= b for a, b in placed_cps)  # wire delay only adds
 
 
 def test_search_baseline_must_be_in_grid():
